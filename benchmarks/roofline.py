@@ -1,0 +1,206 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, using the per-device numbers recorded by
+launch/dryrun.py:
+
+    compute term    = HLO_FLOPs_per_dev / PEAK_FLOPS          [s]
+    memory term     = HLO_bytes_per_dev / HBM_BW              [s]
+    collective term = collective_bytes_per_dev / LINK_BW      [s]
+
+Hardware: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+`bytes accessed` from HloCostAnalysis counts every operand/result of every
+HLO op, i.e. an *upper bound* on HBM traffic (fusion keeps most of it on
+chip); the memory term is therefore pessimistic and is read comparatively.
+
+MODEL_FLOPS = 6*N*tokens (train) or 2*N*tokens (serve), N = active params
+(experts scaled by top_k/E, embedding gather excluded, unembed included).
+model_ratio = MODEL_FLOPS / (HLO_FLOPs * chips) — the "useful compute"
+fraction (catches remat/dispatch/causal waste).
+mfu_bound = ideal compute time / dominant term — the MFU the compiled
+program could at best reach on this mesh.
+"""
+from __future__ import annotations
+
+import json
+import math
+import pathlib
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DRYRUN_DIR = ROOT / "results" / "dryrun"
+
+_PARAM_CACHE: Dict[str, Dict[str, float]] = {}
+
+
+def active_param_count(arch: str) -> Dict[str, float]:
+    """(total, active, embedding) parameter counts from the shape tree."""
+    if arch in _PARAM_CACHE:
+        return _PARAM_CACHE[arch]
+    import jax
+    from repro.configs import get_config
+    from repro.models import params as pp
+    from repro.models.model import build_model
+
+    cfg = get_config(arch)
+    bundle = build_model(cfg)
+    sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    vals, _ = pp.split(sds)
+    flat = jax.tree.flatten_with_path(vals)[0]
+    total = active = embed = 0.0
+    mc = cfg.moe
+    for path, leaf in flat:
+        n = math.prod(leaf.shape)
+        keys = [getattr(p, "key", str(p)) for p in path]
+        total += n
+        if "embedding" in keys:
+            embed += n
+            continue  # gather: not matmul flops
+        if mc is not None and any(k in ("w_gate", "w_up", "w_down")
+                                  for k in keys) and "moe" in keys and \
+                "shared" not in keys:
+            active += n * (mc.top_k / mc.num_experts)
+        else:
+            active += n
+    out = {"total": total, "active": active, "embed": embed}
+    _PARAM_CACHE[arch] = out
+    return out
+
+
+def model_flops(rec: Dict) -> float:
+    if rec["kind"] == "risk":
+        # useful ALU work: ~4 ops per (event x ELT) pair per trial wave
+        from repro.configs.risk_app import CONFIG as RC
+        waves = rec.get("tenants", 1)
+        t_step = max(512, (RC.num_trials // waves // 512) * 512)
+        return 4.0 * t_step * RC.events_per_trial * RC.num_elts
+    from repro.configs import get_shape
+    shape = get_shape(rec["shape"])
+    n = active_param_count(rec["arch"])["active"]
+    tokens = shape.global_batch * (shape.seq_len if rec["kind"] != "decode"
+                                   else 1)
+    mult = 6.0 if rec["kind"] == "train" else 2.0
+    return mult * n * tokens
+
+
+def analyse(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    compute = rec["cost"]["flops"] / PEAK_FLOPS
+    # memory bounds: lb = params/states/IO touched once (fusion-optimal);
+    # ub = HloCostAnalysis bytes-accessed (every op's operands; pessimistic)
+    mem_lb = (rec["memory"]["argument_bytes"] +
+              rec["memory"]["output_bytes"]) / HBM_BW
+    mem_ub = rec["cost"]["bytes_accessed"] / HBM_BW
+    coll = rec["collectives"]["total_bytes"] / LINK_BW
+    terms = {"compute": compute, "memory": mem_lb, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    if dominant != "memory" and mem_ub > 3 * terms[dominant]:
+        dominant = f"{dominant}|memory?"   # ambiguous: ub would dominate
+    mf = model_flops(rec)
+    hlo_global = rec["cost"]["flops"] * chips
+    ideal = mf / chips / PEAK_FLOPS
+    dom_s = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "kind": rec["kind"], "chips": chips,
+        "compute_s": compute, "memory_s": mem_lb, "memory_ub_s": mem_ub,
+        "collective_s": coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "model_ratio": mf / hlo_global if hlo_global else 0.0,
+        "mfu_bound": ideal / dom_s if dom_s else 0.0,
+        "temp_gb": rec["memory"]["temp_bytes"] / 1e9,
+        "arg_gb": rec["memory"]["argument_bytes"] / 1e9,
+        "fits_hbm": (rec["memory"]["temp_bytes"] +
+                     rec["memory"]["argument_bytes"]) < 16e9,
+    }
+
+
+def load_all(directory: pathlib.Path = DRYRUN_DIR) -> List[Dict]:
+    out = []
+    for p in sorted(directory.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("status") == "skipped":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", "?"), "kind": "skipped",
+                        "dominant": "-", "reason": rec.get("reason", "")})
+            continue
+        a = analyse(rec)
+        if a:
+            out.append(a)
+        elif rec.get("status") == "error":
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "mesh": rec.get("mesh", "?"), "kind": "error",
+                        "dominant": "-", "reason": rec.get("error", "")[-200:]})
+    return out
+
+
+def to_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | mem lb s | mem ub s | "
+           "collective s | dominant | model/HLO | MFU bound | temp GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if r["kind"] in ("skipped", "error"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r['kind']}: {r.get('reason','')[:60]} |" +
+                         " - |" * 7)
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['memory_ub_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['model_ratio']:.2f} | {r['mfu_bound']:.3f} "
+            f"| {r['temp_gb']:.1f} |")
+    return hdr + "\n".join(lines)
+
+
+def run() -> List:
+    """benchmark-harness entry: name, us_per_call, derived."""
+    rows = load_all()
+    out = []
+    for r in rows:
+        if r["kind"] in ("skipped", "error"):
+            out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                        0.0, r["kind"]))
+            continue
+        dom_us = max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6
+        out.append((f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+                    dom_us,
+                    f"dom={r['dominant']};mfu_bound={r['mfu_bound']:.3f};"
+                    f"model_ratio={r['model_ratio']:.2f}"))
+    return out
+
+
+def main() -> None:
+    rows = load_all()
+    csv_path = ROOT / "results" / "roofline.csv"
+    with open(csv_path, "w") as f:
+        f.write("arch,shape,mesh,kind,compute_s,memory_lb_s,memory_ub_s,"
+                "collective_s,dominant,model_ratio,mfu_bound,temp_gb,"
+                "fits_hbm\n")
+        for r in rows:
+            if r["kind"] in ("skipped", "error"):
+                f.write(f"{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+                        ",,,,,,,,\n")
+                continue
+            f.write(f"{r['arch']},{r['shape']},{r['mesh']},{r['kind']},"
+                    f"{r['compute_s']:.6f},{r['memory_s']:.6f},"
+                    f"{r['memory_ub_s']:.6f},"
+                    f"{r['collective_s']:.6f},{r['dominant']},"
+                    f"{r['model_ratio']:.3f},{r['mfu_bound']:.4f},"
+                    f"{r['temp_gb']:.2f},{r['fits_hbm']}\n")
+    md = to_markdown(rows)
+    (ROOT / "results" / "roofline.md").write_text(md)
+    print(md)
+    print(f"\nwrote {csv_path}")
+
+
+if __name__ == "__main__":
+    main()

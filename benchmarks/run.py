@@ -1,0 +1,40 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: every paper table/figure + kernels + roofline rows.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only fig13,roofline
+"""
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substring filters on bench names")
+    args = ap.parse_args()
+    filters = args.only.split(",") if args.only else None
+
+    from benchmarks import paper_figures, roofline
+    benches = list(paper_figures.ALL) + [roofline.run]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        bname = bench.__module__ + "." + bench.__name__
+        if filters and not any(f in bname for f in filters):
+            continue
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception:
+            failures += 1
+            print(f"{bname},0.0,ERROR", file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,52 @@
+"""Multi-tenant serving: three applications share one accelerator.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+
+The scheduler round-robins tenant slots so each tenant's host-side staging
+overlaps the previous tenant's compute — the paper's multi-tenancy applied
+to inference serving.  Prints per-tenant utilisation (cf. paper Fig 14).
+"""
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.tenancy import TenancyConfig
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.serving.engine import ServingEngine
+from repro.serving.multitenant import MultiTenantScheduler, Request
+
+
+def main():
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params, temperature=0.8)
+    sched = MultiTenantScheduler(engine, max_batch=4,
+                                 tenancy=TenancyConfig(1, 3))
+
+    rng = np.random.default_rng(7)
+    workloads = {"pricing-desk": (12, 24, 8),     # requests, prompt, new
+                 "batch-report": (6, 48, 16),
+                 "dashboard": (18, 12, 4)}
+    for tenant, (n, plen, new) in workloads.items():
+        for _ in range(n):
+            sched.submit(Request(tenant,
+                                 rng.integers(1, cfg.vocab_size,
+                                              plen).astype(np.int32),
+                                 max_new_tokens=new))
+
+    responses = sched.drain()
+    print(f"served {len(responses)} requests across "
+          f"{len(workloads)} tenants\n")
+    print(f"{'tenant':>14} {'reqs':>5} {'tokens':>7} {'busy ms':>8} "
+          f"{'share':>6}")
+    for t, rep in sorted(sched.utilization_report().items()):
+        print(f"{t:>14} {rep['requests']:>5.0f} {rep['tokens']:>7.0f} "
+              f"{rep['busy_s'] * 1e3:>8.0f} {rep['busy_share'] * 100:>5.1f}%")
+    lat = np.asarray([r.latency_s for r in responses])
+    print(f"\nlatency p50 {np.percentile(lat, 50) * 1e3:.0f} ms, "
+          f"p99 {np.percentile(lat, 99) * 1e3:.0f} ms")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""End-to-end LM training driver (~100M-param model, a few hundred steps).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+
+Uses the full production substrate on CPU: tenant microbatch accumulation,
+prefetch feed (staging overlap), checkpoint/restart, straggler detection.
+A ~100M-param qwen3-family config trains on the synthetic copy-structure
+stream; loss should fall from ~10.4 to well under 7.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import DataConfig, PrefetchFeed
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import null_sharder
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import build_train_step, init_train_state
+
+
+def hundred_m_config():
+    base = get_config("qwen3-32b")
+    return dataclasses.replace(
+        base, name="qwen3-100m", num_layers=16, d_model=512, num_heads=8,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=32000,
+        fsdp=False, microbatches=2, remat="none",
+        param_dtype="float32", compute_dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    bundle = build_model(cfg)
+    sh = null_sharder()
+    params, _ = pp.split(bundle.init(jax.random.PRNGKey(0)))
+    print(f"{cfg.name}: {pp.count_params(params):,} params")
+    opt = make_optimizer(cfg)
+    state = init_train_state(bundle, opt, params)
+    step = jax.jit(build_train_step(
+        bundle, sh, opt, lr_fn=lambda s: jnp.float32(3e-4) *
+        jnp.minimum(1.0, s.astype(jnp.float32) / 50.0)), donate_argnums=(0,))
+
+    start = ckpt.latest_step(args.ckpt_dir)
+    if start:
+        state = ckpt.restore(args.ckpt_dir, start, state)
+        print(f"resumed from step {start}")
+    start = start or 0
+
+    dc = DataConfig(args.batch, args.seq, cfg.vocab_size)
+    feed = PrefetchFeed(dc, cfg, start_step=start)
+    losses, t0 = [], time.perf_counter()
+    for i in range(start, args.steps):
+        state, metrics = step(state, next(feed))
+        losses.append(float(metrics["loss"]))
+        if (i + 1) % 20 == 0:
+            tps = args.batch * args.seq * 20 / (time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            print(f"step {i + 1:4d}  loss {losses[-1]:.4f}  "
+                  f"{tps / 1e3:.1f}k tok/s")
+        if (i + 1) % 100 == 0:
+            ckpt.save(args.ckpt_dir, i + 1, state)
+    feed.close()
+    assert np.isfinite(losses).all()
+    print(f"loss: {losses[0]:.3f} -> {np.mean(losses[-10:]):.3f}")
+
+
+if __name__ == "__main__":
+    main()

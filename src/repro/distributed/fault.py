@@ -1,0 +1,117 @@
+"""Fault tolerance & straggler mitigation for long-running training.
+
+At thousand-node scale the dominant events are (a) device/host loss,
+(b) stragglers, (c) data-feed stalls.  This module provides the control-plane
+pieces; the data plane (checkpoint resharding, tenant re-staging order) lives
+in distributed/checkpoint.py and core/transfer.py.
+
+* HeartbeatMonitor — wall-clock watchdog around the step loop; a step
+  exceeding ``timeout_s`` marks the worker suspect (on a real cluster this
+  feeds the coordinator; here it triggers restart-from-checkpoint).
+* StragglerDetector — per-tenant EWMA of step times; tenants slower than
+  ``z_threshold`` sigma are flagged and re-ordered first in the next staging
+  plan (paper's sequential staging makes order a free knob).
+* run_with_recovery — supervised step loop: on failure, restore the latest
+  checkpoint (possibly onto a smaller elastic mesh) and continue; gives up
+  after ``max_failures``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.distributed import checkpoint as ckpt
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    timeout_s: float = 300.0
+    last_beat: float = dataclasses.field(default_factory=time.monotonic)
+    missed: int = 0
+
+    def beat(self) -> None:
+        self.last_beat = time.monotonic()
+
+    def suspect(self) -> bool:
+        if time.monotonic() - self.last_beat > self.timeout_s:
+            self.missed += 1
+            return True
+        return False
+
+
+class StragglerDetector:
+    """EWMA + variance tracking of per-tenant step times (DESIGN.md §7)."""
+
+    def __init__(self, alpha: float = 0.2, z_threshold: float = 3.0):
+        self.alpha = alpha
+        self.z = z_threshold
+        self.mean: Dict[int, float] = {}
+        self.var: Dict[int, float] = {}
+
+    def update(self, times: Dict[int, float]) -> List[int]:
+        """Feed per-tenant step times; returns currently-flagged stragglers."""
+        flagged = []
+        for k, t in times.items():
+            m = self.mean.get(k, t)
+            v = self.var.get(k, 0.0)
+            d = t - m
+            m += self.alpha * d
+            v = (1 - self.alpha) * (v + self.alpha * d * d)
+            self.mean[k], self.var[k] = m, v
+        pop = list(self.mean.values())
+        if len(pop) >= 2:
+            mu = sum(pop) / len(pop)
+            sd = math.sqrt(sum((x - mu) ** 2 for x in pop) / len(pop)) or 1e-9
+            flagged = [k for k, m in self.mean.items()
+                       if (m - mu) / sd > self.z]
+        return flagged
+
+    def staging_priority(self) -> Dict[int, float]:
+        """For core.transfer.reorder_for_stragglers: slowest staged first."""
+        return dict(self.mean)
+
+
+@dataclasses.dataclass
+class RecoveryReport:
+    steps_done: int
+    failures: int
+    restarts: List[int]
+
+
+def run_with_recovery(step_fn: Callable[[Any, int], Any], state: Any,
+                      num_steps: int, ckpt_dir,
+                      save_every: int = 50, max_failures: int = 3,
+                      state_template: Optional[Any] = None,
+                      shardings: Optional[Any] = None,
+                      monitor: Optional[HeartbeatMonitor] = None,
+                      ) -> RecoveryReport:
+    """Supervised loop: step_fn(state, i) -> state; checkpoint + restart."""
+    template = state_template if state_template is not None else state
+    failures = 0
+    restarts: List[int] = []
+    start = ckpt.latest_step(ckpt_dir)
+    i = 0
+    if start is not None:
+        state = ckpt.restore(ckpt_dir, start, template, shardings)
+        i = start
+    while i < num_steps:
+        try:
+            state = step_fn(state, i)
+            if monitor is not None:
+                monitor.beat()
+            i += 1
+            if i % save_every == 0 or i == num_steps:
+                ckpt.save(ckpt_dir, i, state)
+        except Exception:
+            failures += 1
+            if failures > max_failures:
+                raise
+            last = ckpt.latest_step(ckpt_dir)
+            if last is None:
+                raise
+            restarts.append(i)
+            state = ckpt.restore(ckpt_dir, last, template, shardings)
+            i = last
+    return RecoveryReport(i, failures, restarts)

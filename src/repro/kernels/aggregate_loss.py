@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for Aggregate Risk Analysis (paper Algorithm 3).
+
+TPU adaptation of the paper's GPU kernel (DESIGN.md §6):
+
+* The GPU version assigns one thread per trial and reads ELT direct-access
+  tables from global memory with per-thread random access, using shared-memory
+  "chunking" for the event axis.  TPUs have no per-lane random access to HBM,
+  so the ELT tables are tiled into VMEM-resident catalog ranges and events
+  gather from the resident tile (vector gather within VMEM).
+* The paper's chunking maps to the event-axis grid dimension: each grid step
+  processes a (trial_block x event_chunk) tile whose HBM->VMEM fetch is
+  pipelined by Pallas against the previous tile's compute — the in-kernel
+  mirror of the multi-tenant DMA/compute overlap.
+* Grid = (catalog_tiles, trial_blocks, event_chunks), catalog outermost so
+  each ELT tile is fetched once; the YLT block accumulates across catalog
+  tiles and event chunks, and the layer aggregate terms apply on the last
+  visit (revisiting-output accumulation).
+
+Validated in interpret mode against kernels.ref.aggregate_loss_chunked_ref
+over shape sweeps (tests/test_kernels_aggregate.py).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(ids_ref, elt_ref, occ_ret_ref, occ_lim_ref, agg_ref, out_ref, *,
+            rows_tile: int, n_cat: int, n_chunks: int):
+    r = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when((r == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                                   # (Tb, C) int32
+    base = r * rows_tile
+    local = ids - base
+    valid = (local >= 0) & (local < rows_tile)
+    localc = jnp.clip(local, 0, rows_tile - 1)
+    elt = elt_ref[...]                                   # (rows_tile, M)
+    tb, c = ids.shape
+    g = jnp.take(elt, localc.reshape(-1), axis=0)        # (Tb*C, M)
+    g = g.reshape(tb, c, -1)
+    g = jnp.where(valid[..., None], g, 0.0)
+    # occurrence terms per ELT:  min(max(l - OccR, 0), OccL)
+    occ = jnp.clip(g - occ_ret_ref[...][None, None, :], 0.0, None)
+    occ = jnp.minimum(occ, occ_lim_ref[...][None, None, :])
+    out_ref[...] += occ.sum(axis=(1, 2))
+
+    @pl.when((r == n_cat - 1) & (j == n_chunks - 1))
+    def _agg():
+        # layer aggregate terms:  min(max(l_T - AggR, 0), AggL)
+        acc = out_ref[...]
+        acc = jnp.clip(acc - agg_ref[0], 0.0, None)
+        out_ref[...] = jnp.minimum(acc, agg_ref[1])
+
+
+def aggregate_loss_pallas(event_ids, elt_losses, occ_ret, occ_lim, agg_ret,
+                          agg_lim, *, chunk: int = 128,
+                          trial_block: int = 256,
+                          rows_tile: Optional[int] = None,
+                          interpret: bool = True):
+    """Drop-in equivalent of kernels.ref.aggregate_loss_chunked_ref."""
+    T, K = event_ids.shape
+    rows, M = elt_losses.shape
+    chunk = min(chunk, K)
+    while K % chunk:
+        chunk //= 2
+    tb = min(trial_block, T)
+    while T % tb:
+        tb //= 2
+    # ELT tile sized for ~8 MB of VMEM unless overridden
+    if rows_tile is None:
+        rows_tile = max(256, min(rows, (8 << 20) // max(4 * M, 1)))
+    rows_tile = min(rows_tile, rows)
+    n_cat = math.ceil(rows / rows_tile)
+    rows_pad = n_cat * rows_tile
+    if rows_pad != rows:
+        elt_losses = jnp.pad(elt_losses, ((0, rows_pad - rows), (0, 0)))
+    n_chunks = K // chunk
+    agg = jnp.stack([jnp.asarray(agg_ret, jnp.float32),
+                     jnp.asarray(agg_lim, jnp.float32)])
+
+    kernel = functools.partial(_kernel, rows_tile=rows_tile, n_cat=n_cat,
+                               n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(n_cat, T // tb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((tb, chunk), lambda r, i, j: (i, j)),
+            pl.BlockSpec((rows_tile, M), lambda r, i, j: (r, 0)),
+            pl.BlockSpec((M,), lambda r, i, j: (0,)),
+            pl.BlockSpec((M,), lambda r, i, j: (0,)),
+            pl.BlockSpec((2,), lambda r, i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tb,), lambda r, i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        interpret=interpret,
+    )(event_ids.astype(jnp.int32), elt_losses.astype(jnp.float32),
+      occ_ret.astype(jnp.float32), occ_lim.astype(jnp.float32), agg)

@@ -1,0 +1,105 @@
+"""jit'd dispatch wrappers for the kernel package.
+
+``use_pallas(True)`` (or REPRO_USE_PALLAS=1) routes to the Pallas TPU kernels
+(executed in interpret mode on CPU); otherwise the pure-jnp references run.
+The model/risk stacks only ever import from here.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+
+
+@functools.lru_cache(maxsize=None)
+def _ssd_pallas_vjp(chunk: int, interpret: bool):
+    """Differentiable wrapper: Pallas forward, reference-VJP backward (the
+    backward rematerialises through the jnp oracle — correct by construction;
+    a dedicated backward kernel is a recorded perf-iteration TODO)."""
+    from repro.kernels import ssd_scan
+
+    @jax.custom_vjp
+    def f(x, dt, a, B, C, h0):
+        return ssd_scan.ssd_chunked_pallas(x, dt, a, B, C, chunk=chunk,
+                                           initial_state=h0,
+                                           interpret=interpret)
+
+    def fwd(x, dt, a, B, C, h0):
+        return f(x, dt, a, B, C, h0), (x, dt, a, B, C, h0)
+
+    def bwd(res, cts):
+        x, dt, a, B, C, h0 = res
+        _, vjp = jax.vjp(
+            lambda *args: _ref.ssd_chunked_ref(*args[:5], chunk,
+                                               initial_state=args[5]),
+            x, dt, a, B, C, h0)
+        return vjp(cts)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+_STATE = {"pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
+          "interpret": True}
+
+
+def use_pallas(on: bool, interpret: bool = True) -> None:
+    _STATE["pallas"] = on
+    _STATE["interpret"] = interpret
+
+
+def pallas_enabled() -> bool:
+    return _STATE["pallas"]
+
+
+# ---------------------------------------------------------------------------
+def ssd(x, dt, a_log_decay, B, C, chunk: int,
+        initial_state: Optional[jax.Array] = None):
+    """Chunked SSD scan; see kernels.ref.ssd_chunked_ref for the contract.
+
+    Pads the sequence up to a chunk multiple (dt=0, a=0 pads are state-neutral:
+    decay exp(0)=1 and zero input leave the recurrence unchanged)."""
+    L = x.shape[1]
+    pad = (-L) % chunk
+    if pad:
+        padL = lambda t: jnp.pad(t, [(0, 0), (0, pad)] + [(0, 0)] * (t.ndim - 2))
+        x, dt, a_log_decay, B, C = map(padL, (x, dt, a_log_decay, B, C))
+        y, h = ssd(x, dt, a_log_decay, B, C, chunk, initial_state)
+        return y[:, :L], h
+    if _STATE["pallas"]:
+        b, _, H, P = x.shape
+        N = B.shape[-1]
+        h0 = (initial_state if initial_state is not None
+              else jnp.zeros((b, H, P, N), jnp.float32))
+        fn = _ssd_pallas_vjp(chunk, _STATE["interpret"])
+        return fn(x, dt, a_log_decay, B, C, h0)
+    return _ref.ssd_chunked_ref(x, dt, a_log_decay, B, C, chunk,
+                                initial_state=initial_state)
+
+
+def ssd_decode_step(state, x_t, dt_t, a_t, B_t, C_t):
+    return _ref.ssd_decode_step_ref(state, x_t, dt_t, a_t, B_t, C_t)
+
+
+def aggregate_loss(event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim,
+                   chunk: int = 128):
+    """Year-loss per trial (paper Algorithm 3).
+
+    Pads the event axis to a chunk multiple with event id 0 — the pad event
+    row of every ELT is zero by contract, so pads contribute no loss."""
+    K = event_ids.shape[1]
+    chunk = min(chunk, K)
+    pad = (-K) % chunk
+    if pad:
+        event_ids = jnp.pad(event_ids, ((0, 0), (0, pad)))
+    if _STATE["pallas"]:
+        from repro.kernels import aggregate_loss as _agg
+        return _agg.aggregate_loss_pallas(
+            event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim,
+            chunk=chunk, interpret=_STATE["interpret"])
+    return _ref.aggregate_loss_chunked_ref(
+        event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim, chunk=chunk)

@@ -1,0 +1,415 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any other import (jax locks the device
+# count on first init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces, without allocating any device memory:
+  * compiled.memory_analysis()   -> bytes per device (proves it fits)
+  * compiled.cost_analysis()     -> HLO FLOPs / bytes for the roofline
+  * a collective-traffic table parsed from the compiled HLO text
+
+XLA's HloCostAnalysis visits while-loop bodies ONCE (it cannot know trip
+counts), so the scan-over-layers/microbatches/attention-blocks would be
+undercounted.  We therefore also lower two *auxiliary* configs with python-
+unrolled loops (num_layers = period and 2*period, microbatches=1) and linearly
+extrapolate FLOPs / bytes / collective traffic in the stage count — exact for
+anything linear in depth, which all these stacks are.  memory_analysis always
+comes from the real (scanned, microbatched) artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+      --shape train_4k --mesh pod          # 16x16, 256 chips
+  PYTHONPATH=src python -m repro.launch.dryrun --all   # every cell, both meshes
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import subprocess
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, ArchConfig, cell_is_applicable,
+                           get_config, get_shape)
+from repro.distributed.sharding import Sharder, param_shardings
+from repro.launch.mesh import make_production_mesh
+from repro.models import params as pp
+from repro.models.model import build_model, input_specs
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import build_train_step
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+# matches only *defining* collective instructions:  %x = <shape> all-reduce(
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "f64": 8, "s32": 4, "u32": 4,
+               "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s64": 8, "u64": 8,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+              "collective-permute")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * DTYPE_BYTES[dtype]
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Per-device collective traffic from the (post-SPMD) HLO text.
+
+    For each collective instruction, the largest shape on the line (covers
+    all-gather results and all-reduce operands) is its per-device payload;
+    ring all-reduce moves ~2x its payload (reduce-scatter + all-gather phases).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        result_shapes, kind = m.group(1), m.group(2)
+        # payload = sum of the result tuple's element sizes
+        payload = sum(_shape_bytes(d, s)
+                      for d, s in SHAPE_RE.findall(result_shapes))
+        if payload == 0:
+            continue
+        mult = 2 if kind == "all-reduce" else 1
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += payload * mult
+    out["total_bytes"] = int(sum(v["bytes"] for v in out.values()
+                                 if isinstance(v, dict)))
+    return out
+
+
+def _attach(sds_tree, shard_tree):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, shard_tree)
+
+
+def _batch_axes(specs: Dict[str, jax.ShapeDtypeStruct]):
+    return {k: ("batch",) + (None,) * (len(v.shape) - 1)
+            for k, v in specs.items()}
+
+
+def _lower(cfg: ArchConfig, shape, mesh, sh: Sharder):
+    """Lower the cell's step function.  Returns jax.stages.Lowered."""
+    bundle = build_model(cfg)
+    boxed_sds = jax.eval_shape(bundle.init, jax.random.PRNGKey(0))
+    p_sds, p_axes = pp.split(boxed_sds)
+    p_in = _attach(p_sds, param_shardings(sh, p_axes, p_sds))
+
+    specs = input_specs(cfg, shape)
+    b_shard = jax.tree.map(lambda s, a: sh.named(a, s.shape), specs,
+                           _batch_axes(specs),
+                           is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    b_in = _attach(specs, b_shard)
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        step_fn = build_train_step(bundle, sh, opt)
+        o_sds = jax.eval_shape(lambda p: opt.init(p), p_sds)
+        o_axes = opt.state_axes(p_axes, p_sds)
+        o_in = _attach(o_sds, param_shardings(sh, o_axes, o_sds))
+        state_in = {"params": p_in, "opt": o_in,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        with mesh:
+            return jax.jit(step_fn).lower(state_in, b_in)
+    if shape.kind == "prefill":
+        def prefill(params, batch):
+            return bundle.prefill_fn(params, batch, sh)
+        with mesh:
+            return jax.jit(prefill).lower(p_in, b_in)
+    # decode
+    c_sds = jax.eval_shape(
+        lambda: bundle.init_caches(shape.global_batch, shape.seq_len))
+    c_axes = bundle.cache_axes()
+    c_in = _attach(c_sds, param_shardings(sh, c_axes, c_sds))
+
+    def decode(params, tokens, caches, idx):
+        return bundle.decode_fn(params, tokens, caches, idx, sh)
+    idx_in = jax.ShapeDtypeStruct((), jnp.int32)
+    with mesh:
+        return jax.jit(decode).lower(p_in, b_in["tokens"], c_in, idx_in)
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0))}
+
+
+def _aux_metrics(cfg: ArchConfig, shape, mesh, sh: Sharder,
+                 n_layers: int) -> Dict[str, Any]:
+    """Unrolled lowering of a shallow variant; exact per-stage costs."""
+    repl = {"num_layers": n_layers, "microbatches": 1}
+    if cfg.enc_dec:
+        repl["num_encoder_layers"] = max(
+            1, cfg.num_encoder_layers * n_layers // cfg.num_layers)
+    aux_cfg = dataclasses.replace(cfg, **repl)
+    os.environ["REPRO_UNROLL"] = "1"
+    try:
+        lowered = _lower(aux_cfg, shape, mesh, sh)
+        with mesh:
+            compiled = lowered.compile()
+    finally:
+        os.environ["REPRO_UNROLL"] = "0"
+    out = _cost_of(compiled)
+    out["collectives"] = parse_collectives(compiled.as_text())
+    return out
+
+
+def _extrapolate(v1: Dict, v2: Dict, n: float) -> Dict[str, Any]:
+    """Linear in stage count: v(n) = v1 + (v2 - v1) * (n - 1)."""
+    lin = lambda a, b: a + (b - a) * (n - 1)
+    out = {k: lin(v1[k], v2[k]) for k in ("flops", "bytes_accessed",
+                                          "transcendentals")}
+    colls = {}
+    for kind in COLL_KINDS:
+        colls[kind] = {
+            "count": int(round(lin(v1["collectives"][kind]["count"],
+                                   v2["collectives"][kind]["count"]))),
+            "bytes": int(round(lin(v1["collectives"][kind]["bytes"],
+                                   v2["collectives"][kind]["bytes"]))),
+        }
+    colls["total_bytes"] = int(sum(c["bytes"] for c in colls.values()
+                                   if isinstance(c, dict)))
+    out["collectives"] = colls
+    return out
+
+
+def lower_risk_cell(shape_name: str, multi_pod: bool) -> Dict[str, Any]:
+    """Dry-run the paper's own workload: one tenant wave of Aggregate Risk
+    Analysis sharded over every mesh axis (trials are embarrassingly
+    parallel).  shape risk_1m_t<k>: 1M trials split over k tenant waves."""
+    import dataclasses as _dc
+
+    from repro.configs.risk_app import CONFIG as RISK_CFG
+    from repro.risk.analysis import AggregateRiskAnalysis
+
+    tenants = int(shape_name.rsplit("_t", 1)[1])
+    rec: Dict[str, Any] = {
+        "arch": "risk-analysis", "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256, "kind": "risk",
+        "tenants": tenants,
+    }
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = RISK_CFG
+
+    def _metrics(events_per_trial: int, chunk: int):
+        c = _dc.replace(cfg, events_per_trial=events_per_trial,
+                        chunk_events=chunk)
+        ara = AggregateRiskAnalysis.__new__(AggregateRiskAnalysis)
+        ara.cfg = c
+        step = ara.make_sharded_step(mesh, chunk=chunk)
+        # one tenant wave, rounded to a chip multiple (last wave is ragged
+        # on the host side; the lowered step shape is the common case)
+        t_step = max(512, (cfg.num_trials // tenants // 512) * 512)
+        specs = ara.input_specs(t_step)
+        yet_in = jax.ShapeDtypeStruct(
+            specs["yet"].shape, specs["yet"].dtype,
+            sharding=jax.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(tuple(mesh.axis_names))))
+        args = [yet_in] + [specs[k] for k in
+                           ("elt", "occ_ret", "occ_lim", "agg_ret", "agg_lim")]
+        with mesh:
+            lowered = jax.jit(step).lower(*args)
+            compiled = lowered.compile()
+        return lowered, compiled
+
+    t0 = time.time()
+    _, compiled = _metrics(cfg.events_per_trial, cfg.chunk_events)
+    rec["compile_s"] = round(time.time() - t0, 2)
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "generated_code_bytes": 0,
+    }
+    rec["cost_raw"] = _cost_of(compiled)
+    rec["collectives_raw"] = parse_collectives(compiled.as_text())
+    # the event-chunk lax.scan body is counted once: extrapolate linearly in
+    # the number of chunks via 1-chunk and 2-chunk lowerings
+    ck = cfg.chunk_events
+    _, c1 = _metrics(ck, ck)
+    _, c2 = _metrics(2 * ck, ck)
+    v1 = dict(_cost_of(c1), collectives=parse_collectives(c1.as_text()))
+    v2 = dict(_cost_of(c2), collectives=parse_collectives(c2.as_text()))
+    ex = _extrapolate(v1, v2, cfg.events_per_trial // ck)
+    rec["cost"] = {k: ex[k] for k in ("flops", "bytes_accessed",
+                                      "transcendentals")}
+    rec["collectives"] = ex["collectives"]
+    rec["status"] = "ok"
+    return rec
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               exact_costs: bool = True) -> Dict[str, Any]:
+    if arch == "risk-analysis":
+        return lower_risk_cell(shape_name, multi_pod)
+    cfg = get_config(arch)
+    if os.environ.get("REPRO_MICROBATCHES"):
+        cfg = dataclasses.replace(
+            cfg, microbatches=int(os.environ["REPRO_MICROBATCHES"]))
+    if os.environ.get("REPRO_REMAT"):
+        cfg = dataclasses.replace(cfg, remat=os.environ["REPRO_REMAT"])
+    shape = get_shape(shape_name)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": 512 if multi_pod else 256,
+        "kind": shape.kind,
+    }
+    ok, reason = cell_is_applicable(cfg, shape)
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = cfg.fsdp or os.environ.get("REPRO_FSDP") == "1"
+    seq_shard = (fsdp if not os.environ.get("REPRO_SEQSHARD")
+                 else os.environ["REPRO_SEQSHARD"] == "1")
+    if os.environ.get("REPRO_DP_ONLY") == "1":
+        # pure data parallelism: batch over every mesh axis, weights fully
+        # FSDP-sharded, no tensor parallelism (small-arch optimised layout)
+        from repro.distributed.sharding import DEFAULT_RULES
+        rules = dict(DEFAULT_RULES)
+        rules.update({"batch": ("pod", "data", "model"),
+                      "fsdp": ("pod", "data", "model"),
+                      "heads": None, "kv": None, "ff": None, "vocab": None,
+                      "inner": None, "expert": None, "seq": None,
+                      "kvseq": ("model", "data")})
+        sh = Sharder(mesh, fsdp=True, seq_shard=False, rules=rules)
+    else:
+        sh = Sharder(mesh, fsdp=fsdp, seq_shard=seq_shard)
+
+    t0 = time.time()
+    lowered = _lower(cfg, shape, mesh, sh)
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+        "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+        "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+        "generated_code_bytes": int(getattr(mem, "generated_code_size_in_bytes", 0)),
+    }
+    rec["cost_raw"] = _cost_of(compiled)
+    hlo = compiled.as_text()
+    rec["collectives_raw"] = parse_collectives(hlo)
+    rec["hlo_lines"] = hlo.count("\n")
+    del compiled, lowered, hlo
+
+    if exact_costs:
+        period = cfg.stage_period if not cfg.enc_dec else 1
+        n = cfg.num_layers // period
+        if n >= 2:
+            t0 = time.time()
+            v1 = _aux_metrics(cfg, shape, mesh, sh, period)
+            v2 = _aux_metrics(cfg, shape, mesh, sh, 2 * period)
+            ex = _extrapolate(v1, v2, n)
+            rec["cost"] = {k: ex[k] for k in ("flops", "bytes_accessed",
+                                              "transcendentals")}
+            rec["collectives"] = ex["collectives"]
+            rec["aux_s"] = round(time.time() - t0, 2)
+        else:
+            rec["cost"] = rec["cost_raw"]
+            rec["collectives"] = rec["collectives_raw"]
+    else:
+        rec["cost"] = rec["cost_raw"]
+        rec["collectives"] = rec["collectives_raw"]
+
+    rec["status"] = "ok"
+    return rec
+
+
+def run_one(arch: str, shape_name: str, mesh_name: str,
+            out_dir: pathlib.Path, exact: bool = True) -> Dict[str, Any]:
+    rec = lower_cell(arch, shape_name, mesh_name == "multipod",
+                     exact_costs=exact)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    path = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape x mesh) cell in subprocesses")
+    ap.add_argument("--no-exact", action="store_true",
+                    help="skip the unrolled aux lowerings (raw costs only)")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+    out_dir = pathlib.Path(args.out)
+
+    if args.all:
+        cells = [(a, s.name, m) for a in ARCH_IDS for s in SHAPES
+                 for m in ("pod", "multipod")]
+        failures = 0
+        for a, s, m in cells:
+            path = out_dir / f"{a}__{s}__{m}.json"
+            if args.skip_existing and path.exists():
+                st = json.loads(path.read_text()).get("status")
+                if st in ("ok", "skipped"):
+                    print(f"[skip] {a} {s} {m}: {st}", flush=True)
+                    continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", a, "--shape", s, "--mesh", m, "--out", str(out_dir)]
+            if args.no_exact:
+                cmd.append("--no-exact")
+            print(f"[run ] {a} {s} {m}", flush=True)
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               env=dict(os.environ, PYTHONPATH="src"))
+            dt = round(time.time() - t0, 1)
+            if r.returncode != 0:
+                failures += 1
+                out_dir.mkdir(parents=True, exist_ok=True)
+                path.write_text(json.dumps({
+                    "arch": a, "shape": s, "mesh": m, "status": "error",
+                    "error": r.stderr[-4000:]}, indent=1))
+                print(f"[FAIL {dt}s] {a} {s} {m}\n" + r.stderr[-1500:], flush=True)
+            else:
+                print(f"[ok   {dt}s] {a} {s} {m}", flush=True)
+        print(f"done; {failures} failures")
+        return 1 if failures else 0
+
+    rec = run_one(args.arch, args.shape, args.mesh, out_dir,
+                  exact=not args.no_exact)
+    print(json.dumps(rec, indent=1))
+    return 0 if rec.get("status") in ("ok", "skipped") else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,61 @@
+"""Risk-application driver: run Aggregate Risk Analysis under a tenancy plan.
+
+    PYTHONPATH=src python -m repro.launch.risk --reduced --tenants 2 \
+        --mode sequential
+
+Prints the YLT risk metrics and the staging/compute timeline, plus the
+perf/energy-model prediction for the same deployment (paper Figs 15-22).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax.numpy as jnp
+
+from repro.configs.risk_app import CONFIG as PAPER_CFG
+from repro.core import energymodel as em
+from repro.core import perfmodel as pm
+from repro.core.planner import plan
+from repro.risk import metrics
+from repro.risk.analysis import AggregateRiskAnalysis
+from repro.risk.tables import generate
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--trials", type=int, default=None)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--mode", default="sequential",
+                    choices=["sequential", "concurrent"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = PAPER_CFG.reduced() if args.reduced else PAPER_CFG
+    repl = {"tenants_per_device": args.tenants, "transfer_mode": args.mode}
+    if args.trials:
+        repl["num_trials"] = args.trials
+    cfg = dataclasses.replace(cfg, **repl)
+
+    tables = generate(cfg, args.seed)
+    ara = AggregateRiskAnalysis(cfg)
+    rep = ara.run_tenant_chunked(tables)
+    print(f"trials={cfg.num_trials} tenants/dev={args.tenants} "
+          f"mode={args.mode} wall={rep.wall_s*1e3:.1f} ms")
+    for k, v in metrics.summary(jnp.asarray(rep.ylt)).items():
+        print(f"  {k:8s} {float(v):,.0f}")
+
+    # model-predicted deployment for the paper-scale workload
+    m = pm.PerfModelInputs(net=pm.FDR)
+    best = plan(m, "time")
+    beste = plan(m, "energy")
+    print(f"paper-scale model: time-opt {best.n_pdev}x{best.tenants_per_pdev}"
+          f" = {best.exec_time_s:.3f}s | energy-opt "
+          f"{beste.n_pdev}x{beste.tenants_per_pdev} = {beste.energy_ws:.0f} Ws")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

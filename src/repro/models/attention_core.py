@@ -1,0 +1,336 @@
+"""Attention primitives.
+
+Two paths:
+
+* :func:`naive_attention` — reference implementation (also the decode path,
+  where the S_q=1 score tensor is tiny and GSPMD shards the KV-sequence
+  reduction cleanly, including the long_500k sequence-sharded cache).
+* :func:`blockwise_attention` — memory-linear flash-style attention in pure
+  JAX (lax.scan over query and KV blocks, online softmax) with a custom VJP
+  that recomputes per-block scores in the backward pass, so residuals are just
+  (q, k, v, o, lse).  This is the HLO-level analogue of the Pallas flash
+  kernel on the TPU target; it keeps 32k-prefill activation memory bounded.
+
+Both support GQA (query heads grouped over KV heads), causal masking and
+sliding windows.
+"""
+from __future__ import annotations
+
+import functools
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+NEG_INF = -1e30
+
+
+def unroll_enabled() -> bool:
+    """REPRO_UNROLL=1 replaces lax.scan loops with python loops so that XLA's
+    HloCostAnalysis (which visits while bodies once, ignoring trip counts)
+    reports exact FLOPs.  Used by the dry-run's auxiliary lowerings only."""
+    return os.environ.get("REPRO_UNROLL", "0") == "1"
+
+
+def _pick_block(size: int, target: int) -> int:
+    """Largest divisor of ``size`` that is <= target (prefers powers of two)."""
+    if size <= target:
+        return size
+    b = math.gcd(size, target)
+    if b >= 16 or b == size:
+        return b
+    for cand in range(target, 0, -1):
+        if size % cand == 0:
+            return cand
+    return size
+
+
+def _mask_bias(q_pos, k_pos, causal: bool, window: Optional[int],
+               kv_valid: Optional[jax.Array]) -> jax.Array:
+    """(q, k) additive bias: 0 where attendable, NEG_INF elsewhere."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        ok &= k_pos[None, :] > (q_pos[:, None] - window)
+    if kv_valid is not None:
+        ok &= k_pos[None, :] < kv_valid
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    q_offset=0, kv_valid: Optional[jax.Array] = None,
+                    kv_positions: Optional[jax.Array] = None):
+    """q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D).  Returns (B,Sq,Hq,D).
+
+    ``kv_positions`` overrides the assumed arange(Skv) absolute positions
+    (used by ring/sliding-window caches).
+    """
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qr = q.reshape(B, Sq, Hkv, rep, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = kv_positions if kv_positions is not None else jnp.arange(k.shape[1])
+    bias = _mask_bias(q_pos, k_pos, causal, window, kv_valid)
+    s = s + bias[None, :, None, None, :]
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhrk,bkhd->bqhrd", p, v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blockwise flash attention with custom VJP
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _make_blockwise(causal: bool, window: Optional[int], block_q: int,
+                    block_kv: int):
+    scale_of = lambda D: 1.0 / math.sqrt(D)
+
+    def _fwd_inner(q, k, v):
+        B, Sq, Hkv, rep, D = q.shape
+        Skv = k.shape[1]
+        nq, nk = Sq // block_q, Skv // block_kv
+        scale = scale_of(D)
+        qs = jnp.moveaxis(q.reshape(B, nq, block_q, Hkv, rep, D), 1, 0)
+
+        def per_qblock(carry, xs):
+            del carry
+            qi, qblk = xs
+            q_pos = qi * block_q + jnp.arange(block_q)
+
+            def kv_step(inner, j):
+                m, l, acc = inner
+                kj = lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, 1)
+                vj = lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, 1)
+                s = jnp.einsum("bqhrd,bkhd->bqhrk", qblk, kj,
+                               preferred_element_type=jnp.float32) * scale
+                k_pos = j * block_kv + jnp.arange(block_kv)
+                bias = _mask_bias(q_pos, k_pos, causal, window, None)
+                s = s + bias[None, :, None, None, :]
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l_new = l * alpha + p.sum(axis=-1)
+                pv = jnp.einsum("bqhrk,bkhd->bqhrd", p, vj,
+                                preferred_element_type=jnp.float32)
+                acc_new = acc * alpha[..., None] + pv
+                return (m_new, l_new, acc_new), None
+
+            m0 = jnp.full((B, block_q, Hkv, rep), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, block_q, Hkv, rep), jnp.float32)
+            a0 = jnp.zeros((B, block_q, Hkv, rep, D), jnp.float32)
+            (m, l, acc), _ = lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+            l_safe = jnp.where(l == 0.0, 1.0, l)
+            o = acc / l_safe[..., None]
+            lse = m + jnp.log(l_safe)
+            return None, (o, lse)
+
+        _, (o, lse) = lax.scan(per_qblock, None, (jnp.arange(nq), qs))
+        # o: (nq, B, bq, Hkv, rep, D) -> (B, Sq, Hkv, rep, D)
+        o = jnp.moveaxis(o, 0, 1).reshape(B, Sq, Hkv, rep, D)
+        lse = jnp.moveaxis(lse, 0, 1).reshape(B, Sq, Hkv, rep)
+        return o, lse
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        o, _ = _fwd_inner(q, k, v)
+        return o.astype(q.dtype)
+
+    def attn_fwd(q, k, v):
+        o, lse = _fwd_inner(q, k, v)
+        o = o.astype(q.dtype)
+        return o, (q, k, v, o, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, o, lse = res
+        B, Sq, Hkv, rep, D = q.shape
+        Skv = k.shape[1]
+        nq, nk = Sq // block_q, Skv // block_kv
+        scale = scale_of(D)
+        do = do.astype(jnp.float32)
+        delta = jnp.sum(do * o.astype(jnp.float32), axis=-1)  # (B,Sq,Hkv,rep)
+        qs = jnp.moveaxis(q.reshape(B, nq, block_q, Hkv, rep, D), 1, 0)
+        dos = jnp.moveaxis(do.reshape(B, nq, block_q, Hkv, rep, D), 1, 0)
+        lses = jnp.moveaxis(lse.reshape(B, nq, block_q, Hkv, rep), 1, 0)
+        deltas = jnp.moveaxis(delta.reshape(B, nq, block_q, Hkv, rep), 1, 0)
+
+        def per_qblock(carry, xs):
+            dk_acc, dv_acc = carry
+            qi, qblk, doblk, lseblk, dltblk = xs
+            q_pos = qi * block_q + jnp.arange(block_q)
+
+            def kv_step(dq_acc, j):
+                kj = lax.dynamic_slice_in_dim(k, j * block_kv, block_kv, 1)
+                vj = lax.dynamic_slice_in_dim(v, j * block_kv, block_kv, 1)
+                s = jnp.einsum("bqhrd,bkhd->bqhrk", qblk, kj,
+                               preferred_element_type=jnp.float32) * scale
+                k_pos = j * block_kv + jnp.arange(block_kv)
+                bias = _mask_bias(q_pos, k_pos, causal, window, None)
+                s = s + bias[None, :, None, None, :]
+                p = jnp.exp(s - lseblk[..., None])          # (B,bq,Hkv,rep,bk)
+                dv_j = jnp.einsum("bqhrk,bqhrd->bkhd", p, doblk,
+                                  preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bqhrd,bkhd->bqhrk", doblk, vj,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - dltblk[..., None]) * scale
+                dq_c = jnp.einsum("bqhrk,bkhd->bqhrd", ds, kj,
+                                  preferred_element_type=jnp.float32)
+                dk_j = jnp.einsum("bqhrk,bqhrd->bkhd", ds, qblk,
+                                  preferred_element_type=jnp.float32)
+                return dq_acc + dq_c, (dk_j, dv_j)
+
+            dq0 = jnp.zeros((B, block_q, Hkv, rep, D), jnp.float32)
+            dq_blk, (dk_js, dv_js) = lax.scan(kv_step, dq0, jnp.arange(nk))
+            dk_new = dk_acc + jnp.moveaxis(dk_js, 0, 1).reshape(B, Skv, Hkv, D)
+            dv_new = dv_acc + jnp.moveaxis(dv_js, 0, 1).reshape(B, Skv, Hkv, D)
+            return (dk_new, dv_new), dq_blk
+
+        dk0 = jnp.zeros((B, Skv, Hkv, D), jnp.float32)
+        dv0 = jnp.zeros_like(dk0)
+        (dk, dv), dqs = lax.scan(
+            per_qblock, (dk0, dv0), (jnp.arange(nq), qs, dos, lses, deltas))
+        dq = jnp.moveaxis(dqs, 0, 1).reshape(B, Sq, Hkv, rep, D)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+# ---------------------------------------------------------------------------
+# Unrolled variant (python loops, causal block-skip) — exact HLO FLOP counts
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=None)
+def _make_unrolled(causal: bool, window: Optional[int], block_q: int,
+                   block_kv: int):
+    def _pairs(nq, nk):
+        out = []
+        for qi in range(nq):
+            q_hi = (qi + 1) * block_q - 1
+            q_lo = qi * block_q
+            for j in range(nk):
+                k_lo = j * block_kv
+                k_hi = (j + 1) * block_kv - 1
+                if causal and k_lo > q_hi:
+                    continue  # fully masked (future)
+                if window is not None and k_hi <= q_lo - window:
+                    continue  # fully masked (outside window)
+                out.append((qi, j))
+        return out
+
+    def _block(q, k, v, qi, j, scale):
+        kj = lax.slice_in_dim(k, j * block_kv, (j + 1) * block_kv, axis=1)
+        vj = lax.slice_in_dim(v, j * block_kv, (j + 1) * block_kv, axis=1)
+        s = jnp.einsum("bqhrd,bkhd->bqhrk", q, kj,
+                       preferred_element_type=jnp.float32) * scale
+        q_pos = qi * block_q + jnp.arange(block_q)
+        k_pos = j * block_kv + jnp.arange(block_kv)
+        bias = _mask_bias(q_pos, k_pos, causal, window, None)
+        return s + bias[None, :, None, None, :], kj, vj
+
+    def _fwd_inner(q, k, v):
+        B, Sq, Hkv, rep, D = q.shape
+        nq, nk = Sq // block_q, k.shape[1] // block_kv
+        scale = 1.0 / math.sqrt(D)
+        os_, lses = [], []
+        for qi in range(nq):
+            qblk = lax.slice_in_dim(q, qi * block_q, (qi + 1) * block_q, axis=1)
+            m = jnp.full((B, block_q, Hkv, rep), NEG_INF, jnp.float32)
+            l = jnp.zeros((B, block_q, Hkv, rep), jnp.float32)
+            acc = jnp.zeros((B, block_q, Hkv, rep, D), jnp.float32)
+            for j in range(nk):
+                if (qi, j) not in set(_pairs(nq, nk)):
+                    continue
+                s, kj, vj = _block(qblk, k, v, qi, j, scale)
+                m_new = jnp.maximum(m, s.max(axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha + p.sum(axis=-1)
+                acc = acc * alpha[..., None] + jnp.einsum(
+                    "bqhrk,bkhd->bqhrd", p, vj,
+                    preferred_element_type=jnp.float32)
+                m = m_new
+            l_safe = jnp.where(l == 0.0, 1.0, l)
+            os_.append(acc / l_safe[..., None])
+            lses.append(m + jnp.log(l_safe))
+        o = jnp.concatenate(os_, axis=1)
+        lse = jnp.concatenate(lses, axis=1)
+        return o, lse
+
+    @jax.custom_vjp
+    def attn(q, k, v):
+        return _fwd_inner(q, k, v)[0].astype(q.dtype)
+
+    def attn_fwd(q, k, v):
+        o, lse = _fwd_inner(q, k, v)
+        o = o.astype(q.dtype)
+        return o, (q, k, v, o, lse)
+
+    def attn_bwd(res, do):
+        q, k, v, o, lse = res
+        B, Sq, Hkv, rep, D = q.shape
+        Skv = k.shape[1]
+        nq, nk = Sq // block_q, Skv // block_kv
+        scale = 1.0 / math.sqrt(D)
+        do = do.astype(jnp.float32)
+        delta = jnp.sum(do * o.astype(jnp.float32), axis=-1)
+        dq = jnp.zeros(q.shape, jnp.float32)
+        dk = jnp.zeros(k.shape, jnp.float32)
+        dv = jnp.zeros(v.shape, jnp.float32)
+        pairs = _pairs(nq, nk)
+        for qi in range(nq):
+            sl = (slice(None), slice(qi * block_q, (qi + 1) * block_q))
+            qblk, doblk = q[sl], do[sl]
+            lseblk, dltblk = lse[sl], delta[sl]
+            dq_blk = jnp.zeros((B, block_q, Hkv, rep, D), jnp.float32)
+            for j in range(nk):
+                if (qi, j) not in pairs:
+                    continue
+                s, kj, vj = _block(qblk, k, v, qi, j, scale)
+                p = jnp.exp(s - lseblk[..., None])
+                dv_j = jnp.einsum("bqhrk,bqhrd->bkhd", p, doblk,
+                                  preferred_element_type=jnp.float32)
+                dp = jnp.einsum("bqhrd,bkhd->bqhrk", doblk, vj,
+                                preferred_element_type=jnp.float32)
+                ds = p * (dp - dltblk[..., None]) * scale
+                dq_blk = dq_blk + jnp.einsum(
+                    "bqhrk,bkhd->bqhrd", ds, kj,
+                    preferred_element_type=jnp.float32)
+                dk_j = jnp.einsum("bqhrk,bqhrd->bkhd", ds, qblk,
+                                  preferred_element_type=jnp.float32)
+                ksl = slice(j * block_kv, (j + 1) * block_kv)
+                dk = dk.at[:, ksl].add(dk_j)
+                dv = dv.at[:, ksl].add(dv_j)
+            dq = dq.at[sl].set(dq_blk)
+        return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+    attn.defvjp(attn_fwd, attn_bwd)
+    return attn
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        block_q: int = 512, block_kv: int = 1024):
+    """Flash-style attention.  q: (B,Sq,Hq,D); k/v: (B,Skv,Hkv,D)."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    rep = Hq // Hkv
+    if unroll_enabled():
+        bq = _pick_block(Sq, 2048)
+        bk = _pick_block(k.shape[1], 2048)
+        fn = _make_unrolled(causal, window, bq, bk)
+    else:
+        bq = _pick_block(Sq, block_q)
+        bk = _pick_block(k.shape[1], block_kv)
+        fn = _make_blockwise(causal, window, bq, bk)
+    qr = q.reshape(B, Sq, Hkv, rep, D)
+    o = fn(qr, k, v)
+    return o.reshape(B, Sq, Hq, D)

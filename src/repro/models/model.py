@@ -1,0 +1,303 @@
+"""Model factory: ArchConfig -> init / loss / prefill / decode callables.
+
+This is the single public entry point the launcher, dry-run, smoke tests and
+examples use:
+
+    bundle = build_model(cfg)
+    params_boxed = bundle.init(key)            # Boxed tree (values + axes)
+    loss, metrics = bundle.loss_fn(values, batch, sh)
+    logits, caches, idx = bundle.prefill_fn(values, batch, sh)
+    logits, caches = bundle.decode_fn(values, tokens, caches, idx, sh)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig, ShapeCell
+from repro.distributed.sharding import Sharder
+from repro.models import params as pp
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_attention, apply_attention_decode,
+                                 apply_cross_attention, apply_embedding,
+                                 apply_mlp, apply_rmsnorm, apply_unembed,
+                                 dtype_of, init_attention, init_embedding,
+                                 init_kv_cache, init_mlp, init_rmsnorm,
+                                 precompute_cross_kv, sinusoidal_positions)
+from repro.models.transformer import (ATTN_CACHE_AXES, init_lm, init_lm_caches,
+                                      lm_backbone, lm_cache_axes,
+                                      lm_decode_backbone, maybe_scan)
+
+VIS_WIDTH = 1024  # CLIP ViT-L/14 stub feature width
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss_fn: Callable[..., Tuple[jax.Array, Dict[str, jax.Array]]]
+    prefill_fn: Callable[..., Tuple[jax.Array, Any, jax.Array]]
+    decode_fn: Callable[..., Tuple[jax.Array, Any]]
+    init_caches: Callable[[int, int], Any]
+    cache_axes: Callable[[], Any] = None  # logical axes for the cache pytree
+
+
+# ---------------------------------------------------------------------------
+# shared pieces
+# ---------------------------------------------------------------------------
+def _xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _sinusoid_at(pos, dim: int):
+    half = dim // 2
+    freq = jnp.exp(-math.log(10000.0) *
+                   jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _merge_patches(params, x, patch_embeds, cfg: ArchConfig):
+    cdt = dtype_of(cfg.compute_dtype)
+    pe = jnp.einsum("bpv,vd->bpd", patch_embeds.astype(cdt),
+                    params["mm_proj"]["w1"].astype(cdt))
+    pe = jax.nn.gelu(pe)
+    pe = jnp.einsum("bpd,de->bpe", pe, params["mm_proj"]["w2"].astype(cdt))
+    return jax.lax.dynamic_update_slice(x, pe.astype(x.dtype), (0, 0, 0))
+
+
+def _embed(params, batch, cfg: ArchConfig, sh: Sharder):
+    x = apply_embedding(params["embed"], batch["tokens"], cfg, sh)
+    if cfg.num_patches and "patch_embeds" in batch:
+        x = _merge_patches(params, x, batch["patch_embeds"], cfg)
+    if not cfg.use_rope:
+        S = x.shape[1]
+        x = x + sinusoidal_positions(S, cfg.d_model).astype(x.dtype)[None]
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only family (dense / moe / ssm / hybrid / vlm)
+# ---------------------------------------------------------------------------
+def _build_decoder_only(cfg: ArchConfig) -> ModelBundle:
+    def init(key):
+        return init_lm(key, cfg)
+
+    def loss_fn(params, batch, sh: Sharder):
+        x = _embed(params, batch, cfg, sh)
+        h, aux, _ = lm_backbone(params, x, cfg, sh)
+        logits = apply_unembed(params["embed"], h, cfg, sh)
+        loss = _xent(logits, batch["labels"])
+        return loss + aux, {"xent": loss, "aux": aux}
+
+    def prefill_fn(params, batch, sh: Sharder):
+        x = _embed(params, batch, cfg, sh)
+        h, _, caches = lm_backbone(params, x, cfg, sh, collect_cache=True)
+        logits = apply_unembed(params["embed"], h[:, -1:], cfg, sh)
+        return logits[:, 0], caches, jnp.asarray(x.shape[1], jnp.int32)
+
+    def decode_fn(params, tokens, caches, cache_index, sh: Sharder):
+        x = apply_embedding(params["embed"], tokens, cfg, sh)
+        if not cfg.use_rope:
+            x = x + _sinusoid_at(cache_index, cfg.d_model).astype(x.dtype)[None, None]
+        h, new_caches = lm_decode_backbone(params, x, caches, cache_index,
+                                           cfg, sh)
+        logits = apply_unembed(params["embed"], h, cfg, sh)
+        return logits[:, 0], new_caches
+
+    def init_caches(batch: int, seq_len: int):
+        return init_lm_caches(cfg, batch, seq_len)
+
+    return ModelBundle(cfg, init, loss_fn, prefill_fn, decode_fn, init_caches,
+                       lambda: lm_cache_axes(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder family (whisper)
+# ---------------------------------------------------------------------------
+def _init_enc_stage(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 2)
+    dt = dtype_of(cfg.param_dtype)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dt),
+        "attn": init_attention(ks[0], cfg),
+        "norm2": init_rmsnorm(cfg.d_model, dt),
+        "mlp": init_mlp(ks[1], cfg),
+    }
+
+
+def _init_dec_stage(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 3)
+    dt = dtype_of(cfg.param_dtype)
+    return {
+        "norm1": init_rmsnorm(cfg.d_model, dt),
+        "attn": init_attention(ks[0], cfg),
+        "norm_c": init_rmsnorm(cfg.d_model, dt),
+        "cross": init_attention(ks[1], cfg, cross=True),
+        "norm2": init_rmsnorm(cfg.d_model, dt),
+        "mlp": init_mlp(ks[2], cfg),
+    }
+
+
+def _build_enc_dec(cfg: ArchConfig) -> ModelBundle:
+    n_enc, n_dec = cfg.num_encoder_layers, cfg.num_layers
+
+    def init(key):
+        ks = jax.random.split(key, 3)
+        return {
+            "embed": init_embedding(ks[0], cfg),
+            "enc_stages": pp.stack_layer_inits(
+                lambda k: _init_enc_stage(k, cfg), jax.random.split(ks[1], n_enc)),
+            "dec_stages": pp.stack_layer_inits(
+                lambda k: _init_dec_stage(k, cfg), jax.random.split(ks[2], n_dec)),
+            "enc_norm": init_rmsnorm(cfg.d_model, dtype_of(cfg.param_dtype)),
+            "final_norm": init_rmsnorm(cfg.d_model, dtype_of(cfg.param_dtype)),
+        }
+
+    def encode(params, frames, sh: Sharder):
+        x = frames.astype(dtype_of(cfg.compute_dtype))
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = sh.constrain(x, ("batch", "seq", None))
+
+        def body(h, sp):
+            a = apply_attention(sp["attn"], apply_rmsnorm(sp["norm1"], h), cfg,
+                                sh, causal=False)
+            h = h + a
+            m = apply_mlp(sp["mlp"], apply_rmsnorm(sp["norm2"], h), cfg, sh)
+            return h + m, None
+
+        x, _ = maybe_scan(body, x, params["enc_stages"])
+        return apply_rmsnorm(params["enc_norm"], x)
+
+    def cross_kv_all(params, enc_out, sh: Sharder):
+        return jax.vmap(
+            lambda sp: precompute_cross_kv(sp["cross"], enc_out, cfg, sh)
+        )(params["dec_stages"])
+
+    def decode_full(params, tokens, enc_out, sh: Sharder,
+                    collect_cache: bool = False):
+        x = apply_embedding(params["embed"], tokens, cfg, sh)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        ckv = cross_kv_all(params, enc_out, sh)
+        positions = jnp.arange(x.shape[1])
+
+        def body(h, xs):
+            sp, kv = xs
+            a = apply_attention(sp["attn"], apply_rmsnorm(sp["norm1"], h), cfg,
+                                sh, positions=positions,
+                                return_kv=collect_cache)
+            if collect_cache:
+                a, (k, v) = a
+            h = h + a
+            c = apply_cross_attention(sp["cross"],
+                                      apply_rmsnorm(sp["norm_c"], h), kv, cfg, sh)
+            h = h + c
+            m = apply_mlp(sp["mlp"], apply_rmsnorm(sp["norm2"], h), cfg, sh)
+            h = h + m
+            if collect_cache:
+                pos = jnp.broadcast_to(positions[None, :],
+                                       (k.shape[0], k.shape[1]))
+                return h, {"k": k.astype(jnp.bfloat16),
+                           "v": v.astype(jnp.bfloat16),
+                           "pos": pos.astype(jnp.int32)}
+            return h, None
+
+        body_fn = jax.checkpoint(body) if cfg.remat == "full" else body
+        x, self_caches = maybe_scan(body_fn, x, (params["dec_stages"], ckv))
+        x = apply_rmsnorm(params["final_norm"], x)
+        return x, self_caches, ckv
+
+    def loss_fn(params, batch, sh: Sharder):
+        enc_out = encode(params, batch["frames"], sh)
+        h, _, _ = decode_full(params, batch["tokens"], enc_out, sh)
+        logits = apply_unembed(params["embed"], h, cfg, sh)
+        loss = _xent(logits, batch["labels"])
+        return loss, {"xent": loss, "aux": jnp.zeros((), jnp.float32)}
+
+    def prefill_fn(params, batch, sh: Sharder):
+        enc_out = encode(params, batch["frames"], sh)
+        h, self_caches, ckv = decode_full(params, batch["tokens"], enc_out, sh,
+                                          collect_cache=True)
+        logits = apply_unembed(params["embed"], h[:, -1:], cfg, sh)
+        caches = {"self": self_caches, "cross": {"k": ckv[0], "v": ckv[1]}}
+        return logits[:, 0], caches, jnp.asarray(batch["tokens"].shape[1],
+                                                 jnp.int32)
+
+    def decode_fn(params, tokens, caches, cache_index, sh: Sharder):
+        x = apply_embedding(params["embed"], tokens, cfg, sh)
+        x = x + _sinusoid_at(cache_index, cfg.d_model).astype(x.dtype)[None, None]
+
+        def body(h, xs):
+            sp, sc, ck, cv = xs
+            a, nc = apply_attention_decode(sp["attn"],
+                                           apply_rmsnorm(sp["norm1"], h), sc,
+                                           cfg, sh, cache_index)
+            h = h + a
+            c = apply_cross_attention(sp["cross"],
+                                      apply_rmsnorm(sp["norm_c"], h),
+                                      (ck.astype(h.dtype), cv.astype(h.dtype)),
+                                      cfg, sh)
+            h = h + c
+            m = apply_mlp(sp["mlp"], apply_rmsnorm(sp["norm2"], h), cfg, sh)
+            return h + m, nc
+
+        x, new_self = maybe_scan(
+            body, x, (params["dec_stages"], caches["self"],
+                      caches["cross"]["k"], caches["cross"]["v"]))
+        x = apply_rmsnorm(params["final_norm"], x)
+        logits = apply_unembed(params["embed"], x, cfg, sh)
+        return logits[:, 0], {"self": new_self, "cross": caches["cross"]}
+
+    def init_caches(batch: int, seq_len: int):
+        self_c = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_dec,) + a.shape),
+            init_kv_cache(cfg, batch, seq_len))
+        cross_shape = (n_dec, batch, cfg.encoder_seq_len, cfg.num_kv_heads,
+                       cfg.head_dim)
+        return {"self": self_c,
+                "cross": {"k": jnp.zeros(cross_shape, jnp.bfloat16),
+                          "v": jnp.zeros(cross_shape, jnp.bfloat16)}}
+
+    def cache_axes():
+        cross = ("layers", "batch", None, "kv", None)
+        return {"self": dict(ATTN_CACHE_AXES),
+                "cross": {"k": cross, "v": cross}}
+
+    return ModelBundle(cfg, init, loss_fn, prefill_fn, decode_fn, init_caches,
+                       cache_axes)
+
+
+# ---------------------------------------------------------------------------
+def build_model(cfg: ArchConfig) -> ModelBundle:
+    if cfg.enc_dec:
+        return _build_enc_dec(cfg)
+    return _build_decoder_only(cfg)
+
+
+# ---------------------------------------------------------------------------
+# Input specs per (arch x shape) cell — ShapeDtypeStructs, no allocation
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    if shape.kind == "train":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                 "labels": jax.ShapeDtypeStruct((B, S), i32)}
+    elif shape.kind == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    else:  # decode: one new token; caches are built separately
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    if cfg.num_patches and shape.kind != "decode":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, VIS_WIDTH), bf16)
+    if cfg.enc_dec and shape.kind != "decode":
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq_len, cfg.d_model), bf16)
+    return specs

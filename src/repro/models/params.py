@@ -1,0 +1,78 @@
+"""Parameter boxing: every parameter leaf carries logical sharding axes.
+
+``init`` functions build trees whose leaves are :class:`Boxed` (array +
+logical-axis names).  ``split`` separates the value tree from the axes tree so
+the value tree is a plain jnp pytree (jit/optimizer friendly) while the axes
+tree drives :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Boxed:
+    value: Any
+    axes: Tuple[Optional[str], ...]
+
+
+def is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def split(tree):
+    """Boxed tree -> (values, axes) trees with identical structure."""
+    values = jax.tree.map(lambda b: b.value, tree, is_leaf=is_boxed)
+    axes = jax.tree.map(lambda b: b.axes, tree, is_leaf=is_boxed)
+    return values, axes
+
+
+def normal(key, shape, scale, dtype, axes) -> Boxed:
+    v = (scale * jax.random.normal(key, shape, dtype=jnp.float32)).astype(dtype)
+    assert len(axes) == len(shape), (axes, shape)
+    return Boxed(v, tuple(axes))
+
+
+def zeros(shape, dtype, axes) -> Boxed:
+    assert len(axes) == len(shape), (axes, shape)
+    return Boxed(jnp.zeros(shape, dtype=dtype), tuple(axes))
+
+
+def ones(shape, dtype, axes) -> Boxed:
+    assert len(axes) == len(shape), (axes, shape)
+    return Boxed(jnp.ones(shape, dtype=dtype), tuple(axes))
+
+
+def constant(value: np.ndarray, dtype, axes) -> Boxed:
+    value = jnp.asarray(value, dtype=dtype)
+    assert len(axes) == value.ndim, (axes, value.shape)
+    return Boxed(value, tuple(axes))
+
+
+def stack_layer_inits(init_fn, keys) -> Any:
+    """vmap an init over a leading layer axis; prepends logical axis "layers"."""
+    boxed = jax.vmap(lambda k: init_fn(k))(keys)
+    # vmap maps over .value (pytree child); axes aux-data is unchanged, but the
+    # arrays now carry a leading layer dim -> prepend the "layers" logical axis.
+    def fix(b: Boxed) -> Boxed:
+        assert b.value.ndim == len(b.axes) + 1
+        return Boxed(b.value, ("layers",) + tuple(b.axes))
+
+    return jax.tree.map(fix, boxed, is_leaf=is_boxed)
+
+
+jax.tree_util.register_pytree_node(
+    Boxed,
+    lambda b: ((b.value,), b.axes),
+    lambda axes, children: Boxed(children[0], axes),
+)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves))

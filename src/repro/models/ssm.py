@@ -1,0 +1,171 @@
+"""Mamba-2 (SSD) mixer block — arXiv:2405.21060.
+
+Block: in_proj -> [z | xBC | dt]; causal depthwise conv + SiLU on xBC;
+SSD scan over (x, B, C) with per-head decay A*dt; +D skip; gated RMSNorm
+(y * silu(z)); out_proj.  Decode keeps (ssm_state, conv_state).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import Sharder
+from repro.kernels import ops as kops
+from repro.models import params as pp
+from repro.models.layers import dtype_of
+
+
+def ssm_dims(cfg: ArchConfig):
+    sc = cfg.ssm
+    d_inner = sc.expand * cfg.d_model
+    n_heads = d_inner // sc.head_dim
+    conv_dim = d_inner + 2 * sc.n_groups * sc.d_state
+    d_in_proj = 2 * d_inner + 2 * sc.n_groups * sc.d_state + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def init_ssm(key, cfg: ArchConfig) -> Dict[str, Any]:
+    sc = cfg.ssm
+    dt = dtype_of(cfg.param_dtype)
+    d_inner, H, conv_dim, d_in_proj = ssm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    s_in = 0.02
+    s_out = 0.02 / math.sqrt(2 * max(cfg.num_layers, 1))
+    lo, hi = cfg.ssm.a_init_range
+    a_init = jnp.log(lo + (hi - lo) * jax.random.uniform(ks[2], (H,)))
+    # dt bias: softplus^-1 of dt sampled log-uniform in [dt_min, dt_max]
+    dts = jnp.exp(jax.random.uniform(ks[3], (H,)) *
+                  (np.log(sc.dt_max) - np.log(sc.dt_min)) + np.log(sc.dt_min))
+    dt_bias = dts + jnp.log(-jnp.expm1(-dts))
+    return {
+        "in_proj": pp.normal(ks[0], (cfg.d_model, d_in_proj), s_in, dt,
+                             ("fsdp", "inner")),
+        "conv_w": pp.normal(ks[1], (sc.d_conv, conv_dim), 0.2, dt,
+                            (None, "inner")),
+        "conv_b": pp.zeros((conv_dim,), dt, ("inner",)),
+        "a_log": pp.constant(a_init, jnp.float32, ("inner",)),
+        "dt_bias": pp.constant(dt_bias, jnp.float32, ("inner",)),
+        "d_skip": pp.ones((H,), jnp.float32, ("inner",)),
+        "norm_scale": pp.ones((d_inner,), dt, ("inner",)),
+        "out_proj": pp.normal(ks[4], (d_inner, cfg.d_model), s_out, dt,
+                              ("inner", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B, L, C); w: (W, C); depthwise causal conv + SiLU."""
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(W))
+    return jax.nn.silu(y + b[None, None, :])
+
+
+def _split_proj(zxbcdt, cfg: ArchConfig):
+    sc = cfg.ssm
+    d_inner, H, conv_dim, _ = ssm_dims(cfg)
+    gn = sc.n_groups * sc.d_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim:]
+    return z, xbc, dt_raw
+
+
+def _expand_groups(t, H: int, n_groups: int):
+    """(B, L, G*N) -> (B, L, H, N) by repeating each group over its heads."""
+    B, L = t.shape[0], t.shape[1]
+    N = t.shape[-1] // n_groups
+    t = t.reshape(B, L, n_groups, N)
+    rep = H // n_groups
+    return jnp.repeat(t, rep, axis=2)
+
+
+def apply_ssm(p, x, cfg: ArchConfig, sh: Sharder, *, return_state: bool = False):
+    """Full-sequence SSD mixer.  x: (B, L, d_model)."""
+    sc = cfg.ssm
+    cdt = dtype_of(cfg.compute_dtype)
+    d_inner, H, conv_dim, _ = ssm_dims(cfg)
+    B_, L, _ = x.shape
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(cdt))
+    zxbcdt = sh.constrain(zxbcdt, ("batch", None, "inner"))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc_raw = xbc
+    xbc = _causal_conv(xbc, p["conv_w"].astype(cdt), p["conv_b"].astype(cdt))
+    xs = xbc[..., :d_inner]
+    gn = sc.n_groups * sc.d_state
+    Bm = _expand_groups(xbc[..., d_inner:d_inner + gn], H, sc.n_groups)
+    Cm = _expand_groups(xbc[..., d_inner + gn:], H, sc.n_groups)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"][None, None, :])          # (B,L,H)
+    A = -jnp.exp(p["a_log"])                                    # (H,)
+    a = A[None, None, :] * dt
+    xh = xs.reshape(B_, L, H, sc.head_dim)
+    xh = sh.constrain(xh, ("batch", None, "inner", None))
+    y, h_final = kops.ssd(xh, dt, a, Bm, Cm, chunk=min(sc.chunk_size, L))
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, L, d_inner).astype(cdt)
+    # gated RMSNorm
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + 1e-6) *
+         p["norm_scale"].astype(jnp.float32)).astype(cdt)
+    out = jnp.einsum("blk,kd->bld", g, p["out_proj"].astype(cdt))
+    out = sh.constrain(out, ("batch", "seq", None))
+    if return_state:
+        W = sc.d_conv
+        conv_state = xbc_raw[:, L - (W - 1):, :].astype(jnp.float32)
+        return out, {"ssm": h_final, "conv": conv_state}
+    return out
+
+
+def init_ssm_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
+    sc = cfg.ssm
+    d_inner, H, conv_dim, _ = ssm_dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, sc.head_dim, sc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, sc.d_conv - 1, conv_dim), jnp.float32),
+    }
+
+
+def apply_ssm_decode(p, x, state: Dict[str, jnp.ndarray], cfg: ArchConfig,
+                     sh: Sharder) -> Tuple[jax.Array, Dict[str, jnp.ndarray]]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    sc = cfg.ssm
+    cdt = dtype_of(cfg.compute_dtype)
+    d_inner, H, conv_dim, _ = ssm_dims(cfg)
+    B_ = x.shape[0]
+    zxbcdt = jnp.einsum("bld,dk->blk", x, p["in_proj"].astype(cdt))
+    z, xbc, dt_raw = _split_proj(zxbcdt, cfg)
+    xbc_t = xbc[:, 0]                                          # (B, conv_dim)
+    # rolling causal conv
+    W = sc.d_conv
+    conv_in = jnp.concatenate([state["conv"].astype(cdt),
+                               xbc_t[:, None, :]], axis=1)     # (B, W, C)
+    w = p["conv_w"].astype(cdt)
+    y_conv = jnp.einsum("bwc,wc->bc", conv_in, w) + p["conv_b"].astype(cdt)
+    xbc_t = jax.nn.silu(y_conv)
+    new_conv = conv_in[:, 1:, :].astype(state["conv"].dtype)
+
+    xs = xbc_t[..., :d_inner]
+    gn = sc.n_groups * sc.d_state
+    Bm = _expand_groups(xbc_t[:, None, d_inner:d_inner + gn], H, sc.n_groups)[:, 0]
+    Cm = _expand_groups(xbc_t[:, None, d_inner + gn:], H, sc.n_groups)[:, 0]
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"][None, :])
+    A = -jnp.exp(p["a_log"])
+    a = A[None, :] * dt
+    xh = xs.reshape(B_, H, sc.head_dim)
+    y, new_ssm = kops.ssd_decode_step(state["ssm"], xh, dt, a, Bm, Cm)
+    y = y + p["d_skip"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, 1, d_inner).astype(cdt)
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    g = (gf * jax.lax.rsqrt(var + 1e-6) *
+         p["norm_scale"].astype(jnp.float32)).astype(cdt)
+    out = jnp.einsum("blk,kd->bld", g, p["out_proj"].astype(cdt))
+    return out, {"ssm": new_ssm, "conv": new_conv}

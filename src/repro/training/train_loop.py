@@ -1,0 +1,89 @@
+"""Train-step builder with tenant-microbatch accumulation.
+
+The paper's multi-tenancy maps to training as the microbatch loop: the global
+batch is split into ``cfg.microbatches`` tenant chunks processed sequentially
+per device, so each tenant's host->device staging can overlap the previous
+tenant's compute (the data pipeline side of that overlap lives in
+:mod:`repro.core.transfer`).  The loop also bounds activation memory.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ArchConfig
+from repro.distributed.sharding import Sharder
+from repro.models.model import ModelBundle
+from repro.training.optimizer import Optimizer, lr_schedule, make_optimizer
+
+
+def init_train_state(bundle: ModelBundle, opt: Optimizer, params) -> Dict[str, Any]:
+    return {"params": params, "opt": opt.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def build_train_step(bundle: ModelBundle, sh: Sharder,
+                     opt: Optional[Optimizer] = None,
+                     lr_fn: Optional[Callable] = None,
+                     donate: bool = True) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics) (un-jitted)."""
+    cfg = bundle.cfg
+    opt = opt or make_optimizer(cfg)
+    lr_fn = lr_fn or lr_schedule(cfg)
+    n_mb = max(1, cfg.microbatches)
+
+    def loss_of(params, batch):
+        return bundle.loss_fn(params, batch, sh)
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        if n_mb == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+        else:
+            def split_mb(x):
+                b = x.shape[0]
+                assert b % n_mb == 0, (b, n_mb)
+                return x.reshape((n_mb, b // n_mb) + x.shape[1:])
+
+            mbs = jax.tree.map(split_mb, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                (loss, metrics), g = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + loss, a_acc + metrics["aux"]), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum, aux_sum), _ = jax.lax.scan(
+                accum, (g0, jnp.zeros(()), jnp.zeros(())), mbs)
+            grads = jax.tree.map(lambda g: g / n_mb, grads)
+            loss = loss_sum / n_mb
+            metrics = {"xent": loss - aux_sum / n_mb, "aux": aux_sum / n_mb}
+
+        gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                             for g in jax.tree.leaves(grads)))
+        # global-norm clip at 1.0
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        metrics = dict(metrics, loss=loss, grad_norm=gnorm, lr=lr)
+        return new_state, metrics
+
+    return train_step
+
+
+def build_eval_step(bundle: ModelBundle, sh: Sharder) -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = bundle.loss_fn(params, batch, sh)
+        return dict(metrics, loss=loss)
+    return eval_step

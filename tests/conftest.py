@@ -1,0 +1,14 @@
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import settings
+    settings.register_profile("repro", deadline=None, max_examples=25)
+    settings.load_profile("repro")
+except ImportError:
+    pass
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,116 @@
+"""Checkpoint save/restore, atomicity, GC, and failure recovery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.fault import (HeartbeatMonitor, StragglerDetector,
+                                     run_with_recovery)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 8)),
+            "nested": {"b": jnp.arange(10, dtype=jnp.int32),
+                       "c": jnp.float32(3.5)},
+            "step": jnp.int32(7)}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 10, t)
+    assert ckpt.latest_step(tmp_path) == 10
+    r = ckpt.restore(tmp_path, 10, t)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save(tmp_path):
+    t = _tree()
+    th = ckpt.save_async(tmp_path, 5, t)
+    th.join()
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_gc_keeps_last(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, t, keep_last=2)
+    assert ckpt.available_steps(tmp_path) == [4, 5]
+
+
+def test_partial_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ckpt.save(tmp_path, 1, t)
+    # fake a partial write: directory without .done marker
+    (tmp_path / "step_2").mkdir()
+    (tmp_path / "step_2" / "manifest.json").write_text("{}")
+    assert ckpt.latest_step(tmp_path) == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(tmp_path, 1, _tree())
+    bad = {"a": jnp.zeros((5, 8)), "nested": {"b": jnp.zeros(10, jnp.int32),
+                                              "c": jnp.float32(0)},
+           "step": jnp.int32(0)}
+    with pytest.raises(AssertionError):
+        ckpt.restore(tmp_path, 1, bad)
+
+
+def test_run_with_recovery_restarts(tmp_path):
+    """Inject a failure at step 7; the loop restores step 5 and completes."""
+    crashed = {"done": False}
+
+    def step_fn(state, i):
+        if i == 7 and not crashed["done"]:
+            crashed["done"] = True
+            raise RuntimeError("injected device loss")
+        return {"x": state["x"] + 1.0}
+
+    state = {"x": jnp.float32(0)}
+    rep = run_with_recovery(step_fn, state, num_steps=10,
+                            ckpt_dir=tmp_path, save_every=5, max_failures=2)
+    assert rep.steps_done == 10
+    assert rep.failures == 1
+    assert rep.restarts == [7]
+    final = ckpt.restore(tmp_path, 10, state)
+    assert float(final["x"]) == 10.0
+
+
+def test_recovery_gives_up(tmp_path):
+    def step_fn(state, i):
+        if i >= 3:
+            raise RuntimeError("permafail")
+        return state
+
+    ckpt.save(tmp_path, 3, {"x": jnp.float32(0)})
+    with pytest.raises(RuntimeError):
+        run_with_recovery(step_fn, {"x": jnp.float32(0)}, 10, tmp_path,
+                          save_every=100, max_failures=2)
+
+
+def test_heartbeat():
+    hb = HeartbeatMonitor(timeout_s=0.0)
+    assert hb.suspect()
+    hb2 = HeartbeatMonitor(timeout_s=1e6)
+    assert not hb2.suspect()
+
+
+def test_straggler_detector_flags_slow_tenant():
+    det = StragglerDetector(alpha=0.5, z_threshold=1.5)
+    flagged = []
+    for _ in range(10):
+        flagged = det.update({0: 1.0, 1: 1.0, 2: 1.0, 3: 10.0})
+    assert flagged == [3]
+    pri = det.staging_priority()
+    assert pri[3] > pri[0]
+
+
+def test_elastic_restore_smaller_mesh(tmp_path):
+    """Save from a '4-device' mesh layout, restore onto 1 device (pod loss):
+    restore() reshards via device_put with new shardings (None here)."""
+    t = {"w": jnp.arange(64, dtype=jnp.float32).reshape(8, 8)}
+    ckpt.save(tmp_path, 1, t)
+    r = ckpt.restore(tmp_path, 1, t, shardings=None)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))

@@ -1,0 +1,57 @@
+"""Unit tests for the dry-run accounting tools (HLO collective parser,
+extrapolation) — no device work."""
+import pytest
+
+from repro.launch import dryrun
+
+
+SAMPLE_HLO = """
+HloModule jit_step
+  %x = f32[16,4096]{1,0} parameter(0)
+  %ag = f32[256,4096]{1,0} all-gather(f32[16,4096]{1,0} %x), replica_groups={}
+  %ar = f32[16,4096]{1,0} all-reduce(%x), to_apply=%add
+  %tup = (f32[8,128]{1,0}, f32[8,128]{1,0}) all-reduce(%a, %b), to_apply=%add
+  %a2a = f32[16,64]{1,0} all-to-all(%x), dimensions={0}
+  %cp = f32[4,4]{1,0} collective-permute(%y), source_target_pairs={{0,1}}
+  %ags = f32[32,32]{1,0} all-gather-start(f32[16,32]{1,0} %z)
+  %agd = f32[32,32]{1,0} all-gather-done(%ags)
+  %fusion.1 = f32[99,99]{1,0} fusion(%all-reduce.7, %c), kind=kLoop
+  %gte = f32[1,1]{0,1} get-tuple-element(%all-reduce.8), index=0
+"""
+
+
+def test_parser_counts_only_defining_instructions():
+    c = dryrun.parse_collectives(SAMPLE_HLO)
+    assert c["all-gather"]["count"] == 2          # %ag and %ags (-start)
+    assert c["all-reduce"]["count"] == 2          # %ar and %tup (not -done/uses)
+    assert c["all-to-all"]["count"] == 1
+    assert c["collective-permute"]["count"] == 1
+
+
+def test_parser_payloads():
+    c = dryrun.parse_collectives(SAMPLE_HLO)
+    assert c["all-gather"]["bytes"] == 256 * 4096 * 4 + 32 * 32 * 4
+    # ring all-reduce counted at 2x payload; tuple payloads summed
+    assert c["all-reduce"]["bytes"] == 2 * (16 * 4096 * 4) + 2 * (2 * 8 * 128 * 4)
+    assert c["all-to-all"]["bytes"] == 16 * 64 * 4
+    assert c["total_bytes"] == sum(
+        v["bytes"] for k, v in c.items() if isinstance(v, dict))
+
+
+def test_extrapolation_linear():
+    mk = lambda f, ag: {"flops": f, "bytes_accessed": 10 * f,
+                        "transcendentals": 0.0,
+                        "collectives": {k: {"count": 1 if k == "all-gather" else 0,
+                                            "bytes": ag if k == "all-gather" else 0}
+                                        for k in dryrun.COLL_KINDS}}
+    v1, v2 = mk(100.0, 50), mk(160.0, 80)
+    ex = dryrun._extrapolate(v1, v2, 10)
+    assert ex["flops"] == pytest.approx(100 + 60 * 9)
+    assert ex["collectives"]["all-gather"]["bytes"] == 50 + 30 * 9
+    assert ex["collectives"]["total_bytes"] == 50 + 30 * 9
+
+
+def test_shape_bytes():
+    assert dryrun._shape_bytes("bf16", "4,8") == 64
+    assert dryrun._shape_bytes("f32", "") == 4     # scalar
+    assert dryrun._shape_bytes("nosuch", "4") == 0

@@ -1,0 +1,98 @@
+"""Optimizers: numerics, state sharding axes, schedules."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.training.optimizer import adafactor, adamw, lr_schedule
+
+
+def _quad_problem():
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+@pytest.mark.parametrize("make_opt", [lambda: adamw(weight_decay=0.0),
+                                      lambda: adafactor()])
+def test_optimizers_converge_on_quadratic(make_opt):
+    params, loss, target = _quad_problem()
+    opt = make_opt()
+    state = opt.init(params)
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, state, params, jnp.float32(0.05))
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=0.15)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = adamw(weight_decay=0.0)
+    params = {"w": jnp.zeros(4)}
+    state = opt.init(params)
+    g = {"w": jnp.asarray([1.0, -1.0, 2.0, -3.0])}
+    new_p, _ = opt.update(g, state, params, jnp.float32(0.1))
+    # bias-corrected adam: first step ~= -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               -0.1 * np.sign(np.asarray(g["w"])), rtol=1e-3)
+
+
+def test_adamw_weight_decay_decoupled():
+    opt = adamw(weight_decay=0.5)
+    params = {"w": jnp.ones(2)}
+    state = opt.init(params)
+    g = {"w": jnp.zeros(2)}
+    new_p, _ = opt.update(g, state, params, jnp.float32(0.1))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), 1.0 - 0.1 * 0.5,
+                               rtol=1e-5)
+
+
+def test_adafactor_factored_state_shapes():
+    opt = adafactor(min_dim_factored=4)
+    params = {"big": jnp.zeros((8, 16)), "small": jnp.zeros(3),
+              "stack": jnp.zeros((2, 8, 16))}
+    st = opt.init(params)
+    assert st["v"]["big"]["vr"].shape == (8,)
+    assert st["v"]["big"]["vc"].shape == (16,)
+    assert st["v"]["stack"]["vr"].shape == (2, 8)
+    assert st["v"]["stack"]["vc"].shape == (2, 16)
+    assert st["v"]["small"]["v"].shape == (3,)
+    assert st["m"]["big"].dtype == jnp.bfloat16
+
+
+def test_state_axes_mirror_param_axes():
+    opt_a = adamw()
+    p_axes = {"w": ("fsdp", "heads"), "b": (None,)}
+    p_shapes = {"w": jax.ShapeDtypeStruct((256, 256), jnp.float32),
+                "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    ax = opt_a.state_axes(p_axes, p_shapes)
+    assert ax["m"] == p_axes and ax["v"] == p_axes
+
+    opt_f = adafactor()
+    axf = opt_f.state_axes(p_axes, p_shapes)
+    assert axf["v"]["w"] == {"vr": ("fsdp",), "vc": ("heads",)}
+    assert axf["v"]["b"] == {"v": (None,)}
+
+
+def test_lr_schedule_shape():
+    cfg = get_config("internlm2-1.8b")
+    lr = lr_schedule(cfg, warmup=10, total=100)
+    vals = [float(lr(jnp.int32(s))) for s in (0, 5, 10, 50, 100)]
+    assert vals[0] == 0.0
+    assert vals[1] < vals[2]
+    assert vals[2] >= vals[3] >= vals[4] > 0.0
+
+
+def test_state_dtype_is_fp32_for_bf16_params():
+    opt = adamw()
+    params = {"w": jnp.zeros((4, 4), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["m"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+    new_p, _ = opt.update(g, st, params, jnp.float32(0.1))
+    assert new_p["w"].dtype == jnp.bfloat16

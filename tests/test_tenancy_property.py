@@ -1,0 +1,91 @@
+"""Property-based tests (hypothesis) for the tenancy/transfer invariants."""
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import perfmodel as pm
+from repro.core.tenancy import TenancyConfig, VirtualDevicePool
+from repro.core.transfer import reorder_for_stragglers
+from repro.training.grad_compression import (compress_with_feedback,
+                                             dequantize_int8, quantize_int8)
+
+
+@given(st.integers(1, 16), st.integers(1, 8), st.integers(0, 5000))
+def test_plan_partitions_exactly(n_pdev, tenants, items):
+    pool = VirtualDevicePool(TenancyConfig(n_pdev, tenants))
+    tasks = pool.plan(items)
+    assert len(tasks) == n_pdev * tenants
+    covered = sorted((t.start, t.stop) for t in tasks)
+    pos = 0
+    for a, b in covered:
+        assert a == pos and b >= a
+        pos = b
+    assert pos == items
+    # balanced within 1
+    sizes = [t.size for t in tasks]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(st.integers(1, 16), st.integers(1, 8))
+def test_plan_is_slot_major(n_pdev, tenants):
+    pool = VirtualDevicePool(TenancyConfig(n_pdev, tenants))
+    tasks = pool.plan(n_pdev * tenants * 3)
+    slots = [t.slot for t in tasks]
+    assert slots == sorted(slots)  # all slot-0 tenants staged first
+    for t in tasks:
+        assert pool.vdev_to_pdev(t.vdev) == (t.pdev, t.slot)
+
+
+@given(st.integers(1, 12), st.integers(1, 12))
+def test_memory_model_monotone_in_tenants(n_pdev, tenants):
+    m = pm.PerfModelInputs(net=pm.FDR)
+    a = pm.memory_per_pdev_mb(n_pdev, tenants, m)
+    b = pm.memory_per_pdev_mb(n_pdev, tenants + 1, m)
+    assert b > a  # more tenants per pdev always needs more memory
+
+
+@given(st.integers(2, 12), st.integers(1, 6))
+def test_exec_time_monotone_in_pdevs(n_pdev, tenants):
+    # with more pdevs at fixed tenancy, compute falls; transfer overhead grows
+    m = pm.PerfModelInputs(net=pm.FDR)
+    t = pm.exec_time_multitenancy(n_pdev, tenants, m)
+    assert t >= pm.t_computation(n_pdev, m)
+    assert t >= pm.t_transfer(n_pdev * tenants, m) / tenants
+
+
+@given(st.lists(st.floats(-1e3, 1e3), min_size=1, max_size=300),
+       st.sampled_from([16, 64, 256]))
+def test_quantize_roundtrip_error_bound(vals, block):
+    x = np.asarray(vals, np.float32)
+    q, s = quantize_int8(x, block)
+    y = np.asarray(dequantize_int8(q, s, x.shape))
+    # error per element bounded by half a quantisation step of its block
+    flat = np.pad(x, (0, (-x.size) % block)).reshape(-1, block)
+    steps = np.abs(flat).max(1) / 127.0
+    bound = np.repeat(np.maximum(steps, 1e-12), block)[:x.size] * 0.51
+    assert np.all(np.abs(x - y) <= bound + 1e-6)
+
+
+@given(st.integers(0, 2**31 - 1))
+def test_error_feedback_reduces_bias(seed):
+    rng = np.random.default_rng(seed)
+    g = rng.normal(size=64).astype(np.float32)
+    resid = np.zeros_like(g)
+    total_sent = np.zeros_like(g)
+    for _ in range(8):
+        q, s, resid = compress_with_feedback(g, resid)
+        total_sent += np.asarray(dequantize_int8(q, s, g.shape))
+    # sum of dequantised messages ~ 8*g up to one residual's worth of error
+    err = np.abs(total_sent - 8 * g)
+    step = np.abs(g).max() / 127.0 + 1e-9
+    assert err.max() <= 8 * step
+
+
+@given(st.integers(1, 8), st.integers(1, 4))
+def test_straggler_reorder_is_permutation(n_pdev, tenants):
+    pool = VirtualDevicePool(TenancyConfig(n_pdev, tenants))
+    tasks = pool.plan(100)
+    hist = {t.vdev: float(t.vdev % 3) for t in tasks}
+    re = reorder_for_stragglers(tasks, hist)
+    assert sorted(t.vdev for t in re) == sorted(t.vdev for t in tasks)
+    # slowest first
+    assert hist[re[0].vdev] == max(hist.values())
