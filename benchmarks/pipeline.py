@@ -1,0 +1,147 @@
+"""Executable-pipeline benchmarks: what the overlap actually buys.
+
+Two A/B comparisons on the real (CPU-reduced) stack:
+
+* **blocking vs overlapped** — the legacy stage-all-then-compute schedule
+  against :class:`repro.core.pipeline.PipelineExecutor` (stage k+1 under
+  compute k), same tenancy, same data.  Emits per-tenant transfer/compute
+  windows so the harness can verify transfer(k+1) starts before compute(k)
+  ends, plus resident-table-cache and trace-count rows for the repeated-run
+  (serving) regime.
+* **gather vs one-hot** — the two aggregate_loss Pallas lookup strategies in
+  interpret mode.  Interpret-mode wall time is an emulation artefact, not
+  device time (the numbers rank Python-level op counts); the structural win
+  of the one-hot path (MXU matmul instead of per-lane gather) only shows on
+  real TPUs — the rows exist to track both variants' health and relative
+  drift.
+
+Run with ``python -m benchmarks.run --only pipeline [--json out.json]``.
+Scale trials/devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _best_of(fn, n: int = 3) -> float:
+    best = float("inf")
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _min_ab(fn_a, fn_b, n: int = 9) -> Tuple[float, float, float, float]:
+    """Interleaved A/B wall times; returns (min_a, min_b, med_a, med_b).
+
+    The minimum is the noise-robust estimator on shared/throttled CPU hosts
+    (scheduling noise is strictly additive); the median is reported alongside
+    for drift tracking."""
+    ts_a, ts_b = [], []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        fn_a()
+        ts_a.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        fn_b()
+        ts_b.append(time.perf_counter() - t0)
+    return (min(ts_a), min(ts_b),
+            sorted(ts_a)[n // 2], sorted(ts_b)[n // 2])
+
+
+def bench_pipeline_overlap() -> List[Row]:
+    import jax
+    from repro.configs.risk_app import RiskAppConfig
+    from repro.core.tenancy import TenancyConfig
+    from repro.risk.analysis import AggregateRiskAnalysis
+    from repro.risk.tables import generate
+
+    devices = jax.devices()
+    n_pdev = len(devices)
+    # transfer-heavy shape: big YET, one cache-resident ELT, single event
+    # chunk — staging is a large share of the step, which is the regime the
+    # overlap targets (paper Fig 13; on TPU the DMA engines make this the
+    # common case, on CPU hosts compute shares cores with the memcpy)
+    cfg = dataclasses.replace(RiskAppConfig().reduced(), num_trials=131072,
+                              events_per_trial=128, event_catalog=512,
+                              num_elts=1, chunk_events=128)
+    tables = generate(cfg, seed=0)
+    tenancy = TenancyConfig(n_pdev, 2, "sequential")
+    ara = AggregateRiskAnalysis(cfg, tenancy, devices=devices)
+
+    # warm both schedules (compile once; uniform padding -> one trace)
+    ara.run_tenant_chunked(tables, overlapped=False)
+    ara.run_tenant_chunked(tables, overlapped=True)
+
+    out: List[Row] = []
+    t_blk, t_ovl, med_blk, med_ovl = _min_ab(
+        lambda: ara.run_tenant_chunked(tables, overlapped=False),
+        lambda: ara.run_tenant_chunked(tables, overlapped=True))
+    tag = f"{n_pdev}p_2v"
+    out.append((f"pipeline/blocking_{tag}", t_blk * 1e6,
+                f"trials={cfg.num_trials};median_us={med_blk * 1e6:.0f}"))
+    from repro.core.pipeline import timeline_overlaps
+    rep = ara.run_tenant_chunked(tables, overlapped=True)
+    # falsifiable overlap signal: transfer(k+1) began inside compute(k)'s
+    # execution window (see repro.core.pipeline module docstring).  A
+    # blocking schedule scores 0 pairs; noise on a shared host can drain
+    # isolated pairs early, so "realised" = majority of pairs overlapped.
+    overlaps = timeline_overlaps(rep.timeline)
+    out.append((f"pipeline/overlapped_{tag}", t_ovl * 1e6,
+                f"speedup={t_blk / t_ovl:.2f}x;"
+                f"median_us={med_ovl * 1e6:.0f};"
+                f"overlap_pairs={sum(overlaps)}/{len(overlaps)};"
+                f"overlap_realised={sum(overlaps) > len(overlaps) // 2}"))
+    for tl in rep.timeline:
+        out.append((f"pipeline/tenant_v{tl.vdev}", tl.compute_s * 1e6,
+                    f"pdev={tl.pdev};slot={tl.slot};"
+                    f"tr={tl.transfer_start * 1e3:.2f}-"
+                    f"{tl.transfer_end * 1e3:.2f}ms;"
+                    f"cp={tl.compute_start * 1e3:.2f}-"
+                    f"{tl.compute_end * 1e3:.2f}ms"))
+
+    # repeated-run regime: resident tables + trace cache must both hit
+    up0, tr0 = ara.table_uploads, ara.trace_count
+    t_rerun = _best_of(lambda: ara.run_tenant_chunked(tables), n=2)
+    out.append(("pipeline/rerun_resident", t_rerun * 1e6,
+                f"table_uploads_delta={ara.table_uploads - up0};"
+                f"trace_delta={ara.trace_count - tr0}"))
+    return out
+
+
+def bench_kernel_variants() -> List[Row]:
+    import jax.numpy as jnp
+    from repro.kernels.aggregate_loss import aggregate_loss_pallas
+    from repro.kernels.ref import aggregate_loss_chunked_ref
+
+    rng = np.random.default_rng(0)
+    T, K, M, cat = 256, 64, 8, 2048
+    ids = jnp.asarray(rng.integers(0, cat + 1, (T, K)).astype(np.int32))
+    elt = np.abs(rng.normal(size=(cat + 1, M))).astype(np.float32)
+    elt[0] = 0.0
+    elt = jnp.asarray(elt)
+    occ_r = jnp.asarray((np.abs(rng.normal(size=M)) * 0.5).astype(np.float32))
+    occ_l = jnp.asarray((np.abs(rng.normal(size=M)) + 1.0).astype(np.float32))
+    args = (ids, elt, occ_r, occ_l, np.float32(K * 0.1), np.float32(K * 0.8))
+    want = np.asarray(aggregate_loss_chunked_ref(*args, chunk=32))
+
+    out: List[Row] = []
+    for variant in ("gather", "onehot"):
+        run = lambda: aggregate_loss_pallas(*args, chunk=32, trial_block=64,
+                                            variant=variant)
+        got = np.asarray(run())                      # warm + validate
+        ok = bool(np.allclose(got, want, rtol=1e-5, atol=1e-3))
+        t = _best_of(run, n=2)
+        out.append((f"pipeline/agg_variant_{variant}_interp", t * 1e6,
+                    f"matches_ref={ok};T={T};K={K};cat={cat}"))
+    return out
+
+
+ALL = [bench_pipeline_overlap, bench_kernel_variants]

@@ -1,10 +1,18 @@
 # One function per paper table. Print ``name,us_per_call,derived`` CSV.
-"""Benchmark harness: every paper table/figure + kernels + roofline rows.
+"""Benchmark harness: every paper table/figure + kernels + pipeline rows.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run --only fig13,roofline
+    PYTHONPATH=src python -m benchmarks.run --only pipeline \
+        --json BENCH_pipeline.json
+
+``--json`` additionally writes the rows as a machine-readable perf record
+(list of {name, us_per_call, derived} plus run metadata) so the perf
+trajectory — e.g. blocking vs overlapped pipeline wall time and per-tenant
+transfer/compute windows — can be tracked across PRs.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -13,14 +21,16 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substring filters on bench names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows to PATH as a JSON perf record")
     args = ap.parse_args()
     filters = args.only.split(",") if args.only else None
 
-    from benchmarks import paper_figures, roofline
-    benches = list(paper_figures.ALL) + [roofline.run]
+    from benchmarks import paper_figures, pipeline, roofline
+    benches = list(paper_figures.ALL) + list(pipeline.ALL) + [roofline.run]
 
     print("name,us_per_call,derived")
-    failures = 0
+    rows, errors = [], []
     for bench in benches:
         bname = bench.__module__ + "." + bench.__name__
         if filters and not any(f in bname for f in filters):
@@ -28,11 +38,28 @@ def main() -> None:
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.2f},{derived}")
-        except Exception:
-            failures += 1
+                rows.append({"name": name, "us_per_call": us,
+                             "derived": derived, "bench": bname})
+        except Exception as e:
+            errors.append({"bench": bname, "error": repr(e)})
             print(f"{bname},0.0,ERROR", file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
-    if failures:
+
+    if args.json is not None:
+        import jax
+        # rows carry their source bench and errors name the failed benches,
+        # so a trajectory consumer can tell partial coverage from healthy
+        record = {
+            "schema": "repro-bench-rows/v1",
+            "devices": [str(d) for d in jax.devices()],
+            "failures": len(errors),
+            "errors": errors,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(record, f, indent=2)
+        print(f"wrote {len(rows)} rows to {args.json}", file=sys.stderr)
+    if errors:
         sys.exit(1)
 
 

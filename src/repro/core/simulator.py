@@ -10,6 +10,11 @@ Reproduces the paper's artefacts exactly (tests/test_simulator.py):
   * Fig 11b  — 4 pdev, sequential, 1 tenant: makespan = 88 x 35 ms cells
   * Fig 13a  — 2 tenants/pdev: 80 cells;  Fig 13b — 4 tenants: 76 cells
   * Fig 12/14 — utilisation & energy of each schedule
+
+The *executable* counterpart of this simulated schedule is
+:mod:`repro.core.pipeline` — see the simulator-vs-executable overlap
+contract documented there; benchmarks/pipeline.py measures how closely the
+real stack tracks the model.
 """
 from __future__ import annotations
 

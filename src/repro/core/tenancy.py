@@ -33,16 +33,29 @@ class TenancyConfig:
 
 @dataclasses.dataclass(frozen=True)
 class TenantTask:
-    """One virtual device's slice of the trial axis."""
+    """One virtual device's slice of the trial axis.
+
+    ``padded_size`` (when set by :meth:`VirtualDevicePool.plan` with
+    ``uniform=True``) is the uniform per-vdev shape every staged chunk is
+    padded up to, so an uneven remainder does not produce a second jit trace:
+    the executor pads the staged slice with neutral rows and slices the
+    result back to ``size``.
+    """
     vdev: int
     pdev: int
     slot: int                        # tenant index within its pdev
     start: int                       # trial-range [start, stop)
     stop: int
+    padded_size: Optional[int] = None
 
     @property
     def size(self) -> int:
         return self.stop - self.start
+
+    @property
+    def pad(self) -> int:
+        """Neutral rows appended when staged (0 without uniform planning)."""
+        return 0 if self.padded_size is None else self.padded_size - self.size
 
 
 class VirtualDevicePool:
@@ -67,17 +80,30 @@ class VirtualDevicePool:
         return self.devices[pdev] if self.devices is not None else None
 
     # ------------------------------------------------------------------
-    def plan(self, num_items: int) -> List[TenantTask]:
+    def uniform_size(self, num_items: int) -> int:
+        """Per-vdev chunk shape when every slice is padded to a common size
+        (= ceil(num_items / n_vdev)); one shape -> one jit trace."""
+        nv = self.cfg.n_vdev
+        return -(-num_items // nv)
+
+    def plan(self, num_items: int, uniform: bool = False) -> List[TenantTask]:
         """Even split of the work axis over all vdevs (remainder spread over
         the first vdevs), in *staging order*: slot-major so that every pdev's
-        first tenant is staged before any second tenant."""
+        first tenant is staged before any second tenant.
+
+        With ``uniform=True`` every task carries ``padded_size`` =
+        :meth:`uniform_size`, so stagers pad ragged remainders to one common
+        chunk shape instead of retracing the jitted step per remainder shape.
+        """
         nv = self.cfg.n_vdev
         base, rem = divmod(num_items, nv)
         sizes = [base + (1 if v < rem else 0) for v in range(nv)]
+        padded = self.uniform_size(num_items) if uniform else None
         tasks, off = [], 0
         for v in range(nv):
             pdev, slot = self.vdev_to_pdev(v)
-            tasks.append(TenantTask(v, pdev, slot, off, off + sizes[v]))
+            tasks.append(TenantTask(v, pdev, slot, off, off + sizes[v],
+                                    padded_size=padded))
             off += sizes[v]
         assert off == num_items
         return tasks

@@ -10,6 +10,12 @@ Two modes:
 `jax.device_put` is asynchronous, so SEQUENTIAL staging naturally overlaps
 the already-dispatched tenant's compute.  The engine records per-chunk wall
 times for the benchmark harness.
+
+The engine exposes two levels of API: non-blocking :meth:`StagingEngine.put`
+/ :meth:`StagingEngine.wait` primitives that the overlapped executor in
+:mod:`repro.core.pipeline` interleaves with compute dispatch (the paper's
+winning schedule), and the stage-everything :meth:`StagingEngine.stage`
+entry point (the pre-pipeline blocking schedule, kept for A/B benchmarks).
 """
 from __future__ import annotations
 
@@ -29,6 +35,7 @@ class StagedChunk:
     arrays: Any                   # device-resident pytree
     enqueue_s: float
     ready_s: Optional[float] = None
+    base_s: float = 0.0           # perf_counter() origin of the timestamps
 
 
 class StagingEngine:
@@ -44,6 +51,29 @@ class StagingEngine:
             return jax.tree.map(jax.numpy.asarray, host_tree)
         return jax.tree.map(lambda a: jax.device_put(a, device), host_tree)
 
+    # -- non-blocking primitives (used by core.pipeline) ----------------
+    def put(self, task: TenantTask, host_tree: Any,
+            t0: Optional[float] = None) -> StagedChunk:
+        """Enqueue one tenant chunk's host->device transfer (asynchronous:
+        ``jax.device_put`` returns immediately).  ``t0`` anchors the chunk's
+        timestamps; without it the enqueue instant is the origin."""
+        base = t0 if t0 is not None else time.perf_counter()
+        arrays = self._put(host_tree, self.pool.device_of(task.vdev))
+        return StagedChunk(task, arrays, time.perf_counter() - base,
+                           base_s=base)
+
+    def wait(self, chunk: StagedChunk, t0: Optional[float] = None) -> StagedChunk:
+        """Block until the chunk is device-resident; records the ready time
+        against the same origin ``put`` used (or an explicit ``t0``).
+        While the caller blocks here, previously dispatched compute keeps
+        running on its device — this is the pipeline's overlap point."""
+        jax.block_until_ready(chunk.arrays)
+        base = t0 if t0 is not None else chunk.base_s
+        chunk.ready_s = time.perf_counter() - base
+        self.log.append({"vdev": chunk.task.vdev, "ready_s": chunk.ready_s,
+                         "mode": self.mode})
+        return chunk
+
     def stage(self, tasks: Sequence[TenantTask],
               chunk_of: Callable[[TenantTask], Any],
               block: bool = False) -> List[StagedChunk]:
@@ -53,28 +83,25 @@ class StagingEngine:
         sequential mode each chunk blocks until on-device before the next is
         enqueued (full-bandwidth transfers); concurrent mode enqueues all and
         only then (optionally) waits.
+
+        This is the *stage-everything* entry point (the pre-pipeline blocking
+        path, kept for A/B benchmarking); the overlapped executor in
+        :mod:`repro.core.pipeline` drives :meth:`put`/:meth:`wait` directly so
+        compute dispatch can interleave with staging.
         """
         t0 = time.perf_counter()
         out: List[StagedChunk] = []
         if self.mode == "sequential":
             for t in tasks:
-                arrays = self._put(chunk_of(t), self.pool.device_of(t.vdev))
-                jax.block_until_ready(arrays)
-                now = time.perf_counter() - t0
-                out.append(StagedChunk(t, arrays, now, now))
-                self.log.append({"vdev": t.vdev, "ready_s": now,
-                                 "mode": "sequential"})
+                c = self.put(t, chunk_of(t), t0)
+                self.wait(c, t0)
+                out.append(c)
         else:
             for t in tasks:
-                arrays = self._put(chunk_of(t), self.pool.device_of(t.vdev))
-                out.append(StagedChunk(t, arrays,
-                                       time.perf_counter() - t0))
+                out.append(self.put(t, chunk_of(t), t0))
             if block:
                 for c in out:
-                    jax.block_until_ready(c.arrays)
-                    c.ready_s = time.perf_counter() - t0
-                    self.log.append({"vdev": c.task.vdev, "ready_s": c.ready_s,
-                                     "mode": "concurrent"})
+                    self.wait(c, t0)
         return out
 
 

@@ -16,8 +16,20 @@ TPU adaptation of the paper's GPU kernel (DESIGN.md §6):
   tiles and event chunks, and the layer aggregate terms apply on the last
   visit (revisiting-output accumulation).
 
-Validated in interpret mode against kernels.ref.aggregate_loss_chunked_ref
-over shape sweeps (tests/test_kernels_aggregate.py).
+Two lookup strategies over the same tiling (selectable via
+``kernels.ops.use_aggregate_variant`` / the ``variant=`` kwarg):
+
+* ``gather`` — per-lane ``jnp.take`` from the VMEM-resident ELT tile (the
+  original port of the paper's per-thread global-memory reads).
+* ``onehot`` — gather-free: local event ids expand to a one-hot matrix that
+  multiplies the ELT tile (``(Tb*C, rows_tile) @ (rows_tile, M)``), trading
+  the serial per-lane gather for an MXU matmul.  Out-of-tile ids map to the
+  all-zero one-hot row, so no separate validity masking of the gathered
+  losses is needed.
+
+Both are validated in interpret mode against
+kernels.ref.aggregate_loss_chunked_ref over shape sweeps
+(tests/test_kernels_aggregate.py).
 """
 from __future__ import annotations
 
@@ -28,6 +40,30 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.ops import AGG_VARIANTS as VARIANTS
+
+
+def _accumulate(occ_ret_ref, occ_lim_ref, agg_ref, out_ref, g, *,
+                r: int, j: int, n_cat: int, n_chunks: int):
+    """Shared epilogue: occurrence terms, YLT accumulation, aggregate terms.
+
+    ``g``: (Tb, C, M) losses gathered for this tile (zero where the event id
+    falls outside the tile).  Assumes occ_ret >= 0, so zero-loss entries
+    contribute nothing and an event's occurrence term is applied exactly once
+    (in its owning catalog tile).
+    """
+    # occurrence terms per ELT:  min(max(l - OccR, 0), OccL)
+    occ = jnp.clip(g - occ_ret_ref[...][None, None, :], 0.0, None)
+    occ = jnp.minimum(occ, occ_lim_ref[...][None, None, :])
+    out_ref[...] += occ.sum(axis=(1, 2))
+
+    @pl.when((r == n_cat - 1) & (j == n_chunks - 1))
+    def _agg():
+        # layer aggregate terms:  min(max(l_T - AggR, 0), AggL)
+        acc = out_ref[...]
+        acc = jnp.clip(acc - agg_ref[0], 0.0, None)
+        out_ref[...] = jnp.minimum(acc, agg_ref[1])
 
 
 def _kernel(ids_ref, elt_ref, occ_ret_ref, occ_lim_ref, agg_ref, out_ref, *,
@@ -49,25 +85,56 @@ def _kernel(ids_ref, elt_ref, occ_ret_ref, occ_lim_ref, agg_ref, out_ref, *,
     g = jnp.take(elt, localc.reshape(-1), axis=0)        # (Tb*C, M)
     g = g.reshape(tb, c, -1)
     g = jnp.where(valid[..., None], g, 0.0)
-    # occurrence terms per ELT:  min(max(l - OccR, 0), OccL)
-    occ = jnp.clip(g - occ_ret_ref[...][None, None, :], 0.0, None)
-    occ = jnp.minimum(occ, occ_lim_ref[...][None, None, :])
-    out_ref[...] += occ.sum(axis=(1, 2))
+    _accumulate(occ_ret_ref, occ_lim_ref, agg_ref, out_ref, g,
+                r=r, j=j, n_cat=n_cat, n_chunks=n_chunks)
 
-    @pl.when((r == n_cat - 1) & (j == n_chunks - 1))
-    def _agg():
-        # layer aggregate terms:  min(max(l_T - AggR, 0), AggL)
-        acc = out_ref[...]
-        acc = jnp.clip(acc - agg_ref[0], 0.0, None)
-        out_ref[...] = jnp.minimum(acc, agg_ref[1])
+
+def _kernel_onehot(ids_ref, elt_ref, occ_ret_ref, occ_lim_ref, agg_ref,
+                   out_ref, *, rows_tile: int, n_cat: int, n_chunks: int):
+    """Gather-free lookup: ids -> one-hot x ELT tile on the MXU.
+
+    Each event id in the tile's catalog range becomes a one-hot row; ids
+    outside the range (other tiles' events, clipped to -1) match no column
+    and yield a zero row, replacing the gather path's explicit masking."""
+    r = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when((r == 0) & (j == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[...]                                   # (Tb, C) int32
+    base = r * rows_tile
+    local = ids - base
+    valid = (local >= 0) & (local < rows_tile)
+    localv = jnp.where(valid, local, -1)
+    tb, c = ids.shape
+    cols = jax.lax.broadcasted_iota(jnp.int32, (tb * c, rows_tile), 1)
+    onehot = (localv.reshape(-1, 1) == cols).astype(jnp.float32)
+    g = jnp.dot(onehot, elt_ref[...],                    # (Tb*C, M) via MXU
+                preferred_element_type=jnp.float32)
+    g = g.reshape(tb, c, -1)
+    _accumulate(occ_ret_ref, occ_lim_ref, agg_ref, out_ref, g,
+                r=r, j=j, n_cat=n_cat, n_chunks=n_chunks)
+
+
+_KERNELS = {"gather": _kernel, "onehot": _kernel_onehot}
+assert set(_KERNELS) == set(VARIANTS), (
+    "kernel table out of sync with kernels.ops.AGG_VARIANTS")
 
 
 def aggregate_loss_pallas(event_ids, elt_losses, occ_ret, occ_lim, agg_ret,
                           agg_lim, *, chunk: int = 128,
                           trial_block: int = 256,
                           rows_tile: Optional[int] = None,
-                          interpret: bool = True):
-    """Drop-in equivalent of kernels.ref.aggregate_loss_chunked_ref."""
+                          interpret: bool = True,
+                          variant: str = "gather"):
+    """Drop-in equivalent of kernels.ref.aggregate_loss_chunked_ref.
+
+    ``variant``: "gather" (per-lane jnp.take) or "onehot" (gather-free
+    one-hot x ELT-tile matmul on the MXU)."""
+    if variant not in _KERNELS:
+        raise ValueError(f"variant {variant!r}: must be one of {VARIANTS}")
     T, K = event_ids.shape
     rows, M = elt_losses.shape
     chunk = min(chunk, K)
@@ -88,8 +155,8 @@ def aggregate_loss_pallas(event_ids, elt_losses, occ_ret, occ_lim, agg_ret,
     agg = jnp.stack([jnp.asarray(agg_ret, jnp.float32),
                      jnp.asarray(agg_lim, jnp.float32)])
 
-    kernel = functools.partial(_kernel, rows_tile=rows_tile, n_cat=n_cat,
-                               n_chunks=n_chunks)
+    kernel = functools.partial(_KERNELS[variant], rows_tile=rows_tile,
+                               n_cat=n_cat, n_chunks=n_chunks)
     return pl.pallas_call(
         kernel,
         grid=(n_cat, T // tb, n_chunks),

@@ -43,8 +43,25 @@ def _ssd_pallas_vjp(chunk: int, interpret: bool):
     f.defvjp(fwd, bwd)
     return f
 
+# single source of truth for aggregate_loss lookup strategies; the kernel
+# table in kernels/aggregate_loss.py is checked against it at import
+AGG_VARIANTS = ("gather", "onehot")
+
+
+def _env_agg_variant() -> str:
+    """Fail fast (at import) on a misconfigured REPRO_AGG_VARIANT instead of
+    deferring to an error — or, under ``python -O``, a silent fallback —
+    deep inside the Pallas dispatch."""
+    v = os.environ.get("REPRO_AGG_VARIANT", "gather")
+    if v not in AGG_VARIANTS:
+        raise ValueError(
+            f"REPRO_AGG_VARIANT={v!r}: must be one of {AGG_VARIANTS}")
+    return v
+
+
 _STATE = {"pallas": os.environ.get("REPRO_USE_PALLAS", "0") == "1",
-          "interpret": True}
+          "interpret": True,
+          "agg_variant": _env_agg_variant()}
 
 
 def use_pallas(on: bool, interpret: bool = True) -> None:
@@ -54,6 +71,20 @@ def use_pallas(on: bool, interpret: bool = True) -> None:
 
 def pallas_enabled() -> bool:
     return _STATE["pallas"]
+
+
+def use_aggregate_variant(name: str) -> None:
+    """Select the aggregate_loss Pallas lookup strategy: "gather" (per-lane
+    jnp.take) or "onehot" (gather-free one-hot x ELT matmul on the MXU).
+    Also settable via REPRO_AGG_VARIANT.  No effect on the jnp reference
+    path, which is lookup-strategy-free."""
+    if name not in AGG_VARIANTS:
+        raise ValueError(f"variant {name!r}: must be one of {AGG_VARIANTS}")
+    _STATE["agg_variant"] = name
+
+
+def aggregate_variant() -> str:
+    return _STATE["agg_variant"]
 
 
 # ---------------------------------------------------------------------------
@@ -86,11 +117,13 @@ def ssd_decode_step(state, x_t, dt_t, a_t, B_t, C_t):
 
 
 def aggregate_loss(event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim,
-                   chunk: int = 128):
+                   chunk: int = 128, variant: Optional[str] = None):
     """Year-loss per trial (paper Algorithm 3).
 
     Pads the event axis to a chunk multiple with event id 0 — the pad event
-    row of every ELT is zero by contract, so pads contribute no loss."""
+    row of every ELT is zero by contract, so pads contribute no loss.
+    ``variant`` overrides the configured Pallas lookup strategy (see
+    :func:`use_aggregate_variant`); ignored on the jnp reference path."""
     K = event_ids.shape[1]
     chunk = min(chunk, K)
     pad = (-K) % chunk
@@ -100,6 +133,7 @@ def aggregate_loss(event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim,
         from repro.kernels import aggregate_loss as _agg
         return _agg.aggregate_loss_pallas(
             event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim,
-            chunk=chunk, interpret=_STATE["interpret"])
+            chunk=chunk, interpret=_STATE["interpret"],
+            variant=variant or _STATE["agg_variant"])
     return _ref.aggregate_loss_chunked_ref(
         event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim, chunk=chunk)

@@ -1,21 +1,32 @@
 """Multi-tenant serving scheduler (the paper's second multi-tenancy reading:
 several applications share one physical accelerator).
 
-Each tenant owns a request queue; the scheduler round-robins *tenant slots*
-on the shared device, so tenant k+1's host-side batch assembly and staging
-overlap tenant k's on-device step — exactly the paper's sequential-transfer
-overlap, applied to serving.  Per-tenant accounting feeds the straggler
-detector and the planner's utilisation model.
+Each tenant owns a request queue; the scheduler cycles *tenant slots* on the
+shared device.  Batch assembly for the *next* tenant slot is pipelined: the
+scheduler pre-assembles slot k+1's padded batch before fetching slot k's
+responses, mirroring the stage(k+1)-under-compute(k) schedule the risk stack
+runs on :class:`repro.core.pipeline.PipelineExecutor` (the engine's generate
+loop is host-blocking, so here the overlap is batch-granular host work; true
+device-transfer overlap is the pipeline's domain — see the contract note in
+:mod:`repro.core.pipeline`).
+
+Slot selection is straggler-aware: with ``straggler_priority=True`` the
+scheduler serves the tenant with the slowest recent per-request time first
+(the serving analogue of ``reorder_for_stragglers``); otherwise plain
+round-robin.  Per-slot :class:`repro.core.pipeline.TenantTimeline` records
+(assembly window = transfer, generate window = compute) feed the benchmark
+harness and the planner's utilisation model.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core.pipeline import TenantTimeline
 from repro.core.tenancy import TenancyConfig
 from repro.distributed.fault import StragglerDetector
 from repro.serving.engine import GenerationResult, ServingEngine
@@ -38,31 +49,79 @@ class Response:
 
 
 class MultiTenantScheduler:
-    """Round-robin tenant batching over one shared engine."""
+    """Tenant-slot batching over one shared engine (round-robin or
+    straggler-priority), with pipelined next-slot batch assembly."""
 
     def __init__(self, engine: ServingEngine, max_batch: int = 8,
-                 tenancy: Optional[TenancyConfig] = None):
+                 tenancy: Optional[TenancyConfig] = None,
+                 straggler_priority: bool = False):
         self.engine = engine
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
+        self.straggler_priority = straggler_priority
         self.queues: Dict[str, Deque[Request]] = collections.defaultdict(
             collections.deque)
         self.detector = StragglerDetector()
         self.stats: Dict[str, Dict[str, float]] = collections.defaultdict(
             lambda: {"requests": 0, "tokens": 0, "busy_s": 0.0})
+        self.timeline: List[TenantTimeline] = []
         self._order: List[str] = []
+        self._slot_of: Dict[str, int] = {}
+        # next tenant slot's pre-assembled batch: (tenant, reqs, prompts,
+        # steps) — assembled while the previous slot's responses were being
+        # finalised (host-side stage-ahead)
+        self._prepared: Optional[Tuple[str, List[Request], np.ndarray, int]] \
+            = None
+        self._asm_window = (0.0, 0.0)
+        self._round_served: set = set()
+        self._recent: Dict[str, float] = {}   # EWMA per-request seconds
+        self._t0 = time.perf_counter()
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.tenant not in self._order:
+            self._slot_of[req.tenant] = len(self._order)
             self._order.append(req.tenant)
         self.queues[req.tenant].append(req)
 
     def pending(self) -> int:
-        return sum(len(q) for q in self.queues.values())
+        n = sum(len(q) for q in self.queues.values())
+        if self._prepared is not None:   # staged-ahead batch not yet served
+            n += len(self._prepared[1])
+        return n
 
     # ------------------------------------------------------------------
+    # EWMA weight for per-tenant recent latency (straggler-priority pick)
+    _RECENT_ALPHA = 0.5
+
+    def _recent_s(self, tenant: str) -> float:
+        return self._recent.get(tenant, 0.0)
+
+    def _note_batch_time(self, tenant: str, per_req_s: float) -> None:
+        """EWMA of per-request time: tracks *recent* speed, so a tenant that
+        was slow long ago but recovered stops being prioritised (a lifetime
+        mean would pin the priority to stale history)."""
+        prev = self._recent.get(tenant)
+        a = self._RECENT_ALPHA
+        self._recent[tenant] = (per_req_s if prev is None
+                                else a * per_req_s + (1 - a) * prev)
+
     def _next_tenant(self) -> Optional[str]:
+        if self.straggler_priority:
+            backlog = [t for t in self._order if self.queues[t]]
+            if not backlog:
+                return None
+            # slowest recent tenant first *within a round*: every tenant
+            # with backlog is served once before any tenant repeats, so the
+            # priority orders a finite round (the serving analogue of
+            # reorder_for_stragglers) instead of starving fast tenants
+            fresh = [t for t in backlog if t not in self._round_served]
+            if not fresh:
+                self._round_served.clear()
+                fresh = backlog
+            pick = max(fresh, key=self._recent_s)
+            self._round_served.add(pick)
+            return pick
         for _ in range(len(self._order)):
             t = self._order.pop(0)
             self._order.append(t)
@@ -77,28 +136,55 @@ class MultiTenantScheduler:
             batch.append(q.popleft())
         return batch
 
-    def step(self) -> Optional[List[Response]]:
-        """Serve one tenant slot; returns its responses (None if idle)."""
-        tenant = self._next_tenant()
-        if tenant is None:
-            return None
+    def _build_batch(self, tenant: str
+                     ) -> Optional[Tuple[str, List[Request], np.ndarray, int]]:
         reqs = self._assemble(tenant)
+        if not reqs:
+            return None
         # pad prompts to a common length (right-aligned batch)
         s_max = max(r.prompt.size for r in reqs)
         prompts = np.zeros((len(reqs), s_max), np.int32)
         for i, r in enumerate(reqs):
             prompts[i, s_max - r.prompt.size:] = r.prompt
-        steps = max(r.max_new_tokens for r in reqs)
+        return tenant, reqs, prompts, max(r.max_new_tokens for r in reqs)
+
+    def _stage_next(self) -> None:
+        if self._prepared is None:
+            tenant = self._next_tenant()
+            if tenant is not None:
+                asm_start = time.perf_counter() - self._t0
+                self._prepared = self._build_batch(tenant)
+                if self._prepared is not None:
+                    self._asm_window = (asm_start,
+                                        time.perf_counter() - self._t0)
+
+    def step(self) -> Optional[List[Response]]:
+        """Serve one tenant slot; returns its responses (None if idle)."""
+        self._stage_next()
+        if self._prepared is None:
+            return None
+        tenant, reqs, prompts, steps = self._prepared
+        self._prepared = None
+        asm_start, asm_end = self._asm_window
         t0 = time.perf_counter()
         result: GenerationResult = self.engine.generate(prompts, steps)
-        busy = time.perf_counter() - t0
-        st = self.stats[tenant]
-        st["requests"] += len(reqs)
-        st["tokens"] += result.tokens.size
+        done = time.perf_counter()       # service completion: BEFORE the
+        busy = done - t0                 # stage-ahead work below, so the
+        # compute window and latencies don't absorb the next slot's assembly
+        st = self.stats[tenant]          # record stats first so the
+        st["requests"] += len(reqs)      # stage-ahead pick sees this batch's
+        st["tokens"] += result.tokens.size   # fresh latency, not stale data
         st["busy_s"] += busy
+        self._note_batch_time(tenant, busy / max(len(reqs), 1))
         self.detector.update({hash(tenant) % (2 ** 31): busy / max(len(reqs), 1)})
-        now = time.perf_counter()
-        return [Response(tenant, result.tokens[i], now - r.arrival_s,
+        # stage-ahead: assemble the next slot's batch before finalising this
+        # slot's responses (host-side analogue of stage(k+1) under compute(k))
+        self._stage_next()
+        self.timeline.append(TenantTimeline(
+            vdev=self._slot_of[tenant], pdev=0, slot=self._slot_of[tenant],
+            transfer_start=asm_start, transfer_end=asm_end,
+            compute_start=t0 - self._t0, compute_end=done - self._t0))
+        return [Response(tenant, result.tokens[i], done - r.arrival_s,
                          len(reqs)) for i, r in enumerate(reqs)]
 
     def drain(self) -> List[Response]:

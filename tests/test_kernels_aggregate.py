@@ -28,14 +28,33 @@ SWEEP = [
 ]
 
 
+@pytest.mark.parametrize("variant", ["gather", "onehot"])
 @pytest.mark.parametrize("T,K,M,cat,chunk,tb,rt", SWEEP)
-def test_pallas_matches_oracle(rng, T, K, M, cat, chunk, tb, rt):
+def test_pallas_matches_oracle(rng, T, K, M, cat, chunk, tb, rt, variant):
     args = _case(rng, T, K, M, cat)
     got = aggregate_loss_pallas(*args, chunk=chunk, trial_block=tb,
-                                rows_tile=rt)
+                                rows_tile=rt, variant=variant)
     want = aggregate_loss_chunked_ref(*args, chunk=chunk)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-3)
+
+
+def test_variant_selection_via_ops(rng):
+    """kernels.ops routes the configured variant to the Pallas kernel."""
+    from repro.kernels import ops as kops
+    args = _case(rng, 32, 16, 2, 128)
+    want = np.asarray(aggregate_loss_chunked_ref(*args, chunk=8))
+    prev_pallas, prev_variant = kops.pallas_enabled(), kops.aggregate_variant()
+    kops.use_pallas(True)
+    try:
+        for variant in ("gather", "onehot"):
+            kops.use_aggregate_variant(variant)
+            assert kops.aggregate_variant() == variant
+            got = np.asarray(kops.aggregate_loss(*args, chunk=8))
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)
+    finally:
+        kops.use_pallas(prev_pallas)
+        kops.use_aggregate_variant(prev_variant)
 
 
 def test_chunked_ref_matches_unchunked(rng):

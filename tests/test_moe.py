@@ -84,10 +84,8 @@ def test_moe_grads_flow():
         return jnp.sum(y ** 2) + sum(l.values())
 
     g = jax.grad(loss)(params)
-    gnorms = {k: float(jnp.linalg.norm(v.reshape(-1)))
-              for k, v in jax.tree.flatten_with_path(g)[0] and
-              [(jax.tree_util.keystr(kp), v)
-               for kp, v in jax.tree.flatten_with_path(g)[0]]}
+    gnorms = {jax.tree_util.keystr(kp): float(jnp.linalg.norm(v.reshape(-1)))
+              for kp, v in jax.tree_util.tree_flatten_with_path(g)[0]}
     assert all(np.isfinite(list(gnorms.values())))
     assert gnorms["['router']"] > 0          # router learns
     assert gnorms["['w_down']"] > 0

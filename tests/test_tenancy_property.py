@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis) for the tenancy/transfer invariants."""
 import numpy as np
-from hypothesis import given, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, strategies as st  # noqa: E402
 
 from repro.core import perfmodel as pm
 from repro.core.tenancy import TenancyConfig, VirtualDevicePool
