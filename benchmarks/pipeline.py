@@ -8,6 +8,13 @@ Two A/B comparisons on the real (CPU-reduced) stack:
   windows so the harness can verify transfer(k+1) starts before compute(k)
   ends, plus resident-table-cache and trace-count rows for the repeated-run
   (serving) regime.
+* **serving blocking vs overlapped** — the multi-tenant scheduler on the
+  engine's host-blocking ``generate`` loop against the dispatch/await split
+  (prefill + on-device ``lax.scan`` decode enqueued without blocking, tenant
+  k+1's batch assembly + staging running under tenant k's decode).  Emits
+  wall-time rows for both schedules plus the realised overlap-pair count
+  from the serving ``TenantTimeline`` (same falsifiable predicate as the
+  risk pipeline rows).
 * **gather vs one-hot** — the two aggregate_loss Pallas lookup strategies in
   interpret mode.  Interpret-mode wall time is an emulation artefact, not
   device time (the numbers rank Python-level op counts); the structural win
@@ -116,6 +123,57 @@ def bench_pipeline_overlap() -> List[Row]:
     return out
 
 
+def bench_serving_overlap() -> List[Row]:
+    import jax
+    from repro.configs import get_config
+    from repro.core.pipeline import timeline_overlaps
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    tenants, requests, steps, plen = 3, 12, 16, 32
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, plen).astype(np.int32)
+               for _ in range(requests)]
+
+    def run(overlapped: bool) -> MultiTenantScheduler:
+        sched = MultiTenantScheduler(engine, max_batch=4,
+                                     overlapped=overlapped)
+        for i, p in enumerate(prompts):
+            sched.submit(Request(f"tenant-{i % tenants}", p,
+                                 max_new_tokens=steps))
+        sched.drain()                     # reaps the waiter thread too
+        return sched
+
+    run(False)                 # warm: prefill + per-token decode compiles
+    run(True)                  # warm: prefill + scanned decode-loop compile
+
+    out: List[Row] = []
+    t_blk, t_ovl, med_blk, med_ovl = _min_ab(lambda: run(False),
+                                             lambda: run(True), n=5)
+    tag = f"{tenants}t_{requests}r_{steps}s"
+    out.append((f"serving/blocking_{tag}", t_blk * 1e6,
+                f"median_us={med_blk * 1e6:.0f};arch=internlm2-1.8b-reduced"))
+    sched = run(True)
+    ov = timeline_overlaps(sched.timeline)
+    out.append((f"serving/overlapped_{tag}", t_ovl * 1e6,
+                f"speedup={t_blk / t_ovl:.2f}x;"
+                f"median_us={med_ovl * 1e6:.0f};"
+                f"overlap_pairs={sum(ov)}/{len(ov)};"
+                f"overlap_realised={sum(ov) > len(ov) // 2}"))
+    for i, tl in enumerate(sched.timeline):
+        out.append((f"serving/batch{i}_slot{tl.slot}", tl.compute_s * 1e6,
+                    f"tr={tl.transfer_start * 1e3:.2f}-"
+                    f"{tl.transfer_end * 1e3:.2f}ms;"
+                    f"cp={tl.compute_start * 1e3:.2f}-"
+                    f"{tl.compute_end * 1e3:.2f}ms"))
+    return out
+
+
 def bench_kernel_variants() -> List[Row]:
     import jax.numpy as jnp
     from repro.kernels.aggregate_loss import aggregate_loss_pallas
@@ -144,4 +202,4 @@ def bench_kernel_variants() -> List[Row]:
     return out
 
 
-ALL = [bench_pipeline_overlap, bench_kernel_variants]
+ALL = [bench_pipeline_overlap, bench_serving_overlap, bench_kernel_variants]

@@ -8,8 +8,10 @@
 
 ``--json`` additionally writes the rows as a machine-readable perf record
 (list of {name, us_per_call, derived} plus run metadata) so the perf
-trajectory — e.g. blocking vs overlapped pipeline wall time and per-tenant
-transfer/compute windows — can be tracked across PRs.
+trajectory — e.g. blocking vs overlapped wall time for both the risk
+pipeline (``pipeline/*``) and the multi-tenant serving scheduler
+(``serving/*``), with per-tenant transfer/compute windows and realised
+overlap-pair counts — can be tracked across PRs.
 """
 import argparse
 import json

@@ -4,6 +4,27 @@ The engine owns compiled step functions for one model on one device/mesh;
 multi-tenant request scheduling (several tenants sharing the accelerator,
 the paper's "multiple applications on one pGPU") sits above it in
 :mod:`repro.serving.multitenant`.
+
+Two generation paths share the same sampling semantics:
+
+* :meth:`ServingEngine.generate` — the host-blocking reference loop: one
+  jitted decode call per token, sampling on the host between calls.  Kept
+  as the A/B baseline and the semantic oracle for the scanned path.
+* :meth:`ServingEngine.dispatch` / :meth:`ServingEngine.await_result` — the
+  split halves.  ``dispatch`` enqueues the jitted prefill plus a single
+  on-device ``lax.scan`` decode loop (sampling folded into the scanned
+  step, so the host never round-trips per token) and returns a
+  :class:`PendingGeneration` handle *without blocking*; ``await_result``
+  blocks on the handle and materialises tokens + prefill/decode timings.
+  Between the two calls the host is free — that gap is where the
+  multi-tenant scheduler assembles and stages the next tenant's batch
+  underneath this tenant's on-device decode (the paper's transfer/compute
+  overlap applied to serving).
+
+Both paths draw sampling keys identically (``PRNGKey(seed)`` for the first
+token, then ``fold_in(key, step)`` per decode step), so for a fixed seed
+they are token-for-token exchangeable — ``tests/test_serving_overlap.py``
+locks that in across architectures.
 """
 from __future__ import annotations
 
@@ -32,6 +53,30 @@ class GenerationResult:
         return self.tokens.size / max(self.decode_s, 1e-9)
 
 
+@dataclasses.dataclass
+class PendingGeneration:
+    """Handle for an in-flight generation (prefill + scanned decode both
+    enqueued on the device; nothing host-blocking held here).
+
+    ``tokens`` is the (B, steps) device array the scan will fill;
+    ``prefill_logits`` the prefill output, kept so :meth:`ServingEngine.
+    await_result` can split the ready-time into prefill/decode phases.
+    Timestamps are absolute ``perf_counter`` values.
+    """
+    tokens: jax.Array
+    prefill_logits: jax.Array
+    steps: int
+    t_start: float                # dispatch() entry
+    t_dispatched: float           # dispatch() return (host enqueue cost end)
+
+    def ready(self) -> bool:
+        """Non-blocking probe: has the scanned decode finished?  Conservative
+        for outputs without an ``is_ready`` probe (duck-typed stand-ins):
+        reports False rather than claiming a still-running decode is done."""
+        is_ready = getattr(self.tokens, "is_ready", None)
+        return bool(is_ready()) if is_ready is not None else False
+
+
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params: Any,
                  sh: Optional[Sharder] = None, temperature: float = 0.0):
@@ -45,6 +90,34 @@ class ServingEngine:
         self._decode = jax.jit(
             lambda p, t, c, i: self.bundle.decode_fn(p, t, c, i, self.sh))
 
+        def decode_loop(params, logits0, caches, idx, temp, key,
+                        *, steps: int, greedy: bool):
+            # sampling folded into the scanned step: token i is sampled from
+            # logits i with key i, then decoded to produce logits i+1, and
+            # key i+1 = fold_in(key i, i) — the exact key/logits schedule of
+            # the host loop in generate(), so the two paths are token-exact.
+            def sample(logits, key):
+                if greedy:
+                    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+                return jax.random.categorical(key, logits / temp,
+                                              axis=-1).astype(jnp.int32)
+
+            def step(carry, i):
+                logits, caches, key = carry
+                tok = sample(logits, key)
+                new_logits, new_caches = self.bundle.decode_fn(
+                    params, tok[:, None], caches, idx + i, self.sh)
+                return (new_logits, new_caches,
+                        jax.random.fold_in(key, i)), tok
+
+            (_, _, _), toks = jax.lax.scan(
+                step, (logits0, caches, key),
+                jnp.arange(steps, dtype=jnp.int32))
+            return toks.T                      # (steps, B) -> (B, steps)
+
+        self._decode_loop = jax.jit(decode_loop,
+                                    static_argnames=("steps", "greedy"))
+
     # ------------------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0.0:
@@ -52,13 +125,21 @@ class ServingEngine:
         return jax.random.categorical(key, logits / self.temperature,
                                       axis=-1).astype(jnp.int32)
 
+    def _make_batch(self, prompts: np.ndarray,
+                    extra_inputs: Optional[Dict[str, Any]]) -> Dict[str, Any]:
+        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
+        if extra_inputs:
+            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        return batch
+
+    # ------------------------------------------------------------------
+    # Blocking reference path (one jitted decode call per token)
+    # ------------------------------------------------------------------
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  extra_inputs: Optional[Dict[str, Any]] = None,
                  seed: int = 0) -> GenerationResult:
         """prompts: (B, S) int32.  Greedy/temperature sampling."""
-        batch = {"tokens": jnp.asarray(prompts, jnp.int32)}
-        if extra_inputs:
-            batch.update({k: jnp.asarray(v) for k, v in extra_inputs.items()})
+        batch = self._make_batch(prompts, extra_inputs)
         t0 = time.perf_counter()
         logits, caches, idx = self._prefill(self.params, batch)
         logits.block_until_ready()
@@ -78,3 +159,37 @@ class ServingEngine:
         decode_s = time.perf_counter() - t0
         return GenerationResult(np.stack(out, axis=1), prefill_s, decode_s,
                                 max_new_tokens)
+
+    # ------------------------------------------------------------------
+    # Split path: dispatch (non-blocking enqueue) / await (materialise)
+    # ------------------------------------------------------------------
+    def dispatch(self, prompts: np.ndarray, max_new_tokens: int = 16,
+                 extra_inputs: Optional[Dict[str, Any]] = None,
+                 seed: int = 0) -> PendingGeneration:
+        """Enqueue prefill + the full on-device decode loop; never blocks on
+        device results, so the caller can stage other work under it."""
+        batch = self._make_batch(prompts, extra_inputs)
+        t_start = time.perf_counter()
+        logits, caches, idx = self._prefill(self.params, batch)
+        # temperature is passed unclamped: greedy is static, so the
+        # logits/temp division is never traced when temperature <= 0
+        toks = self._decode_loop(
+            self.params, logits, caches, idx,
+            jnp.float32(self.temperature), jax.random.PRNGKey(seed),
+            steps=int(max_new_tokens), greedy=self.temperature <= 0.0)
+        return PendingGeneration(toks, logits, int(max_new_tokens),
+                                 t_start, time.perf_counter())
+
+    def await_result(self, handle: PendingGeneration) -> GenerationResult:
+        """Block until the handle's generation is device-complete and return
+        the materialised tokens.  ``prefill_s``/``decode_s`` are time-to-
+        ready from dispatch entry: with host work interleaved between
+        dispatch and await they measure pipeline latency, not exclusive
+        device occupancy (the scheduler's timeline carries the honest
+        per-window stamps)."""
+        jax.block_until_ready(handle.prefill_logits)
+        t_prefill = time.perf_counter()
+        tokens = np.asarray(handle.tokens)     # blocks on the scanned decode
+        t_done = time.perf_counter()
+        return GenerationResult(tokens, t_prefill - handle.t_start,
+                                t_done - t_prefill, handle.steps)

@@ -2,20 +2,29 @@
 several applications share one physical accelerator).
 
 Each tenant owns a request queue; the scheduler cycles *tenant slots* on the
-shared device.  Batch assembly for the *next* tenant slot is pipelined: the
-scheduler pre-assembles slot k+1's padded batch before fetching slot k's
-responses, mirroring the stage(k+1)-under-compute(k) schedule the risk stack
-runs on :class:`repro.core.pipeline.PipelineExecutor` (the engine's generate
-loop is host-blocking, so here the overlap is batch-granular host work; true
-device-transfer overlap is the pipeline's domain — see the contract note in
-:mod:`repro.core.pipeline`).
+shared device.  The engine exposes split ``dispatch``/``await_result``
+halves (prefill + a single on-device ``lax.scan`` decode loop are enqueued
+without blocking), so with ``overlapped=True`` (default) the scheduler runs
+the paper's transfer-under-compute schedule at serving granularity: while
+tenant k's decode loop occupies the device, the host assembles and stages
+tenant k+1's padded batch and enqueues its prefill+decode — the serving
+analogue of the stage(k+1)-under-compute(k) schedule the risk stack runs on
+:class:`repro.core.pipeline.PipelineExecutor`.  ``overlapped=False`` keeps
+the legacy blocking schedule (``engine.generate`` per slot, stage-ahead
+limited to host-side batch assembly) as the A/B baseline.
 
 Slot selection is straggler-aware: with ``straggler_priority=True`` the
 scheduler serves the tenant with the slowest recent per-request time first
-(the serving analogue of ``reorder_for_stragglers``); otherwise plain
-round-robin.  Per-slot :class:`repro.core.pipeline.TenantTimeline` records
-(assembly window = transfer, generate window = compute) feed the benchmark
-harness and the planner's utilisation model.
+(the serving analogue of ``reorder_for_stragglers``), subject to the round
+invariant that every backlogged tenant is served exactly once per round;
+otherwise plain round-robin.  Per-slot :class:`repro.core.pipeline.
+TenantTimeline` records (transfer window = batch assembly + staging
+dispatch, compute window = dispatch -> device-ready) feed the benchmark
+harness and the planner's utilisation model; in overlapped mode a shared
+:class:`repro.core.pipeline.CompletionWaiter` stamps ``compute_end`` the
+moment the decode output is ready, so :func:`repro.core.pipeline.
+timeline_overlaps` is falsifiable on the serving timeline exactly as on the
+risk pipeline's.
 """
 from __future__ import annotations
 
@@ -26,10 +35,11 @@ from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.pipeline import TenantTimeline
+from repro.core.pipeline import CompletionWaiter, TenantTimeline
 from repro.core.tenancy import TenancyConfig
 from repro.distributed.fault import StragglerDetector
-from repro.serving.engine import GenerationResult, ServingEngine
+from repro.serving.engine import (GenerationResult, PendingGeneration,
+                                  ServingEngine)
 
 
 @dataclasses.dataclass
@@ -48,17 +58,31 @@ class Response:
     batch_size: int
 
 
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched tenant slot: requests + handle + its timeline entry
+    (compute_end stamped by the CompletionWaiter at device readiness)."""
+    tenant: str
+    reqs: List[Request]
+    handle: PendingGeneration
+    entry: TenantTimeline
+    stamped: Any                     # threading.Event from the waiter
+
+
 class MultiTenantScheduler:
     """Tenant-slot batching over one shared engine (round-robin or
-    straggler-priority), with pipelined next-slot batch assembly."""
+    straggler-priority), with tenant k+1's batch assembly + staging
+    dispatched underneath tenant k's on-device decode."""
 
     def __init__(self, engine: ServingEngine, max_batch: int = 8,
                  tenancy: Optional[TenancyConfig] = None,
-                 straggler_priority: bool = False):
+                 straggler_priority: bool = False,
+                 overlapped: bool = True):
         self.engine = engine
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
         self.straggler_priority = straggler_priority
+        self.overlapped = overlapped
         self.queues: Dict[str, Deque[Request]] = collections.defaultdict(
             collections.deque)
         self.detector = StragglerDetector()
@@ -67,12 +91,16 @@ class MultiTenantScheduler:
         self.timeline: List[TenantTimeline] = []
         self._order: List[str] = []
         self._slot_of: Dict[str, int] = {}
-        # next tenant slot's pre-assembled batch: (tenant, reqs, prompts,
-        # steps) — assembled while the previous slot's responses were being
-        # finalised (host-side stage-ahead)
+        # blocking path: next tenant slot's pre-assembled batch (tenant,
+        # reqs, prompts, steps) — assembled while the previous slot's
+        # responses were being finalised (host-side stage-ahead)
         self._prepared: Optional[Tuple[str, List[Request], np.ndarray, int]] \
             = None
         self._asm_window = (0.0, 0.0)
+        # overlapped path: the dispatched-but-not-awaited tenant slot
+        self._inflight: Optional[_Inflight] = None
+        self._waiter: Optional[CompletionWaiter] = None
+        self._last_ready = 0.0           # previous slot's compute_end
         self._round_served: set = set()
         self._recent: Dict[str, float] = {}   # EWMA per-request seconds
         self._t0 = time.perf_counter()
@@ -88,7 +116,15 @@ class MultiTenantScheduler:
         n = sum(len(q) for q in self.queues.values())
         if self._prepared is not None:   # staged-ahead batch not yet served
             n += len(self._prepared[1])
+        if self._inflight is not None:   # dispatched batch not yet awaited
+            n += len(self._inflight.reqs)
         return n
+
+    def close(self) -> None:
+        """Reap the completion-waiter thread (daemon, so optional)."""
+        if self._waiter is not None:
+            self._waiter.close()
+            self._waiter = None
 
     # ------------------------------------------------------------------
     # EWMA weight for per-tenant recent latency (straggler-priority pick)
@@ -148,6 +184,88 @@ class MultiTenantScheduler:
             prompts[i, s_max - r.prompt.size:] = r.prompt
         return tenant, reqs, prompts, max(r.max_new_tokens for r in reqs)
 
+    # ------------------------------------------------------------------
+    # Accounting shared by both schedules
+    # ------------------------------------------------------------------
+    def _account(self, tenant: str, reqs: List[Request], tokens: np.ndarray,
+                 busy_s: float) -> None:
+        st = self.stats[tenant]
+        st["requests"] += len(reqs)
+        st["tokens"] += tokens.size
+        st["busy_s"] += busy_s
+        per_req = busy_s / max(len(reqs), 1)
+        self._note_batch_time(tenant, per_req)
+        # keyed by the stable tenant slot: hash(tenant) is salted per
+        # process and can collide across tenants, which would merge two
+        # tenants' EWMAs in the detector
+        self.detector.update({self._slot_of[tenant]: per_req})
+
+    # ------------------------------------------------------------------
+    # Overlapped schedule: dispatch k+1's staging under k's decode
+    # ------------------------------------------------------------------
+    def _launch_next(self) -> Optional[_Inflight]:
+        """Assemble + stage + dispatch the next tenant slot (non-blocking).
+
+        transfer window = batch assembly through dispatch return (host
+        staging of prompts + prefill/decode enqueue); compute window opens
+        at dispatch return and is closed by the CompletionWaiter when the
+        decode output is device-ready.
+        """
+        tenant = self._next_tenant()
+        if tenant is None:
+            return None
+        asm_start = time.perf_counter() - self._t0
+        # _next_tenant only returns tenants with backlog, so the batch is
+        # never empty (and the tenant's round-served mark stays consistent)
+        tenant, reqs, prompts, steps = self._build_batch(tenant)
+        handle = self.engine.dispatch(prompts, steps)
+        te = time.perf_counter() - self._t0
+        slot = self._slot_of[tenant]
+        entry = TenantTimeline(vdev=slot, pdev=0, slot=slot,
+                               transfer_start=asm_start, transfer_end=te,
+                               compute_start=te, compute_end=0.0)
+        if self._waiter is None:
+            self._waiter = CompletionWaiter(
+                lambda: time.perf_counter() - self._t0,
+                name="serving-waiter")
+        stamped = self._waiter.submit(handle.tokens, entry)
+        return _Inflight(tenant, reqs, handle, entry, stamped)
+
+    def _step_overlapped(self) -> Optional[List[Response]]:
+        if self._inflight is None:
+            self._inflight = self._launch_next()
+            if self._inflight is None:
+                return None
+        cur = self._inflight
+        # overlap point: tenant k+1's assembly + staging + dispatch run here,
+        # while tenant k's decode loop is still executing on the device
+        self._inflight = self._launch_next()
+        result = self.engine.await_result(cur.handle)
+        cur.stamped.wait()           # compute_end stamped at device-ready
+        # open the compute window at device occupancy, not dispatch return:
+        # this slot was enqueued behind the previous slot's decode (the
+        # device stream serialises them), and that queue wait must not be
+        # billed to this tenant's busy/EWMA or double-counted in
+        # utilisation.  The previous slot's compute_end is known here —
+        # slots complete in dispatch order and slot k-1 was awaited before
+        # slot k+1 was staged, so the clamp can only move compute_start
+        # earlier than the next slot's transfer_start, never past it (the
+        # overlap predicate stays falsifiable).
+        cur.entry.compute_start = max(cur.entry.compute_start,
+                                      min(self._last_ready,
+                                          cur.entry.compute_end))
+        self._last_ready = cur.entry.compute_end
+        self._account(cur.tenant, cur.reqs, result.tokens,
+                      cur.entry.compute_end - cur.entry.compute_start)
+        self.timeline.append(cur.entry)
+        done_abs = self._t0 + cur.entry.compute_end
+        return [Response(cur.tenant, result.tokens[i],
+                         done_abs - r.arrival_s, len(cur.reqs))
+                for i, r in enumerate(cur.reqs)]
+
+    # ------------------------------------------------------------------
+    # Blocking schedule (A/B baseline): generate() per slot
+    # ------------------------------------------------------------------
     def _stage_next(self) -> None:
         if self._prepared is None:
             tenant = self._next_tenant()
@@ -158,8 +276,7 @@ class MultiTenantScheduler:
                     self._asm_window = (asm_start,
                                         time.perf_counter() - self._t0)
 
-    def step(self) -> Optional[List[Response]]:
-        """Serve one tenant slot; returns its responses (None if idle)."""
+    def _step_blocking(self) -> Optional[List[Response]]:
         self._stage_next()
         if self._prepared is None:
             return None
@@ -171,12 +288,9 @@ class MultiTenantScheduler:
         done = time.perf_counter()       # service completion: BEFORE the
         busy = done - t0                 # stage-ahead work below, so the
         # compute window and latencies don't absorb the next slot's assembly
-        st = self.stats[tenant]          # record stats first so the
-        st["requests"] += len(reqs)      # stage-ahead pick sees this batch's
-        st["tokens"] += result.tokens.size   # fresh latency, not stale data
-        st["busy_s"] += busy
-        self._note_batch_time(tenant, busy / max(len(reqs), 1))
-        self.detector.update({hash(tenant) % (2 ** 31): busy / max(len(reqs), 1)})
+        # (stats recorded first so the stage-ahead pick sees this batch's
+        # fresh latency, not stale data)
+        self._account(tenant, reqs, result.tokens, busy)
         # stage-ahead: assemble the next slot's batch before finalising this
         # slot's responses (host-side analogue of stage(k+1) under compute(k))
         self._stage_next()
@@ -187,12 +301,23 @@ class MultiTenantScheduler:
         return [Response(tenant, result.tokens[i], done - r.arrival_s,
                          len(reqs)) for i, r in enumerate(reqs)]
 
+    # ------------------------------------------------------------------
+    def step(self) -> Optional[List[Response]]:
+        """Serve one tenant slot; returns its responses (None if idle)."""
+        if self.overlapped:
+            return self._step_overlapped()
+        return self._step_blocking()
+
     def drain(self) -> List[Response]:
         out: List[Response] = []
         while self.pending():
             r = self.step()
             if r:
                 out.extend(r)
+        # reap the now-idle completion-waiter thread so schedulers that end
+        # with drain() (the common shape) don't each park a daemon thread
+        # rooting the scheduler; it is recreated lazily on the next launch
+        self.close()
         return out
 
     # ------------------------------------------------------------------

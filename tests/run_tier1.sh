@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 test entrypoint: one command for local runs and CI.
+#
+#     tests/run_tier1.sh                 # whole suite
+#     tests/run_tier1.sh tests/test_serving_overlap.py -k subprocess
+#
+# Sets PYTHONPATH=src and forces 8 host devices (the same XLA flag the
+# subprocess overlap tests in test_pipeline.py / test_serving_overlap.py
+# append for their children — it must precede jax initialisation, hence an
+# env var here rather than a fixture).  Extra args pass through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+# append: the last repetition of the flag wins if the caller already set one
+export XLA_FLAGS="${XLA_FLAGS:+$XLA_FLAGS }--xla_force_host_platform_device_count=8"
+exec python -m pytest -x -q "$@"

@@ -67,25 +67,66 @@ def test_idle_step_returns_none(engine):
     assert sched.step() is None
 
 
+class _DelayedTokens:
+    """Fake device output: block_until_ready sleeps out the remaining
+    'decode' time (jax.block_until_ready duck-types on the method)."""
+
+    def __init__(self, arr, delay_s):
+        self.arr = arr
+        self._ready_at = __import__("time").perf_counter() + delay_s
+
+    def block_until_ready(self):
+        import time as _t
+        rem = self._ready_at - _t.perf_counter()
+        if rem > 0:
+            _t.sleep(rem)
+        return self
+
+
 class _FakeEngine:
-    """Deterministic stand-in: per-tenant latency keyed by first token."""
+    """Deterministic stand-in: per-tenant latency keyed by first token.
+    Supports both the blocking (generate) and split (dispatch/await)
+    engine protocols so either schedule can run against it."""
 
     def __init__(self, delays):
         self.delays = delays             # first-token-value -> seconds
 
+    def _delay(self, prompts):
+        return self.delays.get(int(prompts[0, -1]), 0.0)
+
     def generate(self, prompts, steps, **kw):
         import time as _t
         from repro.serving.engine import GenerationResult
-        d = self.delays.get(int(prompts[0, -1]), 0.0)
+        d = self._delay(prompts)
         _t.sleep(d)
         toks = np.zeros((prompts.shape[0], steps), np.int32)
         return GenerationResult(toks, 0.0, d, steps)
 
+    def dispatch(self, prompts, steps, **kw):
+        import time as _t
+        from repro.serving.engine import PendingGeneration
+        d = self._delay(prompts)
+        t0 = _t.perf_counter()
+        toks = _DelayedTokens(np.zeros((prompts.shape[0], steps), np.int32),
+                              d)
+        return PendingGeneration(toks, np.zeros((prompts.shape[0], 1)),
+                                 steps, t0, _t.perf_counter())
 
-def test_straggler_priority_serves_rounds_without_starvation():
+    def await_result(self, handle):
+        import time as _t
+        from repro.serving.engine import GenerationResult
+        t0 = _t.perf_counter()
+        handle.tokens.block_until_ready()
+        return GenerationResult(handle.tokens.arr, 0.0,
+                                _t.perf_counter() - t0, handle.steps)
+
+
+@pytest.mark.parametrize("overlapped", [False, True])
+def test_straggler_priority_serves_rounds_without_starvation(overlapped):
     from repro.serving.multitenant import MultiTenantScheduler, Request
     eng = _FakeEngine({1: 0.02, 2: 0.0})
-    sched = MultiTenantScheduler(eng, max_batch=1, straggler_priority=True)
+    sched = MultiTenantScheduler(eng, max_batch=1, straggler_priority=True,
+                                 overlapped=overlapped)
     for _ in range(3):
         sched.submit(Request("slow", np.array([1], np.int32), 1))
         sched.submit(Request("fast", np.array([2], np.int32), 1))
@@ -94,18 +135,152 @@ def test_straggler_priority_serves_rounds_without_starvation():
         r = sched.step()
         if r:
             served.extend(x.tenant for x in r)
+    sched.close()
     # every tenant served each round: no starvation of the fast tenant
     assert served.count("fast") == 3 and served.count("slow") == 3
-    # within a round (after one step of history) the slow tenant goes first
-    assert served[2] == "slow" and served[3] == "fast"
+    if not overlapped:
+        # blocking: round 2's pick already sees round 1's latencies, so the
+        # slow tenant goes first.  (Overlapped staging picks one batch ahead
+        # of completion, so its round 2 order still reflects cold history.)
+        assert served[2] == "slow" and served[3] == "fast"
+
+
+def test_straggler_detector_keyed_by_stable_slot():
+    """Regression: detector keys must be the scheduler's stable tenant
+    slots, not hash(tenant) % 2**31 — python string hashes are salted per
+    process and can collide across tenants, silently merging two tenants'
+    EWMA histories."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    eng = _FakeEngine({1: 0.01, 2: 0.0})
+    sched = MultiTenantScheduler(eng, max_batch=1, overlapped=False)
+    for _ in range(2):
+        sched.submit(Request("tenant-a", np.array([1], np.int32), 1))
+        sched.submit(Request("tenant-b", np.array([2], np.int32), 1))
+    sched.drain()
+    # two tenants -> two distinct, stable keys: their submission slots
+    assert set(sched.detector.mean) == {0, 1}
+    assert sched._slot_of == {"tenant-a": 0, "tenant-b": 1}
+    # slot 0 (the slow tenant) accumulated the larger EWMA
+    assert sched.detector.mean[0] > sched.detector.mean[1]
+
+
+def test_pending_counts_staged_ahead_batches():
+    """pending() must count requests held in staged-ahead state (assembled
+    but unserved, and dispatched but unawaited), or drain() would exit with
+    work in flight."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    eng = _FakeEngine({})
+    sched = MultiTenantScheduler(eng, max_batch=2, overlapped=True)
+    for _ in range(2):
+        sched.submit(Request("a", np.array([1], np.int32), 1))
+        sched.submit(Request("b", np.array([2], np.int32), 1))
+    assert sched.pending() == 4
+    r = sched.step()                       # serves a; b left dispatched
+    assert len(r) == 2
+    assert sched.pending() == 2            # b's reqs: queues empty, inflight
+    assert len(sched.queues["b"]) == 0
+    r = sched.step()
+    assert len(r) == 2 and sched.pending() == 0
+    sched.close()
+    # blocking path: the pre-assembled (not yet served) batch counts too
+    sched = MultiTenantScheduler(eng, max_batch=2, overlapped=False)
+    for _ in range(2):
+        sched.submit(Request("a", np.array([1], np.int32), 1))
+        sched.submit(Request("b", np.array([2], np.int32), 1))
+    sched.step()                           # serves a, stages b ahead
+    assert sched._prepared is not None
+    assert sched.pending() == 2
+
+
+def test_overlapped_busy_excludes_queue_wait():
+    """A slot dispatched under the previous slot's long decode must not be
+    billed for that queue wait: its compute window opens at device
+    occupancy (previous slot's compute_end), so busy_s/EWMA stay honest
+    and per-slot windows never double-count device time."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    eng = _FakeEngine({1: 0.08, 2: 0.0})
+    sched = MultiTenantScheduler(eng, max_batch=1, overlapped=True)
+    sched.submit(Request("slow", np.array([1], np.int32), 1))
+    sched.submit(Request("fast", np.array([2], np.int32), 1))
+    sched.drain()
+    slow, fast = sched.timeline
+    assert slow.compute_s >= 0.05
+    # fast was enqueued behind slow's 80ms decode; its own decode is ~0ms
+    assert fast.compute_s < 0.05, vars(fast)
+    assert fast.compute_start >= slow.compute_end - 1e-6
+    assert sched.stats["fast"]["busy_s"] < 0.05
+
+
+def _drain_order(sched):
+    served = []
+    while sched.pending():
+        r = sched.step()
+        if r:
+            served.extend(x.tenant for x in r)
+    sched.close()
+    return served
+
+
+def _assert_round_invariant(served, tenants, rounds):
+    """Every backlogged tenant is served exactly once per round: the pick
+    sequence chunks into permutations of the full tenant set."""
+    assert len(served) == len(tenants) * rounds
+    for r in range(rounds):
+        chunk = served[r * len(tenants):(r + 1) * len(tenants)]
+        assert sorted(chunk) == sorted(tenants), (r, served)
+
+
+@pytest.mark.parametrize("n_tenants,rounds,ewma", [
+    (2, 3, [5.0, 0.0]),
+    (3, 2, [0.0, 9.0, 9.0]),       # ties + zero history
+    (4, 2, [1.0, 1.0, 1.0, 1.0]),  # fully degenerate EWMA
+])
+def test_straggler_round_invariant_deterministic(n_tenants, rounds, ewma):
+    """Deterministic cases of the fairness property (always runs, with or
+    without hypothesis installed)."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    sched = MultiTenantScheduler(_FakeEngine({}), max_batch=1,
+                                 straggler_priority=True, overlapped=False)
+    tenants = [f"t{i}" for i in range(n_tenants)]
+    for _ in range(rounds):
+        for t in tenants:
+            sched.submit(Request(t, np.array([0], np.int32), 1))
+    sched._recent.update(dict(zip(tenants, ewma)))
+    _assert_round_invariant(_drain_order(sched), tenants, rounds)
+
+
+def test_straggler_round_invariant_property():
+    """Hypothesis property: the round invariant holds for arbitrary EWMA
+    seedings and tenant counts, in both schedules."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, strategies as st
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    @given(st.integers(2, 5), st.integers(1, 3),
+           st.lists(st.floats(0.0, 10.0, allow_nan=False),
+                    min_size=5, max_size=5),
+           st.booleans())
+    def prop(n_tenants, rounds, ewma, overlapped):
+        sched = MultiTenantScheduler(_FakeEngine({}), max_batch=1,
+                                     straggler_priority=True,
+                                     overlapped=overlapped)
+        tenants = [f"t{i}" for i in range(n_tenants)]
+        for _ in range(rounds):
+            for t in tenants:
+                sched.submit(Request(t, np.array([0], np.int32), 1))
+        sched._recent.update(dict(zip(tenants, ewma)))
+        _assert_round_invariant(_drain_order(sched), tenants, rounds)
+
+    prop()
 
 
 def test_serving_timeline_windows_are_honest():
-    """compute window = the generate call only; the staged-ahead assembly of
-    the next slot must not inflate the previous slot's compute_end."""
+    """Blocking schedule: compute window = the generate call only; the
+    staged-ahead assembly of the next slot must not inflate the previous
+    slot's compute_end."""
     from repro.serving.multitenant import MultiTenantScheduler, Request
     eng = _FakeEngine({1: 0.01, 2: 0.01})
-    sched = MultiTenantScheduler(eng, max_batch=1)
+    sched = MultiTenantScheduler(eng, max_batch=1, overlapped=False)
     for _ in range(2):
         sched.submit(Request("a", np.array([1], np.int32), 1))
         sched.submit(Request("b", np.array([2], np.int32), 1))
