@@ -174,6 +174,104 @@ def bench_serving_overlap() -> List[Row]:
     return out
 
 
+def bench_serving_continuous() -> List[Row]:
+    """Continuous batching (paged KV-cache + persistent slot table) vs the
+    slot-based overlapped schedule on a *ragged* request mix — the regime
+    the new subsystem targets: mixed prompt lengths and token budgets, where
+    slot batches pad every row to the batch max and drain between tenants.
+
+    Emits wall-time A/B rows plus the occupancy comparison the paper's
+    utilisation argument predicts: decode micro-rounds (device decode steps)
+    sustained per wall-second, useful-token throughput, and the continuous
+    engine's slot-occupancy / page-reuse counters.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.core.pipeline import timeline_overlaps
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    # one shared continuous engine: its jitted decode round / admission are
+    # compiled once and reused across every timed run
+    ceng = ContinuousBatchingEngine(engine, capacity=4, page_size=8,
+                                    inner_steps=8, max_prompt_len=16)
+    # every tenant's slot batch pairs one 256-token straggler with three
+    # 32-token rows, so the slot path decodes 256 serial padded steps per
+    # batch while continuous retires the short rows and refills their lanes
+    tenants, per_tenant = 3, 4
+    steps_pat = [256, 32, 32, 32]
+    rng = np.random.default_rng(0)
+    mix = []
+    for i in range(per_tenant):
+        for t in range(tenants):
+            mix.append((f"tenant-{t}",
+                        rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                        steps_pat[i % len(steps_pat)]))
+    useful_tokens = sum(s for _, _, s in mix)
+
+    def run(mode: str) -> MultiTenantScheduler:
+        sched = MultiTenantScheduler(
+            engine, max_batch=4, mode=mode,
+            continuous_engine=ceng if mode == "continuous" else None)
+        for tenant, p, s in mix:
+            sched.submit(Request(tenant, p, max_new_tokens=s))
+        sched.drain()
+        return sched
+
+    run("overlapped")          # warm: per-steps decode-loop compiles
+    run("continuous")          # warm: round + per-bucket admission compiles
+
+    t_slot, t_cont, med_slot, med_cont = _min_ab(
+        lambda: run("overlapped"), lambda: run("continuous"), n=5)
+
+    # fresh measured runs for the occupancy counters (deltas per run).
+    # micro-rounds/wall-second compares each schedule's decode granule —
+    # the boundary at which it can admit/retire work: one padded batch
+    # decode for the slot path vs one masked inner_steps round for
+    # continuous — the headline occupancy claim of the A/B.
+    d0 = engine.decode_steps
+    t0 = time.perf_counter()
+    sched_slot = run("overlapped")
+    wall_slot = time.perf_counter() - t0
+    slot_steps = engine.decode_steps - d0
+    slot_batches = len(sched_slot.timeline)
+
+    r0, rs0, pr0 = ceng.rounds, ceng.row_steps, ceng.kv.pages_reused
+    t0 = time.perf_counter()
+    sched_cont = run("continuous")
+    wall_cont = time.perf_counter() - t0
+    cont_rounds = ceng.rounds - r0
+    cont_steps = cont_rounds * ceng.inner_steps
+    cont_row_steps = ceng.row_steps - rs0
+
+    tag = f"{tenants}t_{len(mix)}r_ragged"
+    out: List[Row] = []
+    out.append((f"serving/slotbatch_{tag}", t_slot * 1e6,
+                f"median_us={med_slot * 1e6:.0f};"
+                f"micro_rounds_per_s={slot_batches / wall_slot:.1f};"
+                f"decode_steps={slot_steps};"
+                f"steps_per_s={slot_steps / wall_slot:.1f};"
+                f"useful_tok_per_s={useful_tokens / wall_slot:.1f}"))
+    ov = timeline_overlaps(sched_cont.timeline)
+    out.append((f"serving/continuous_{tag}", t_cont * 1e6,
+                f"speedup={t_slot / t_cont:.2f}x;"
+                f"median_us={med_cont * 1e6:.0f};"
+                f"micro_rounds_per_s={cont_rounds / wall_cont:.1f};"
+                f"decode_steps={cont_steps};"
+                f"steps_per_s={cont_steps / wall_cont:.1f};"
+                f"useful_tok_per_s={useful_tokens / wall_cont:.1f};"
+                f"occupancy={cont_row_steps / max(cont_steps * ceng.capacity, 1):.2f};"
+                f"pages_reused={ceng.kv.pages_reused - pr0};"
+                f"overlap_pairs={sum(ov)}/{len(ov)}"))
+    return out
+
+
 def bench_kernel_variants() -> List[Row]:
     import jax.numpy as jnp
     from repro.kernels.aggregate_loss import aggregate_loss_pallas
@@ -202,4 +300,5 @@ def bench_kernel_variants() -> List[Row]:
     return out
 
 
-ALL = [bench_pipeline_overlap, bench_serving_overlap, bench_kernel_variants]
+ALL = [bench_pipeline_overlap, bench_serving_overlap,
+       bench_serving_continuous, bench_kernel_variants]

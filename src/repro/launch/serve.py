@@ -1,14 +1,20 @@
 """Multi-tenant serving driver.
 
     PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b \
-        --reduced --tenants 3 --requests 12
+        --reduced --tenants 3 --requests 12 --mode continuous
 
 Builds a reduced model, spins up the multi-tenant scheduler and drains a
 synthetic request mix, printing per-tenant utilisation (the serving analogue
 of the paper's Fig 14 utilisation table) plus the realised staging/decode
-overlap pairs.  ``--blocking`` selects the legacy host-blocking schedule
-(engine.generate per slot) for A/B against the default dispatch/await
-overlap (tenant k+1 staged under tenant k's on-device decode).
+overlap pairs.  ``--mode`` selects the schedule:
+
+* ``continuous`` — continuous batching over a persistent slot table with a
+  paged KV-cache: requests are admitted into an in-flight decode and
+  retired rows are evicted, so the device never drains between tenant
+  batches (also prints micro-round occupancy stats);
+* ``overlapped`` (default) — tenant-slot batching with up to
+  ``--stage-depth`` batches staged under the running decode;
+* ``blocking`` — the legacy host-blocking schedule (A/B baseline).
 """
 from __future__ import annotations
 
@@ -23,7 +29,7 @@ from repro.core.tenancy import TenancyConfig
 from repro.models import params as pp
 from repro.models.model import build_model
 from repro.serving.engine import ServingEngine
-from repro.serving.multitenant import MultiTenantScheduler, Request
+from repro.serving.multitenant import MODES, MultiTenantScheduler, Request
 
 
 def main(argv=None) -> int:
@@ -35,18 +41,34 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mode", choices=MODES, default=None,
+                    help="serving schedule (default: overlapped)")
     ap.add_argument("--blocking", action="store_true",
-                    help="legacy host-blocking schedule (A/B baseline)")
+                    help="legacy alias for --mode blocking")
+    ap.add_argument("--stage-depth", type=int, default=1,
+                    help="overlapped mode: batches staged ahead of the "
+                         "one being awaited")
+    ap.add_argument("--capacity", type=int, default=4,
+                    help="continuous mode: slot-table rows")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="continuous mode: KV-cache page size (tokens)")
+    ap.add_argument("--inner-steps", type=int, default=4,
+                    help="continuous mode: decode steps per micro-round")
     args = ap.parse_args(argv)
+    mode = args.mode or ("blocking" if args.blocking else "overlapped")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
     engine = ServingEngine(cfg, params)
-    sched = MultiTenantScheduler(engine, max_batch=args.max_batch,
-                                 tenancy=TenancyConfig(1, args.tenants),
-                                 overlapped=not args.blocking)
+    sched = MultiTenantScheduler(
+        engine, max_batch=args.max_batch,
+        tenancy=TenancyConfig(1, args.tenants), mode=mode,
+        stage_depth=args.stage_depth,
+        continuous=dict(capacity=args.capacity, page_size=args.page_size,
+                        inner_steps=args.inner_steps,
+                        max_prompt_len=max(64, 2 * args.prompt_len)))
 
     rng = np.random.default_rng(0)
     for i in range(args.requests):
@@ -66,9 +88,13 @@ def main(argv=None) -> int:
           f"p99={np.percentile(lat,99)*1e3:.0f}ms")
     from repro.core.pipeline import timeline_overlaps
     ov = timeline_overlaps(sched.timeline)
-    mode = "blocking" if args.blocking else "overlapped"
     print(f"schedule={mode} overlap_pairs={sum(ov)}/{len(ov)} "
           f"(staging of slot k+1 inside slot k's decode window)")
+    if mode == "continuous":
+        eng = sched.continuous_engine
+        print(f"micro-rounds={eng.rounds} x {eng.inner_steps} steps, "
+              f"slot occupancy={eng.occupancy()*100:.1f}%, "
+              f"pages reused={eng.kv.pages_reused}/{eng.kv.pages_allocated}")
     return 0
 
 

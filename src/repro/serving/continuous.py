@@ -1,0 +1,442 @@
+"""Continuous batching over a persistent slot table (paged KV-cache decode).
+
+The slot-based scheduler serves one tenant batch at a time: the device runs
+that batch's scanned decode to completion, padded rows and all, before the
+next tenant's batch starts.  :class:`ContinuousBatchingEngine` instead keeps
+a fixed-capacity *slot table* resident on the device and interleaves three
+events per outer step, the serving analogue of the paper's fine-grained
+multi-tenant sharing:
+
+* **admission** — a queued request is prefilled at its (page-aligned) prompt
+  bucket, its KV written into freshly allocated :class:`repro.serving.
+  kvcache.PagedKVCache` pages, and its sampling state (per-request
+  temperature / top-k / PRNG key, last logits, position, remaining budget)
+  scattered into a free slot row;
+* **one decode micro-round** — a single jitted ``lax.scan`` of
+  ``inner_steps`` masked decode steps over *all* capacity rows.  The step is
+  shape-stable (paged gather/scatter, fixed capacity), so ragged
+  ``max_new_tokens`` mixes and mixed prompt buckets never retrace it: one
+  compile per batch capacity, plus one prefill/admission compile per prompt
+  bucket (``decode_traces`` / ``admit_traces`` count them for the tests);
+* **retirement** — rows whose token budget ran out are collected on the
+  host, their pages evicted back to the free list, their slots freed for the
+  next admission.
+
+Rows are masked, not compacted: an inactive row samples into the void (its
+emission is dropped), writes its K/V to the reserved TRASH page and keeps
+its SSM state frozen, so retirement costs no reshape or recompile — that is
+the "masked fixed-step scan with early-exit accounting" deferred from PR 2.
+
+Greedy token-exactness: an admitted request decodes through exactly the same
+prefill (same left-padded bucket prompt) and per-token math (see
+:func:`repro.serving.kvcache.paged_attention_decode`) as
+``ServingEngine.generate`` on that padded prompt, with the same
+``PRNGKey(seed)`` / ``fold_in(key, local_step)`` schedule — so each row's
+tokens match the blocking engine row-for-row, independent of what its
+neighbours in the slot table are doing (``tests/test_continuous.py``).
+
+Encoder-decoder configs are rejected: their cross-attention caches are
+per-request device tensors with no paged representation here (the slot-based
+paths still serve them).  MoE routing couples rows through expert capacity,
+so MoE archs run continuously but are only *statistically* exchangeable with
+the blocking engine, not bitwise.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ATTN, MOE, NONE, ArchConfig
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
+                                 apply_unembed, pad_vocab)
+from repro.serving.engine import ServingEngine, sample_rows
+from repro.serving.kvcache import (POS_SENTINEL, PagedKVCache,
+                                   paged_attention_decode)
+
+
+@dataclasses.dataclass
+class _Slot:
+    """Host-side record of one occupied slot-table row."""
+    req: Any                       # duck-typed: .prompt/.max_new_tokens/...
+    target: int
+    temp: float                    # resolved sampling params, mirrored on
+    top_k: int                     # the host so dispatch_round can pick the
+    tokens: List[int] = dataclasses.field(default_factory=list)   # static sampling tier
+
+
+@dataclasses.dataclass
+class RoundHandle:
+    """One dispatched (not yet collected) decode micro-round."""
+    emitted: jax.Array             # (steps, C) int32, -1 where row inactive
+    act: jax.Array                 # (steps, C) bool
+    steps: int
+    t_start: float
+    t_dispatched: float
+
+
+@dataclasses.dataclass
+class CollectResult:
+    finished: List[Tuple[Any, np.ndarray, int]]   # (request, tokens, slot)
+    active_steps: np.ndarray       # (C,) decode steps each row was live for
+    slot_reqs: List[Optional[Any]]  # slot -> request, pre-retirement snapshot
+
+
+class ContinuousBatchingEngine:
+    """Masked fixed-step scan decode over a persistent slot table.
+
+    Drive it either through :class:`repro.serving.multitenant.
+    MultiTenantScheduler` (``mode="continuous"``) or directly::
+
+        eng = ContinuousBatchingEngine(engine, capacity=4)
+        for req, tokens in eng.run_all(requests): ...
+    """
+
+    def __init__(self, engine: ServingEngine, capacity: int = 8,
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 inner_steps: int = 4, max_prompt_len: int = 128):
+        cfg = engine.cfg
+        if cfg.enc_dec:
+            raise ValueError(
+                "continuous batching needs a paged self-attention cache; "
+                "encoder-decoder cross-attention is not paged — use the "
+                "slot-based scheduler modes for enc-dec archs")
+        self.engine = engine
+        self.cfg = cfg
+        self.sh = engine.sh
+        self.params = engine.params
+        self.bundle = engine.bundle
+        self.capacity = capacity
+        self.inner_steps = inner_steps
+        self.max_prompt_len = max_prompt_len
+        self.n_stages = cfg.num_layers // cfg.stage_period
+        self.sched = cfg.block_schedule()[:cfg.stage_period]
+        self.page_size = page_size
+        max_ring = self._ring_len(self.bucket_len(max_prompt_len))
+        self.kv = PagedKVCache(cfg, capacity, page_size,
+                               -(-max_ring // page_size), num_pages)
+        self.state = self._init_state()
+        self._slots: List[Optional[_Slot]] = [None] * capacity
+        self._free_slots: List[int] = list(range(capacity - 1, -1, -1))
+        # trace counters: python side effects run only while jit traces
+        self.decode_traces = 0
+        self.admit_traces = 0
+        self.prefill_traces = 0
+        self.rounds = 0
+        self.row_steps = 0         # sum over rounds of live rows per step
+        self._build_jits()
+
+    # ------------------------------------------------------------------
+    def bucket_len(self, prompt_len: int) -> int:
+        """Prompts are left-padded to a page-aligned bucket so admission
+        (prefill + KV scatter) compiles once per bucket, not per length."""
+        p = self.page_size
+        return max(p, -(-prompt_len // p) * p)
+
+    def _ring_len(self, bucket: int) -> int:
+        w = self.cfg.sliding_window
+        return min(bucket, w) if w is not None else bucket
+
+    def active_count(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    def live_after(self, steps: int) -> bool:
+        """Will any current row still be live after ``steps`` more decode
+        steps?  Host-side: a row's collected tokens exclude any in-flight
+        round, so with one round of ``steps`` in flight this answers "is a
+        follow-up round worth dispatching" — False means pipelining another
+        round would decode an all-masked slot table."""
+        return any(s is not None and s.target - len(s.tokens) > steps
+                   for s in self._slots)
+
+    def free_slot_count(self) -> int:
+        return len(self._free_slots)
+
+    def occupancy(self) -> float:
+        total = self.rounds * self.inner_steps * self.capacity
+        return self.row_steps / total if total else 0.0
+
+    # ------------------------------------------------------------------
+    def _init_state(self) -> Dict[str, Any]:
+        cfg, c = self.cfg, self.capacity
+        caches: Dict[str, Any] = dict(self.kv.make_pools(self.n_stages))
+        for i, (mixer, _) in enumerate(self.sched):
+            if mixer != ATTN:
+                st = ssm_mod.init_ssm_state(cfg, c)
+                caches[f"sub{i}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (self.n_stages,) + a.shape), st)
+        return {
+            "caches": caches,
+            "page_table": self.kv.make_page_table(),
+            "pos_pool": self.kv.make_pos_pool(),
+            "logits": jnp.zeros((c, pad_vocab(cfg.vocab_size)), jnp.float32),
+            "pos": jnp.zeros((c,), jnp.int32),
+            "ring": jnp.ones((c,), jnp.int32),
+            "remaining": jnp.zeros((c,), jnp.int32),
+            "temps": jnp.zeros((c,), jnp.float32),
+            "topks": jnp.zeros((c,), jnp.int32),
+            "keys": jnp.zeros((c, 2), jnp.uint32),
+            "lstep": jnp.zeros((c,), jnp.int32),
+        }
+
+    # ------------------------------------------------------------------
+    def _build_jits(self) -> None:
+        cfg, sh = self.cfg, self.sh
+        sched = self.sched
+        p_sz = self.kv.page_size
+        trash = PagedKVCache.TRASH
+        has_attn = bool(self.kv.attn_subs)
+
+        def decode_step(params, st, all_greedy, any_topk):
+            active = st["remaining"] > 0
+            tok = sample_rows(st["logits"], st["temps"], st["topks"],
+                              st["keys"], all_greedy=all_greedy,
+                              any_topk=any_topk)
+            pos, ring, pt = st["pos"], st["ring"], st["page_table"]
+            if has_attn:
+                slot_log = jnp.mod(pos, ring)
+                blk = slot_log // p_sz
+                off = jnp.mod(slot_log, p_sz)
+                page = jnp.take_along_axis(pt, blk[:, None], axis=1)[:, 0]
+                page = jnp.where(active, page, trash)
+                pos_pool = st["pos_pool"].at[page, off].set(
+                    jnp.where(active, pos, POS_SENTINEL))
+                kpos = pos_pool[pt].reshape(pt.shape[0], -1)
+            else:
+                page = off = kpos = None
+                pos_pool = st["pos_pool"]
+
+            x = apply_embedding(params["embed"], tok[:, None], cfg, sh)
+            if not cfg.use_rope:
+                # _sinusoid_at broadcasts (C, 1, 1) positions to (C, 1, d)
+                # — the per-row twin of decode_fn's scalar call
+                from repro.models.model import _sinusoid_at
+                x = x + _sinusoid_at(pos[:, None, None],
+                                     cfg.d_model).astype(x.dtype)
+
+            def body(h, xs):
+                stage_params, stage_cache = xs
+                nc = {}
+                for i, (mixer, mlp) in enumerate(sched):
+                    sub = stage_params[f"sub{i}"]
+                    hin = apply_rmsnorm(sub["norm1"], h)
+                    if mixer == ATTN:
+                        hout, nci = paged_attention_decode(
+                            sub["attn"], hin, stage_cache[f"sub{i}"], pt,
+                            kpos, page, off, pos, cfg, sh)
+                    else:
+                        hout, nci = ssm_mod.apply_ssm_decode(
+                            sub["mamba"], hin, stage_cache[f"sub{i}"],
+                            cfg, sh)
+                        # frozen state for masked rows (attention rows are
+                        # masked by redirecting their write to TRASH instead)
+                        nci = jax.tree.map(
+                            lambda new, old: jnp.where(
+                                active.reshape((-1,) + (1,) * (new.ndim - 1)),
+                                new, old),
+                            nci, stage_cache[f"sub{i}"])
+                    nc[f"sub{i}"] = nci
+                    h = h + hout
+                    if mlp != NONE:
+                        hin = apply_rmsnorm(sub["norm2"], h)
+                        if mlp == MOE:
+                            hout, _ = moe_mod.apply_moe(sub["moe"], hin,
+                                                        cfg, sh)
+                        else:
+                            hout = apply_mlp(sub["mlp"], hin, cfg, sh)
+                        h = h + hout
+                return h, nc
+
+            h, new_caches = jax.lax.scan(body, x,
+                                         (params["stages"], st["caches"]))
+            h = apply_rmsnorm(params["final_norm"], h)
+            new_logits = apply_unembed(params["embed"], h, cfg, sh)[:, 0]
+
+            if all_greedy:               # keys unused by every live row
+                keys = st["keys"]
+            else:
+                keys_next = jax.vmap(jax.random.fold_in)(st["keys"],
+                                                         st["lstep"])
+                keys = jnp.where(active[:, None], keys_next, st["keys"])
+            new_st = {
+                **st,
+                "caches": new_caches,
+                "pos_pool": pos_pool,
+                "logits": jnp.where(active[:, None], new_logits,
+                                    st["logits"]),
+                "pos": pos + active,
+                "remaining": st["remaining"] - active,
+                "keys": keys,
+                "lstep": st["lstep"] + active,
+            }
+            return new_st, (jnp.where(active, tok, -1), active)
+
+        def round_fn(params, st, *, steps: int, all_greedy: bool,
+                     any_topk: bool):
+            self.decode_traces += 1          # incremented at trace time only
+            st, (emitted, act) = jax.lax.scan(
+                lambda c, _: decode_step(params, c, all_greedy, any_topk),
+                st, None, length=steps)
+            return st, emitted, act
+
+        self._round_jit = jax.jit(
+            round_fn, static_argnames=("steps", "all_greedy", "any_topk"))
+
+        def prefill_fn(params, batch):
+            self.prefill_traces += 1
+            return self.bundle.prefill_fn(params, batch, sh)
+
+        self._prefill_jit = jax.jit(prefill_fn)
+
+        def admit_fn(st, caches_p, logits0, slot, pages, remaining, temp,
+                     topk, key, *, bucket: int, ring: int):
+            self.admit_traces += 1
+            new = dict(st)
+            nb = pages.shape[0] if pages is not None else 0
+            if nb:
+                row = jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
+                               jnp.int32).at[:nb].set(pages)
+                new["page_table"] = st["page_table"].at[slot].set(row)
+                name = self.kv.attn_subs[0]
+                pos_src = caches_p[name]["pos"][0, 0]            # (ring,)
+                pos_vals = jnp.full((nb * p_sz,), POS_SENTINEL,
+                                    jnp.int32).at[:ring].set(pos_src)
+                new["pos_pool"] = st["pos_pool"].at[pages].set(
+                    pos_vals.reshape(nb, p_sz))
+            nc = {}
+            for i, (mixer, _) in enumerate(sched):
+                sname = f"sub{i}"
+                cur = st["caches"][sname]
+                if mixer == ATTN:
+                    def to_pages(leaf, pool_leaf):
+                        pad = nb * p_sz - ring
+                        v = jnp.pad(leaf[:, 0],
+                                    ((0, 0), (0, pad), (0, 0), (0, 0)))
+                        v = v.reshape(self.n_stages, nb, p_sz,
+                                      *leaf.shape[3:])
+                        return pool_leaf.at[:, pages].set(
+                            v.astype(pool_leaf.dtype))
+                    nc[sname] = {"k": to_pages(caches_p[sname]["k"],
+                                               cur["k"]),
+                                 "v": to_pages(caches_p[sname]["v"],
+                                               cur["v"])}
+                else:
+                    nc[sname] = jax.tree.map(
+                        lambda t, cp: t.at[:, slot].set(cp[:, 0]),
+                        cur, caches_p[sname])
+            new["caches"] = nc
+            new["logits"] = st["logits"].at[slot].set(logits0[0])
+            new["pos"] = st["pos"].at[slot].set(bucket)
+            new["ring"] = st["ring"].at[slot].set(ring)
+            new["remaining"] = st["remaining"].at[slot].set(remaining)
+            new["temps"] = st["temps"].at[slot].set(temp)
+            new["topks"] = st["topks"].at[slot].set(topk)
+            new["keys"] = st["keys"].at[slot].set(key)
+            new["lstep"] = st["lstep"].at[slot].set(0)
+            return new
+
+        self._admit_jit = jax.jit(admit_fn,
+                                  static_argnames=("bucket", "ring"))
+
+    # ------------------------------------------------------------------
+    # admission
+    # ------------------------------------------------------------------
+    def try_admit(self, req: Any) -> bool:
+        """Admit one request into a free slot; False when no slot or no
+        pages are available right now (caller keeps it queued)."""
+        if not self._free_slots:
+            return False
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size > self.max_prompt_len:
+            raise ValueError(
+                f"prompt of {prompt.size} tokens exceeds max_prompt_len="
+                f"{self.max_prompt_len}")
+        bucket = self.bucket_len(prompt.size)
+        ring = self._ring_len(bucket)
+        slot = self._free_slots[-1]
+        pages = None
+        if self.kv.attn_subs:
+            pages = self.kv.alloc(slot, self.kv.blocks_for(ring))
+            if pages is None:
+                return False                 # pool pressure: retry later
+        self._free_slots.pop()
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, bucket - prompt.size:] = prompt
+        logits, caches, _ = self._prefill_jit(self.params,
+                                              {"tokens": jnp.asarray(padded)})
+        temp = getattr(req, "temperature", None)
+        if temp is None:
+            temp = self.engine.temperature
+        topk = int(getattr(req, "top_k", 0) or 0)
+        self.state = self._admit_jit(
+            self.state, caches, logits, slot,
+            None if pages is None else jnp.asarray(pages),
+            int(req.max_new_tokens), float(temp), topk,
+            jax.random.PRNGKey(int(getattr(req, "seed", 0) or 0)),
+            bucket=bucket, ring=ring)
+        self._slots[slot] = _Slot(req, int(req.max_new_tokens),
+                                  float(temp), topk)
+        return True
+
+    # ------------------------------------------------------------------
+    # decode micro-rounds
+    # ------------------------------------------------------------------
+    def dispatch_round(self) -> RoundHandle:
+        """Enqueue one masked micro-round (non-blocking); the caller may
+        admit the next requests while it runs on the device."""
+        t0 = time.perf_counter()
+        # static sampling tier from the live rows (an all-greedy round is a
+        # bare argmax; at most 3 round variants ever compile)
+        live = [s for s in self._slots if s is not None]
+        all_greedy = all(s.temp <= 0 for s in live)
+        any_topk = any(s.top_k > 0 for s in live)
+        self.state, emitted, act = self._round_jit(
+            self.params, self.state, steps=self.inner_steps,
+            all_greedy=all_greedy, any_topk=any_topk)
+        self.rounds += 1
+        return RoundHandle(emitted, act, self.inner_steps, t0,
+                           time.perf_counter())
+
+    def collect(self, handle: RoundHandle) -> CollectResult:
+        """Materialise a round's emissions, append tokens to their rows and
+        retire rows that hit their budget (pages evicted to the free list)."""
+        emitted = np.asarray(handle.emitted)
+        act = np.asarray(handle.act)
+        slot_reqs = [s.req if s is not None else None for s in self._slots]
+        active_steps = act.sum(axis=0).astype(np.int64)
+        self.row_steps += int(active_steps.sum())
+        finished: List[Tuple[Any, np.ndarray, int]] = []
+        for c, s in enumerate(self._slots):
+            if s is None:
+                continue
+            s.tokens.extend(int(t) for t in emitted[act[:, c], c])
+            if len(s.tokens) >= s.target:
+                finished.append((s.req,
+                                 np.asarray(s.tokens[:s.target], np.int32),
+                                 c))
+                self.kv.free(c)
+                self._slots[c] = None
+                self._free_slots.append(c)
+        return CollectResult(finished, active_steps, slot_reqs)
+
+    # ------------------------------------------------------------------
+    def run_all(self, requests) -> List[Tuple[Any, np.ndarray]]:
+        """FIFO-drain a request list without a scheduler: admit as slots and
+        pages free up, one micro-round per iteration.  Returns (request,
+        tokens) in completion order."""
+        queue: Deque[Any] = collections.deque(requests)
+        done: List[Tuple[Any, np.ndarray]] = []
+        while queue or self.active_count():
+            while queue and self.try_admit(queue[0]):
+                queue.popleft()
+            res = self.collect(self.dispatch_round())
+            done.extend((req, toks) for req, toks, _ in res.finished)
+        return done

@@ -41,6 +41,45 @@ from repro.distributed.sharding import Sharder, null_sharder
 from repro.models.model import ModelBundle, build_model
 
 
+def sample_rows(logits: jax.Array, temps: jax.Array, topks: jax.Array,
+                keys: jax.Array, *, all_greedy: bool = False,
+                any_topk: bool = True) -> jax.Array:
+    """Per-row sampling: greedy where ``temps <= 0``, else temperature
+    (optionally top-k truncated) categorical with a *per-row* PRNG key.
+
+    This is the shared sampling mechanism of the per-request paths: the
+    split engine threads (temps, topks, keys) through the ``lax.scan``
+    decode-loop carry (see :meth:`ServingEngine.dispatch`), and the
+    continuous-batching engine threads the same triple through its
+    persistent slot-table carry — one sampler, two schedulers.
+
+    logits: (B, V); temps: (B,) float; topks: (B,) int (0 disables top-k);
+    keys: (B, 2) uint32 PRNG keys.  Greedy rows ignore temperature and keys
+    entirely, so they stay token-exact with the host-blocking ``generate``
+    loop regardless of their neighbours' sampling params.
+
+    ``all_greedy`` / ``any_topk`` are *static* strength hints the caller
+    derives on the host from the live rows (the row-wise masks make them
+    semantics-preserving): an all-greedy step is a bare argmax — the
+    vocab-wide sort and categorical draw would otherwise dominate a small
+    model's decode step — and ``any_topk=False`` skips the sort.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if all_greedy:
+        return greedy
+    scaled = logits
+    if any_topk:
+        v = logits.shape[-1]
+        srt = jnp.sort(logits, axis=-1)                   # ascending
+        kidx = jnp.clip(v - topks, 0, v - 1).astype(jnp.int32)
+        thresh = jnp.take_along_axis(srt, kidx[:, None], axis=-1)
+        keep = (topks[:, None] <= 0) | (logits >= thresh)
+        scaled = jnp.where(keep, logits, -jnp.inf)
+    scaled = scaled / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy)
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, steps)
@@ -118,6 +157,31 @@ class ServingEngine:
         self._decode_loop = jax.jit(decode_loop,
                                     static_argnames=("steps", "greedy"))
 
+        def decode_loop_rows(params, logits0, caches, idx, temps, topks,
+                             keys, *, steps: int, all_greedy: bool,
+                             any_topk: bool):
+            # per-request sampling params ride the scan carry: each row keeps
+            # its own (temperature, top_k, key), same key/logits schedule as
+            # the scalar path so greedy rows stay token-exact with generate()
+            def step(carry, i):
+                logits, caches, keys = carry
+                tok = sample_rows(logits, temps, topks, keys,
+                                  all_greedy=all_greedy, any_topk=any_topk)
+                new_logits, new_caches = self.bundle.decode_fn(
+                    params, tok[:, None], caches, idx + i, self.sh)
+                keys = jax.vmap(lambda k: jax.random.fold_in(k, i))(keys)
+                return (new_logits, new_caches, keys), tok
+
+            (_, _, _), toks = jax.lax.scan(
+                step, (logits0, caches, keys),
+                jnp.arange(steps, dtype=jnp.int32))
+            return toks.T
+
+        self._decode_loop_rows = jax.jit(
+            decode_loop_rows,
+            static_argnames=("steps", "all_greedy", "any_topk"))
+        self.decode_steps = 0       # scanned decode steps enqueued (benchmarks)
+
     # ------------------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0.0:
@@ -140,6 +204,7 @@ class ServingEngine:
                  seed: int = 0) -> GenerationResult:
         """prompts: (B, S) int32.  Greedy/temperature sampling."""
         batch = self._make_batch(prompts, extra_inputs)
+        self.decode_steps += int(max_new_tokens)
         t0 = time.perf_counter()
         logits, caches, idx = self._prefill(self.params, batch)
         logits.block_until_ready()
@@ -165,12 +230,38 @@ class ServingEngine:
     # ------------------------------------------------------------------
     def dispatch(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  extra_inputs: Optional[Dict[str, Any]] = None,
-                 seed: int = 0) -> PendingGeneration:
+                 seed: int = 0,
+                 temperatures: Optional[Any] = None,
+                 top_ks: Optional[Any] = None,
+                 seeds: Optional[Any] = None) -> PendingGeneration:
         """Enqueue prefill + the full on-device decode loop; never blocks on
-        device results, so the caller can stage other work under it."""
+        device results, so the caller can stage other work under it.
+
+        ``temperatures``/``top_ks``/``seeds`` (each (B,), any one optional)
+        switch the scanned sampler to per-request params threaded through the
+        scan carry via :func:`sample_rows`; left as None, the engine-level
+        scalar path runs (token-exact with ``generate``, same key schedule).
+        """
         batch = self._make_batch(prompts, extra_inputs)
         t_start = time.perf_counter()
         logits, caches, idx = self._prefill(self.params, batch)
+        self.decode_steps += int(max_new_tokens)
+        if temperatures is not None or top_ks is not None or seeds is not None:
+            b = prompts.shape[0]
+            temps = np.full(b, self.temperature, np.float32) \
+                if temperatures is None else np.asarray(temperatures, np.float32)
+            topks = np.zeros(b, np.int32) if top_ks is None \
+                else np.asarray(top_ks, np.int32)
+            seed_arr = np.full(b, seed, np.int64) if seeds is None \
+                else np.asarray(seeds)
+            keys = jnp.stack([jax.random.PRNGKey(int(s)) for s in seed_arr])
+            toks = self._decode_loop_rows(
+                self.params, logits, caches, idx, jnp.asarray(temps),
+                jnp.asarray(topks), keys, steps=int(max_new_tokens),
+                all_greedy=bool((temps <= 0).all()),
+                any_topk=bool((topks > 0).any()))
+            return PendingGeneration(toks, logits, int(max_new_tokens),
+                                     t_start, time.perf_counter())
         # temperature is passed unclamped: greedy is static, so the
         # logits/temp division is never traced when temperature <= 0
         toks = self._decode_loop(

@@ -1,0 +1,215 @@
+"""Paged KV-cache for continuous batching (vLLM-style, JAX-functional).
+
+The slot-based serving paths keep one dense KV cache per padded batch; a
+batch's cache lives and dies with its dispatch, so short requests pay for the
+longest row and the device idles while a finished batch's tail rows pad out.
+:class:`PagedKVCache` breaks the cache into fixed-size *pages* drawn from a
+shared pool so a persistent slot table (see :mod:`repro.serving.continuous`)
+can admit and retire requests independently:
+
+* **fixed-size pages** — the K/V pool per attention sublayer is
+  ``(n_stages, num_pages, page_size, Hkv, D)``; a shared position pool
+  ``(num_pages, page_size)`` carries the absolute token position of every
+  cache entry (the validity source for the attention mask, exactly like the
+  dense cache's ``pos`` plane).
+* **per-sequence page tables** — ``(capacity, max_blocks)`` int32 mapping a
+  slot's logical cache blocks to physical pages.  Unused blocks point at the
+  reserved ``SENTINEL`` page whose positions stay at ``POS_SENTINEL`` so
+  gathered padding is always masked out.
+* **free-list allocation / eviction** — a host-side LIFO free list; admission
+  takes ``blocks_for(ring_len)`` pages, retirement returns them.  LIFO makes
+  page reuse immediate, which the eviction tests exploit.  Allocation
+  failure (pool pressure) is a soft "not now": the request stays queued.
+* **gather/scatter attention reads** — :func:`paged_attention_decode` writes
+  the new token's K/V at ``(page, offset)`` per row and gathers the full
+  logical window via the page table, so the decode step has a single static
+  shape regardless of the prompt-length mix (shape-stable: one compile).
+
+Masked (inactive) rows redirect their writes to the reserved ``TRASH`` page,
+which no active row's page table ever references — a retired slot's stale
+page table can therefore neither corrupt pages reallocated to newer requests
+nor resurrect stale positions.
+
+Exactness contract: the dense decode path (:func:`repro.models.layers.
+apply_attention_decode`) treats a prefix cache of length ``s_c`` as a ring —
+token ``pos`` lands in slot ``pos % s_c`` — and masks validity with
+``kpos <= pos`` (plus the sliding window).  The paged read/write replicates
+that ring slot-for-slot (logical slot ``j`` holds exactly what dense slot
+``j`` holds, in the same order after the gather's reshape), with the same
+bf16 storage casts, einsum equations and mask constants, so greedy decode
+through the paged path is token-exact with ``ServingEngine.generate`` on the
+same padded prompt (``tests/test_continuous.py`` locks this in, including
+after pages have been freed and reused).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ATTN, ArchConfig
+from repro.distributed.sharding import Sharder
+from repro.models.layers import _project_qkv, apply_rope
+
+POS_SENTINEL = 2 ** 30     # matches init_kv_cache's "empty slot" position
+
+
+def attn_subs(cfg: ArchConfig) -> List[str]:
+    """Names of the attention sublayers in one stage (``sub{i}``)."""
+    sched = cfg.block_schedule()[:cfg.stage_period]
+    return [f"sub{i}" for i, (mixer, _) in enumerate(sched) if mixer == ATTN]
+
+
+class PagedKVCache:
+    """Page pool + per-slot page tables + host free list.
+
+    Device state (pools / position pool / page tables) is *built* here but
+    owned functionally by the engine's state pytree — every jitted update
+    returns new arrays.  This class keeps the host-side truth: which pages
+    are free, which slot owns which pages, and the allocation/reuse counters
+    the eviction tests assert on.
+    """
+
+    SENTINEL = 0           # page-table padding: never written, never valid
+    TRASH = 1              # masked rows' write target: never read as valid
+    RESERVED = 2
+
+    def __init__(self, cfg: ArchConfig, capacity: int, page_size: int,
+                 max_blocks: int, num_pages: Optional[int] = None):
+        self.cfg = cfg
+        self.capacity = capacity
+        self.page_size = page_size
+        self.max_blocks = max(max_blocks, 1)
+        self.attn_subs = attn_subs(cfg)
+        if num_pages is None:
+            num_pages = self.RESERVED + capacity * self.max_blocks
+        if num_pages < self.RESERVED + self.max_blocks:
+            raise ValueError("num_pages cannot hold even one full sequence")
+        self.num_pages = num_pages
+        # LIFO free list: freshly freed pages are reallocated first
+        self._free: List[int] = list(range(num_pages - 1, self.RESERVED - 1,
+                                           -1))
+        self._owned: Dict[int, List[int]] = {}
+        self._ever_used: set = set()
+        self.pages_allocated = 0
+        self.pages_reused = 0
+
+    # ------------------------------------------------------------------
+    # host-side allocator
+    # ------------------------------------------------------------------
+    def blocks_for(self, ring_len: int) -> int:
+        return -(-ring_len // self.page_size)        # ceil div
+
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def alloc(self, slot: int, n_blocks: int) -> Optional[np.ndarray]:
+        """Take ``n_blocks`` pages for ``slot``; None if the pool is short
+        (the caller leaves the request queued and retries after eviction)."""
+        if n_blocks > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n_blocks)]
+        self._owned[slot] = pages
+        self.pages_allocated += n_blocks
+        self.pages_reused += sum(p in self._ever_used for p in pages)
+        self._ever_used.update(pages)
+        return np.asarray(pages, np.int32)
+
+    def free(self, slot: int) -> int:
+        """Evict a retired slot: its pages go back on the free list."""
+        pages = self._owned.pop(slot, [])
+        self._free.extend(pages)
+        return len(pages)
+
+    # ------------------------------------------------------------------
+    # device-state constructors (engine holds the results in its pytree)
+    # ------------------------------------------------------------------
+    def make_page_table(self) -> jax.Array:
+        return jnp.full((self.capacity, self.max_blocks), self.SENTINEL,
+                        jnp.int32)
+
+    def make_pos_pool(self) -> jax.Array:
+        return jnp.full((self.num_pages, self.page_size), POS_SENTINEL,
+                        jnp.int32)
+
+    def make_pools(self, n_stages: int) -> Dict[str, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        shape = (n_stages, self.num_pages, self.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        return {name: {"k": jnp.zeros(shape, jnp.bfloat16),
+                       "v": jnp.zeros(shape, jnp.bfloat16)}
+                for name in self.attn_subs}
+
+
+# ---------------------------------------------------------------------------
+# pure gather/scatter primitives (used inside the jitted decode step)
+# ---------------------------------------------------------------------------
+def paged_read(pool: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather a pool ``(NP, P, ...)`` through ``page_table (C, NB)`` into the
+    logical view ``(C, NB*P, ...)``: block b, offset o -> logical slot
+    ``b*P + o``, the exact layout of the dense ring cache."""
+    g = pool[page_table]                       # (C, NB, P, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_write(pool: jax.Array, pages: jax.Array, offsets: jax.Array,
+                values: jax.Array) -> jax.Array:
+    """Scatter one entry per row: ``pool[pages[c], offsets[c]] = values[c]``.
+    Masked rows all target the TRASH page; their collisions are benign
+    because TRASH is never read as valid."""
+    return pool.at[pages, offsets].set(values)
+
+
+def paged_attention_decode(p, x, pool: Dict[str, jax.Array],
+                           page_table: jax.Array, kpos: jax.Array,
+                           write_page: jax.Array, write_off: jax.Array,
+                           positions: jax.Array, cfg: ArchConfig,
+                           sh: Sharder):
+    """Single-token GQA decode against a paged cache (per-row positions).
+
+    Mirrors :func:`repro.models.layers.apply_attention_decode` operation for
+    operation (same projections, rope at the row's absolute position, bf16
+    cache casts, validity mask ``kpos <= pos`` with optional sliding window,
+    identical einsum contractions) — only the cache storage is paged.  The
+    gathered logical view may be longer than a row's ring (page-table padding
+    points at the SENTINEL page), but padded entries carry ``POS_SENTINEL``
+    so their bias is -1e30 and their softmax weight underflows to exactly 0.
+
+    x: (C, 1, d); kpos: (C, L) gathered positions (already includes this
+    step's write); positions: (C,) absolute position of the new token.
+    Returns (out (C, 1, d), new pool dict).
+    """
+    cdt_x = x.dtype
+    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    C = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg, sh)
+    if cfg.use_rope:
+        q = apply_rope(q, positions[:, None], cfg.rope_theta)
+        k_new = apply_rope(k_new, positions[:, None], cfg.rope_theta)
+    k_pool = paged_write(pool["k"], write_page, write_off,
+                         k_new[:, 0].astype(pool["k"].dtype))
+    v_pool = paged_write(pool["v"], write_page, write_off,
+                         v_new[:, 0].astype(pool["v"].dtype))
+    k = paged_read(k_pool, page_table)                     # (C, L, Hkv, D)
+    v = paged_read(v_pool, page_table)
+    valid = kpos <= positions[:, None]
+    if cfg.sliding_window is not None:
+        valid &= kpos > positions[:, None] - cfg.sliding_window
+    bias_pos = jnp.where(valid, 0.0, -1e30)                # (C, L)
+    rep = H // Hkv
+    qr = q.reshape(C, 1, Hkv, rep, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, k.astype(qr.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias_pos[:, None, None, None, :]
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhrk,bkhd->bqhrd", pattn, v.astype(qr.dtype),
+                   preferred_element_type=jnp.float32)
+    o = o.reshape(C, 1, H * D).astype(cdt_x)
+    from repro.models.layers import dtype_of
+    out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(dtype_of(
+        cfg.compute_dtype)))
+    return out, {"k": k_pool, "v": v_pool}

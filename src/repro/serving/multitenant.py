@@ -1,26 +1,42 @@
 """Multi-tenant serving scheduler (the paper's second multi-tenancy reading:
 several applications share one physical accelerator).
 
-Each tenant owns a request queue; the scheduler cycles *tenant slots* on the
-shared device.  The engine exposes split ``dispatch``/``await_result``
-halves (prefill + a single on-device ``lax.scan`` decode loop are enqueued
-without blocking), so with ``overlapped=True`` (default) the scheduler runs
-the paper's transfer-under-compute schedule at serving granularity: while
-tenant k's decode loop occupies the device, the host assembles and stages
-tenant k+1's padded batch and enqueues its prefill+decode — the serving
-analogue of the stage(k+1)-under-compute(k) schedule the risk stack runs on
-:class:`repro.core.pipeline.PipelineExecutor`.  ``overlapped=False`` keeps
-the legacy blocking schedule (``engine.generate`` per slot, stage-ahead
-limited to host-side batch assembly) as the A/B baseline.
+Each tenant owns a request queue; the scheduler serves them on one shared
+engine under one of three schedules (``mode=``):
+
+* ``"continuous"`` — continuous batching over a persistent slot table
+  (:class:`repro.serving.continuous.ContinuousBatchingEngine`): each outer
+  step admits queued requests into free slots (prefill + paged-KV scatter,
+  one request at a time, round-robin or straggler-priority across tenants),
+  dispatches one masked fixed-step decode micro-round over *all* slots, and
+  retires rows that hit their token budget, evicting their
+  :class:`repro.serving.kvcache.PagedKVCache` pages.  The device never
+  drains between tenant batches and short requests never pad out long ones
+  — the finest-grained sharing of the three, and the paper's utilisation
+  argument taken to per-request granularity.  Admission + the next round's
+  dispatch run while the previous round still occupies the device, so the
+  same falsifiable :func:`repro.core.pipeline.timeline_overlaps` predicate
+  applies round-to-round.
+* ``"overlapped"`` (default) — tenant-slot batching on the engine's split
+  ``dispatch``/``await_result`` halves: while tenant k's scanned decode
+  occupies the device, the host assembles, stages and dispatches up to
+  ``stage_depth`` further tenant batches (a depth-N generalisation of PR 2's
+  double buffering).
+* ``"blocking"`` — the legacy host-blocking ``engine.generate`` per slot
+  (stage-ahead limited to host-side batch assembly), kept as the A/B
+  baseline.
 
 Slot selection is straggler-aware: with ``straggler_priority=True`` the
-scheduler serves the tenant with the slowest recent per-request time first
-(the serving analogue of ``reorder_for_stragglers``), subject to the round
-invariant that every backlogged tenant is served exactly once per round;
-otherwise plain round-robin.  Per-slot :class:`repro.core.pipeline.
-TenantTimeline` records (transfer window = batch assembly + staging
-dispatch, compute window = dispatch -> device-ready) feed the benchmark
-harness and the planner's utilisation model; in overlapped mode a shared
+scheduler serves the tenant with the slowest recent per-request time first,
+subject to the round invariant that every backlogged tenant is served
+exactly once per round.  The EWMA is stamped *as soon as a completion has
+landed* — before the next pick — via :meth:`_harvest_ready`, closing PR 2's
+one-batch lag (the pick for slot k+1 used to run before slot k's completion
+could stamp its latency even when the device was already done).
+
+Per-slot :class:`repro.core.pipeline.TenantTimeline` records (transfer
+window = batch assembly / admission + staging dispatch, compute window =
+dispatch -> device-ready) feed the benchmark harness; a shared
 :class:`repro.core.pipeline.CompletionWaiter` stamps ``compute_end`` the
 moment the decode output is ready, so :func:`repro.core.pipeline.
 timeline_overlaps` is falsifiable on the serving timeline exactly as on the
@@ -41,12 +57,21 @@ from repro.distributed.fault import StragglerDetector
 from repro.serving.engine import (GenerationResult, PendingGeneration,
                                   ServingEngine)
 
+MODES = ("continuous", "overlapped", "blocking")
+
 
 @dataclasses.dataclass
 class Request:
     tenant: str
     prompt: np.ndarray               # (S,) int32
     max_new_tokens: int = 16
+    # per-request sampling: None temperature inherits the engine default;
+    # top_k=0 disables truncation.  Honoured by the overlapped schedule
+    # (threaded through the scanned decode-loop carry) and the continuous
+    # schedule (slot-table carry); the blocking baseline stays engine-level.
+    temperature: Optional[float] = None
+    top_k: int = 0
+    seed: int = 0
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
 
 
@@ -67,22 +92,39 @@ class _Inflight:
     handle: PendingGeneration
     entry: TenantTimeline
     stamped: Any                     # threading.Event from the waiter
+    accounted: bool = False          # EWMA/busy already stamped (harvest)
+
+
+@dataclasses.dataclass
+class _InflightRound:
+    """One dispatched continuous-batching micro-round."""
+    handle: Any                      # continuous.RoundHandle
+    entry: TenantTimeline
+    stamped: Any
 
 
 class MultiTenantScheduler:
-    """Tenant-slot batching over one shared engine (round-robin or
-    straggler-priority), with tenant k+1's batch assembly + staging
-    dispatched underneath tenant k's on-device decode."""
+    """Tenant batching over one shared engine (round-robin or
+    straggler-priority) under a continuous, overlapped or blocking schedule
+    (see module docstring)."""
 
     def __init__(self, engine: ServingEngine, max_batch: int = 8,
                  tenancy: Optional[TenancyConfig] = None,
                  straggler_priority: bool = False,
-                 overlapped: bool = True):
+                 overlapped: bool = True,
+                 mode: Optional[str] = None,
+                 stage_depth: int = 1,
+                 continuous: Optional[Dict[str, Any]] = None,
+                 continuous_engine: Optional[Any] = None):
         self.engine = engine
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
         self.straggler_priority = straggler_priority
-        self.overlapped = overlapped
+        self.mode = mode or ("overlapped" if overlapped else "blocking")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}")
+        self.overlapped = self.mode == "overlapped"
+        self.stage_depth = max(int(stage_depth), 1)
         self.queues: Dict[str, Deque[Request]] = collections.defaultdict(
             collections.deque)
         self.detector = StragglerDetector()
@@ -97,13 +139,29 @@ class MultiTenantScheduler:
         self._prepared: Optional[Tuple[str, List[Request], np.ndarray, int]] \
             = None
         self._asm_window = (0.0, 0.0)
-        # overlapped path: the dispatched-but-not-awaited tenant slot
-        self._inflight: Optional[_Inflight] = None
+        # overlapped path: dispatched-but-not-awaited tenant slots, oldest
+        # first; holds at most 1 + stage_depth entries (the one being
+        # awaited plus the staged-ahead queue)
+        self._inflight: Deque[_Inflight] = collections.deque()
         self._waiter: Optional[CompletionWaiter] = None
         self._last_ready = 0.0           # previous slot's compute_end
         self._round_served: set = set()
         self._recent: Dict[str, float] = {}   # EWMA per-request seconds
         self._t0 = time.perf_counter()
+        # continuous path: pass continuous_engine to share one (compiled)
+        # ContinuousBatchingEngine across scheduler instances — jit caches
+        # are per-engine, and a drained engine's slot table is fully reusable
+        self._ceng = None
+        if self.mode == "continuous":
+            if continuous_engine is not None:
+                self._ceng = continuous_engine
+            else:
+                from repro.serving.continuous import ContinuousBatchingEngine
+                self._ceng = ContinuousBatchingEngine(engine,
+                                                      **(continuous or {}))
+        self._cont_inflight: Optional[_InflightRound] = None
+        self._cont_rounds = 0
+        self._row_busy: Dict[int, float] = collections.defaultdict(float)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -116,8 +174,9 @@ class MultiTenantScheduler:
         n = sum(len(q) for q in self.queues.values())
         if self._prepared is not None:   # staged-ahead batch not yet served
             n += len(self._prepared[1])
-        if self._inflight is not None:   # dispatched batch not yet awaited
-            n += len(self._inflight.reqs)
+        n += sum(len(fl.reqs) for fl in self._inflight)   # dispatched slots
+        if self._ceng is not None:       # admitted, not yet retired rows
+            n += self._ceng.active_count()
         return n
 
     def close(self) -> None:
@@ -184,24 +243,69 @@ class MultiTenantScheduler:
             prompts[i, s_max - r.prompt.size:] = r.prompt
         return tenant, reqs, prompts, max(r.max_new_tokens for r in reqs)
 
+    def _sampling_kwargs(self, reqs: List[Request]) -> Dict[str, Any]:
+        """Per-request sampling arrays for dispatch(); empty when every row
+        uses engine defaults so the scalar (token-exact) path keeps running."""
+        if not any(r.temperature is not None or r.top_k or r.seed
+                   for r in reqs):
+            return {}
+        return {
+            "temperatures": [self.engine.temperature if r.temperature is None
+                             else r.temperature for r in reqs],
+            "top_ks": [r.top_k for r in reqs],
+            "seeds": [r.seed for r in reqs],
+        }
+
     # ------------------------------------------------------------------
-    # Accounting shared by both schedules
+    # Accounting shared by the schedules
     # ------------------------------------------------------------------
-    def _account(self, tenant: str, reqs: List[Request], tokens: np.ndarray,
-                 busy_s: float) -> None:
+    def _account_busy(self, tenant: str, n_reqs: int, busy_s: float) -> None:
         st = self.stats[tenant]
-        st["requests"] += len(reqs)
-        st["tokens"] += tokens.size
+        st["requests"] += n_reqs
         st["busy_s"] += busy_s
-        per_req = busy_s / max(len(reqs), 1)
+        per_req = busy_s / max(n_reqs, 1)
         self._note_batch_time(tenant, per_req)
         # keyed by the stable tenant slot: hash(tenant) is salted per
         # process and can collide across tenants, which would merge two
         # tenants' EWMAs in the detector
         self.detector.update({self._slot_of[tenant]: per_req})
 
+    def _finalise_windows(self, fl: _Inflight) -> None:
+        """Clamp the compute window to device occupancy and stamp the
+        tenant's EWMA/busy accounting.  Idempotent via ``fl.accounted``;
+        callable as soon as the waiter has stamped ``compute_end`` — in
+        particular from :meth:`_harvest_ready`, *before* the next straggler
+        pick, which is what closes the one-batch EWMA lag."""
+        # open the compute window at device occupancy, not dispatch return:
+        # this slot was enqueued behind the previous slot's decode (the
+        # device stream serialises them), and that queue wait must not be
+        # billed to this tenant's busy/EWMA or double-counted in
+        # utilisation.  The previous slot's compute_end is known here —
+        # slots complete in dispatch order — so the clamp can only move
+        # compute_start earlier than the next slot's transfer_start, never
+        # past it (the overlap predicate stays falsifiable).
+        fl.entry.compute_start = max(fl.entry.compute_start,
+                                     min(self._last_ready,
+                                         fl.entry.compute_end))
+        self._last_ready = fl.entry.compute_end
+        self._account_busy(fl.tenant, len(fl.reqs),
+                           fl.entry.compute_end - fl.entry.compute_start)
+        fl.accounted = True
+
+    def _harvest_ready(self) -> None:
+        """Stamp accounting for inflight slots whose decode has already
+        landed (completions arrive in dispatch order, so stop at the first
+        unstamped one).  Runs before every pick: a straggler-priority pick
+        therefore sees the freshest latency the device can possibly have
+        reported, instead of lagging one batch behind."""
+        for fl in self._inflight:
+            if not fl.stamped.is_set():
+                break
+            if not fl.accounted:
+                self._finalise_windows(fl)
+
     # ------------------------------------------------------------------
-    # Overlapped schedule: dispatch k+1's staging under k's decode
+    # Overlapped schedule: depth-N staging under the head slot's decode
     # ------------------------------------------------------------------
     def _launch_next(self) -> Optional[_Inflight]:
         """Assemble + stage + dispatch the next tenant slot (non-blocking).
@@ -211,6 +315,7 @@ class MultiTenantScheduler:
         at dispatch return and is closed by the CompletionWaiter when the
         decode output is device-ready.
         """
+        self._harvest_ready()
         tenant = self._next_tenant()
         if tenant is None:
             return None
@@ -218,50 +323,138 @@ class MultiTenantScheduler:
         # _next_tenant only returns tenants with backlog, so the batch is
         # never empty (and the tenant's round-served mark stays consistent)
         tenant, reqs, prompts, steps = self._build_batch(tenant)
-        handle = self.engine.dispatch(prompts, steps)
+        handle = self.engine.dispatch(prompts, steps,
+                                      **self._sampling_kwargs(reqs))
         te = time.perf_counter() - self._t0
         slot = self._slot_of[tenant]
         entry = TenantTimeline(vdev=slot, pdev=0, slot=slot,
                                transfer_start=asm_start, transfer_end=te,
                                compute_start=te, compute_end=0.0)
+        stamped = self._get_waiter().submit(handle.tokens, entry)
+        return _Inflight(tenant, reqs, handle, entry, stamped)
+
+    def _get_waiter(self) -> CompletionWaiter:
         if self._waiter is None:
             self._waiter = CompletionWaiter(
                 lambda: time.perf_counter() - self._t0,
                 name="serving-waiter")
-        stamped = self._waiter.submit(handle.tokens, entry)
-        return _Inflight(tenant, reqs, handle, entry, stamped)
+        return self._waiter
+
+    def _fill_inflight(self) -> None:
+        """Top the dispatch queue up to 1 + stage_depth entries: the head
+        (next to be awaited) plus stage_depth staged-ahead batches whose
+        assembly + staging run under the head's on-device decode."""
+        while len(self._inflight) < 1 + self.stage_depth:
+            nxt = self._launch_next()
+            if nxt is None:
+                return
+            self._inflight.append(nxt)
 
     def _step_overlapped(self) -> Optional[List[Response]]:
-        if self._inflight is None:
-            self._inflight = self._launch_next()
-            if self._inflight is None:
-                return None
-        cur = self._inflight
-        # overlap point: tenant k+1's assembly + staging + dispatch run here,
-        # while tenant k's decode loop is still executing on the device
-        self._inflight = self._launch_next()
+        # overlap point: everything staged beyond the head is assembled +
+        # dispatched here, while the head's decode loop runs on the device
+        self._fill_inflight()
+        if not self._inflight:
+            return None
+        cur = self._inflight.popleft()
         result = self.engine.await_result(cur.handle)
         cur.stamped.wait()           # compute_end stamped at device-ready
-        # open the compute window at device occupancy, not dispatch return:
-        # this slot was enqueued behind the previous slot's decode (the
-        # device stream serialises them), and that queue wait must not be
-        # billed to this tenant's busy/EWMA or double-counted in
-        # utilisation.  The previous slot's compute_end is known here —
-        # slots complete in dispatch order and slot k-1 was awaited before
-        # slot k+1 was staged, so the clamp can only move compute_start
-        # earlier than the next slot's transfer_start, never past it (the
-        # overlap predicate stays falsifiable).
-        cur.entry.compute_start = max(cur.entry.compute_start,
-                                      min(self._last_ready,
-                                          cur.entry.compute_end))
-        self._last_ready = cur.entry.compute_end
-        self._account(cur.tenant, cur.reqs, result.tokens,
-                      cur.entry.compute_end - cur.entry.compute_start)
+        if not cur.accounted:        # else already stamped by a harvest
+            self._finalise_windows(cur)
+        self.stats[cur.tenant]["tokens"] += result.tokens.size
         self.timeline.append(cur.entry)
         done_abs = self._t0 + cur.entry.compute_end
         return [Response(cur.tenant, result.tokens[i],
                          done_abs - r.arrival_s, len(cur.reqs))
                 for i, r in enumerate(cur.reqs)]
+
+    # ------------------------------------------------------------------
+    # Continuous schedule: admission + micro-rounds over the slot table
+    # ------------------------------------------------------------------
+    def _admit_continuous(self) -> int:
+        """Admit queued requests into free slots, one per tenant pick so the
+        slot table fills fairly (round-robin / straggler order).  Stops on
+        slot or page exhaustion (the request stays queued)."""
+        admitted = 0
+        while self._ceng.free_slot_count() > 0:
+            tenant = self._next_tenant()
+            if tenant is None:
+                break
+            req = self.queues[tenant].popleft()
+            if not self._ceng.try_admit(req):
+                self.queues[tenant].appendleft(req)   # page pressure: retry
+                # the pick didn't result in service: un-mark the tenant so
+                # a straggler whose admission failed keeps its priority for
+                # the rest of the round instead of being demoted
+                self._round_served.discard(tenant)
+                break
+            admitted += 1
+        return admitted
+
+    def _dispatch_round(self, asm_start: float) -> _InflightRound:
+        handle = self._ceng.dispatch_round()
+        te = time.perf_counter() - self._t0
+        idx = self._cont_rounds
+        self._cont_rounds += 1
+        entry = TenantTimeline(vdev=idx, pdev=0, slot=idx,
+                               transfer_start=asm_start, transfer_end=te,
+                               compute_start=te, compute_end=0.0)
+        stamped = self._get_waiter().submit(handle.emitted, entry)
+        return _InflightRound(handle, entry, stamped)
+
+    def _step_continuous(self) -> Optional[List[Response]]:
+        eng = self._ceng
+        if self._cont_inflight is None:
+            asm0 = time.perf_counter() - self._t0
+            if self._admit_continuous() == 0 and eng.active_count() == 0:
+                return None
+            self._cont_inflight = self._dispatch_round(asm0)
+        cur = self._cont_inflight
+        # overlap point: the next round's admissions (host assembly, prefill
+        # + KV-scatter enqueue) and its dispatch land here, while round k
+        # still occupies the device — rows that finish in round k are then
+        # masked lanes in round k+1 until this collect retires them
+        asm0 = time.perf_counter() - self._t0
+        admitted = self._admit_continuous()
+        # pipeline round k+1 only if it will have live rows: fresh
+        # admissions, or a current row whose budget outlasts round k (the
+        # in-flight round's emissions aren't collected yet, so
+        # live_after(inner_steps) is exactly "survives round k") — else the
+        # drain would end on a dispatched-but-never-collected all-masked
+        # round, wasting a device round and skewing the occupancy counters
+        self._cont_inflight = (
+            self._dispatch_round(asm0)
+            if admitted or eng.live_after(eng.inner_steps) else None)
+        res = eng.collect(cur.handle)
+        cur.stamped.wait()
+        cur.entry.compute_start = max(cur.entry.compute_start,
+                                      min(self._last_ready,
+                                          cur.entry.compute_end))
+        self._last_ready = cur.entry.compute_end
+        self.timeline.append(cur.entry)
+        # busy attribution: the round's device window split across tenants
+        # by live row-steps (masked lanes bill nobody)
+        busy = cur.entry.compute_end - cur.entry.compute_start
+        total_steps = int(res.active_steps.sum())
+        if total_steps > 0:
+            for c, req in enumerate(res.slot_reqs):
+                if req is None or res.active_steps[c] == 0:
+                    continue
+                share = busy * float(res.active_steps[c]) / total_steps
+                self.stats[req.tenant]["busy_s"] += share
+                self._row_busy[c] += share
+        done_abs = self._t0 + cur.entry.compute_end
+        responses: List[Response] = []
+        for req, tokens, c in res.finished:
+            st = self.stats[req.tenant]
+            st["requests"] += 1
+            st["tokens"] += tokens.size
+            row_busy = self._row_busy.pop(c, 0.0)
+            self._note_batch_time(req.tenant, row_busy)
+            self.detector.update({self._slot_of[req.tenant]: row_busy})
+            responses.append(Response(req.tenant, tokens,
+                                      done_abs - req.arrival_s, 1))
+        return responses
 
     # ------------------------------------------------------------------
     # Blocking schedule (A/B baseline): generate() per slot
@@ -290,7 +483,8 @@ class MultiTenantScheduler:
         # compute window and latencies don't absorb the next slot's assembly
         # (stats recorded first so the stage-ahead pick sees this batch's
         # fresh latency, not stale data)
-        self._account(tenant, reqs, result.tokens, busy)
+        self._account_busy(tenant, len(reqs), busy)
+        self.stats[tenant]["tokens"] += result.tokens.size
         # stage-ahead: assemble the next slot's batch before finalising this
         # slot's responses (host-side analogue of stage(k+1) under compute(k))
         self._stage_next()
@@ -303,8 +497,12 @@ class MultiTenantScheduler:
 
     # ------------------------------------------------------------------
     def step(self) -> Optional[List[Response]]:
-        """Serve one tenant slot; returns its responses (None if idle)."""
-        if self.overlapped:
+        """Serve one scheduling step; returns responses (None if idle).
+        Overlapped/blocking: one tenant slot.  Continuous: one decode
+        micro-round (responses are the rows that retired in it)."""
+        if self.mode == "continuous":
+            return self._step_continuous()
+        if self.mode == "overlapped":
             return self._step_overlapped()
         return self._step_blocking()
 
@@ -319,6 +517,13 @@ class MultiTenantScheduler:
         # rooting the scheduler; it is recreated lazily on the next launch
         self.close()
         return out
+
+    # ------------------------------------------------------------------
+    @property
+    def continuous_engine(self):
+        """The scheduler's ContinuousBatchingEngine (None outside
+        mode='continuous') — the public handle for occupancy/page stats."""
+        return self._ceng
 
     # ------------------------------------------------------------------
     def utilization_report(self) -> Dict[str, Dict[str, float]]:

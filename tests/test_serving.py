@@ -211,6 +211,58 @@ def test_overlapped_busy_excludes_queue_wait():
     assert sched.stats["fast"]["busy_s"] < 0.05
 
 
+def test_depth_n_dispatch_queue():
+    """stage_depth generalises the single staged-ahead batch to a depth-N
+    queue of dispatched slots: with depth 3 the scheduler keeps up to 1+3
+    batches in flight, pending() counts them all, and responses still come
+    back in dispatch order."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    eng = _FakeEngine({})
+    sched = MultiTenantScheduler(eng, max_batch=1, overlapped=True,
+                                 stage_depth=3)
+    for i in range(5):
+        sched.submit(Request("t", np.array([i], np.int32), 1))
+    r = sched.step()                       # fills to 4 inflight, awaits 1
+    assert len(r) == 1
+    assert len(sched._inflight) == 3       # depth-3 staged ahead
+    assert sched.pending() == 4            # 3 inflight + 1 queued
+    served = len(r)
+    while sched.pending():
+        r = sched.step()
+        served += len(r or [])
+    sched.close()
+    assert served == 5
+
+
+def test_ewma_harvest_closes_one_batch_lag():
+    """Regression for the PR 2 deferred item: when slot k's completion has
+    already landed, its latency must be stamped *before* the pick for slot
+    k+1.  Tenant b's slow round-1 batch completes while the host idles
+    between steps; the round-2 pick must therefore see b's fresh EWMA and
+    serve b (the straggler) first — without the harvest the pick ran on
+    b's cold 0.0 history and picked a."""
+    import time as _t
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+    eng = _FakeEngine({1: 0.02, 2: 0.06})
+    sched = MultiTenantScheduler(eng, max_batch=1, straggler_priority=True,
+                                 overlapped=True)
+    for _ in range(2):
+        sched.submit(Request("a", np.array([1], np.int32), 1))
+        sched.submit(Request("b", np.array([2], np.int32), 1))
+    served = [x.tenant for x in sched.step()]        # serves a; b in flight
+    _t.sleep(0.2)                  # b's 60ms decode lands, waiter stamps it
+    while sched.pending():
+        r = sched.step()
+        if r:
+            served.extend(x.tenant for x in r)
+    sched.close()
+    # round 2 starts with the harvested straggler b, not a
+    assert served == ["a", "b", "b", "a"], served
+    # harvest + await never double-account
+    rep = sched.utilization_report()
+    assert rep["a"]["requests"] == 2 and rep["b"]["requests"] == 2
+
+
 def _drain_order(sched):
     served = []
     while sched.pending():
