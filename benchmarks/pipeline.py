@@ -272,6 +272,107 @@ def bench_serving_continuous() -> List[Row]:
     return out
 
 
+def bench_serving_prefix_sharing() -> List[Row]:
+    """Refcounted prefix sharing + batched admission vs the PR-3 continuous
+    baseline (one B=1 prefill per admission, private pages per request) on
+    the workload the sharing targets: N tenants whose every query carries
+    the same system prompt, with a tail of exact repeat queries (dashboard
+    refreshes).
+
+    Emits the cold-run allocator comparison the tentpole's acceptance
+    criteria name — pages allocated and prefill calls with sharing+batching
+    off vs on — plus steady-state (warm trie) deltas and the wall-time A/B.
+    Token-exactness of the shared path is locked in by
+    ``tests/test_continuous.py``, not re-checked here.
+    """
+    import jax
+    from repro.configs import get_config
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import Request
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    tenants, queries = 4, 2
+    page, sys_len, user_len, new_tok = 16, 48, 16, 8
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, cfg.vocab_size, sys_len).astype(np.int32)
+    originals, repeats = [], []
+    for t in range(tenants):
+        for _ in range(queries):
+            user = rng.integers(1, cfg.vocab_size,
+                                user_len).astype(np.int32)
+            originals.append(Request(
+                f"tenant-{t}", np.concatenate([system_prompt, user]),
+                max_new_tokens=new_tok))
+        repeats.append(Request(f"tenant-{t}",
+                               originals[-1].prompt.copy(),
+                               max_new_tokens=new_tok))
+    mix = originals + repeats        # repeats arrive after their originals
+
+    def make(shared: bool) -> ContinuousBatchingEngine:
+        # the baseline disables both tentpole halves: B=1 admission prefill
+        # and private pages per request — exactly mode="continuous" as of
+        # PR 3
+        return ContinuousBatchingEngine(
+            engine, capacity=8, page_size=page, inner_steps=4,
+            max_prompt_len=sys_len + user_len, prefix_sharing=shared,
+            batch_admission=shared)
+
+    ceng_base, ceng_share = make(False), make(True)
+    # cold-run counters: what one pass over the workload allocates/prefills
+    ceng_base.run_all(mix)
+    pages_base, calls_base = (ceng_base.kv.pages_allocated,
+                              ceng_base.prefill_calls)
+    ceng_share.run_all(mix)
+    pages_share, calls_share = (ceng_share.kv.pages_allocated,
+                                ceng_share.prefill_calls)
+    skips_cold = ceng_share.prefill_skips
+    shared_cold, forks_cold, pristine_cold = (
+        ceng_share.kv.pages_shared, ceng_share.kv.cow_forks,
+        ceng_share.kv.pristine_forks)
+
+    # steady state: the trie retains the shared chains, so a repeat pass
+    # shares nearly everything
+    p0, c0, s0 = (ceng_share.kv.pages_allocated, ceng_share.prefill_calls,
+                  ceng_share.prefill_skips)
+    ceng_share.run_all(mix)
+    steady_pages = ceng_share.kv.pages_allocated - p0
+    steady_calls = ceng_share.prefill_calls - c0
+    steady_skips = ceng_share.prefill_skips - s0
+
+    t_base, t_share, med_base, med_share = _min_ab(
+        lambda: ceng_base.run_all(mix), lambda: ceng_share.run_all(mix),
+        n=5)
+
+    tag = f"{tenants}t_{len(mix)}r_sysprompt"
+    out: List[Row] = []
+    out.append((f"serving/prefix_unshared_{tag}", t_base * 1e6,
+                f"median_us={med_base * 1e6:.0f};"
+                f"pages_allocated={pages_base};"
+                f"prefill_calls={calls_base};"
+                f"arch=internlm2-1.8b-reduced"))
+    out.append((f"serving/prefix_shared_{tag}", t_share * 1e6,
+                f"speedup={t_base / t_share:.2f}x;"
+                f"median_us={med_share * 1e6:.0f};"
+                f"pages_allocated={pages_share};"
+                f"pages_saved={1 - pages_share / pages_base:.0%};"
+                f"prefill_calls={calls_share};"
+                f"prefill_call_ratio="
+                f"{calls_base / max(calls_share, 1):.1f}x;"
+                f"prefill_skips={skips_cold};"
+                f"pages_shared={shared_cold};"
+                f"cow_forks={forks_cold};"
+                f"pristine_forks={pristine_cold};"
+                f"steady_pages={steady_pages};"
+                f"steady_prefill_calls={steady_calls};"
+                f"steady_prefill_skips={steady_skips}"))
+    return out
+
+
 def bench_kernel_variants() -> List[Row]:
     import jax.numpy as jnp
     from repro.kernels.aggregate_loss import aggregate_loss_pallas
@@ -301,4 +402,5 @@ def bench_kernel_variants() -> List[Row]:
 
 
 ALL = [bench_pipeline_overlap, bench_serving_overlap,
-       bench_serving_continuous, bench_kernel_variants]
+       bench_serving_continuous, bench_serving_prefix_sharing,
+       bench_kernel_variants]

@@ -9,9 +9,12 @@ of the paper's Fig 14 utilisation table) plus the realised staging/decode
 overlap pairs.  ``--mode`` selects the schedule:
 
 * ``continuous`` — continuous batching over a persistent slot table with a
-  paged KV-cache: requests are admitted into an in-flight decode and
-  retired rows are evicted, so the device never drains between tenant
-  batches (also prints micro-round occupancy stats);
+  paged KV-cache: requests are admitted into an in-flight decode (same
+  prompt-bucket admissions batched into one prefill call; with
+  ``--prefix-sharing`` common prompt prefixes map onto existing pages with
+  copy-on-write) and retired rows are evicted, so the device never drains
+  between tenant batches (also prints micro-round occupancy and
+  page-sharing stats);
 * ``overlapped`` (default) — tenant-slot batching with up to
   ``--stage-depth`` batches staged under the running decode;
 * ``blocking`` — the legacy host-blocking schedule (A/B baseline).
@@ -54,6 +57,18 @@ def main(argv=None) -> int:
                     help="continuous mode: KV-cache page size (tokens)")
     ap.add_argument("--inner-steps", type=int, default=4,
                     help="continuous mode: decode steps per micro-round")
+    ap.add_argument("--prefix-sharing", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="continuous mode: refcounted prefix sharing + "
+                         "copy-on-write over the paged pool")
+    ap.add_argument("--batch-admission",
+                    action=argparse.BooleanOptionalAction, default=True,
+                    help="continuous mode: batch same-bucket admissions "
+                         "into one prefill call")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend a common system-prompt prefix of this "
+                         "many tokens to every request (demo workload for "
+                         "--prefix-sharing)")
     args = ap.parse_args(argv)
     mode = args.mode or ("blocking" if args.blocking else "overlapped")
 
@@ -68,13 +83,20 @@ def main(argv=None) -> int:
         stage_depth=args.stage_depth,
         continuous=dict(capacity=args.capacity, page_size=args.page_size,
                         inner_steps=args.inner_steps,
-                        max_prompt_len=max(64, 2 * args.prompt_len)))
+                        prefix_sharing=args.prefix_sharing,
+                        batch_admission=args.batch_admission,
+                        max_prompt_len=max(64, 2 * args.prompt_len
+                                           + args.shared_prefix_len)))
 
     rng = np.random.default_rng(0)
+    shared_prefix = rng.integers(1, cfg.vocab_size,
+                                 args.shared_prefix_len).astype(np.int32)
     for i in range(args.requests):
         tenant = f"tenant-{i % args.tenants}"
         prompt = rng.integers(1, cfg.vocab_size,
                               args.prompt_len).astype(np.int32)
+        if args.shared_prefix_len:
+            prompt = np.concatenate([shared_prefix, prompt])
         sched.submit(Request(tenant, prompt, args.new_tokens))
 
     responses = sched.drain()
@@ -95,6 +117,13 @@ def main(argv=None) -> int:
         print(f"micro-rounds={eng.rounds} x {eng.inner_steps} steps, "
               f"slot occupancy={eng.occupancy()*100:.1f}%, "
               f"pages reused={eng.kv.pages_reused}/{eng.kv.pages_allocated}")
+        print(f"prefix sharing={'on' if eng.prefix_sharing else 'off'}: "
+              f"pages allocated={eng.kv.pages_allocated} "
+              f"shared={eng.kv.pages_shared} cow_forks={eng.kv.cow_forks} "
+              f"pristine_forks={eng.kv.pristine_forks}; "
+              f"prefill calls={eng.prefill_calls} "
+              f"skipped={eng.prefill_skips} "
+              f"(batch admission={'on' if eng.batch_admission else 'off'})")
     return 0
 
 

@@ -7,11 +7,17 @@ a fixed-capacity *slot table* resident on the device and interleaves three
 events per outer step, the serving analogue of the paper's fine-grained
 multi-tenant sharing:
 
-* **admission** — a queued request is prefilled at its (page-aligned) prompt
-  bucket, its KV written into freshly allocated :class:`repro.serving.
-  kvcache.PagedKVCache` pages, and its sampling state (per-request
-  temperature / top-k / PRNG key, last logits, position, remaining budget)
-  scattered into a free slot row;
+* **admission** — queued requests are prefilled at their (page-aligned)
+  prompt bucket, their KV written into :class:`repro.serving.kvcache.
+  PagedKVCache` pages, and their sampling state (per-request temperature /
+  top-k / PRNG key, last logits, position, remaining budget) scattered into
+  free slot rows.  Same-bucket admissions are *batched* into one prefill
+  call (width padded to a power of two, so admission compiles once per
+  (bucket, width tier) instead of once per request), and with
+  ``prefix_sharing`` each request's longest chain of already-registered
+  full-prefix blocks is mapped onto existing pages instead of fresh ones —
+  a request whose whole padded prompt is registered (and whose prefill
+  logits are still cached) skips its prefill call entirely;
 * **one decode micro-round** — a single jitted ``lax.scan`` of
   ``inner_steps`` masked decode steps over *all* capacity rows.  The step is
   shape-stable (paged gather/scatter, fixed capacity), so ragged
@@ -19,27 +25,57 @@ multi-tenant sharing:
   compile per batch capacity, plus one prefill/admission compile per prompt
   bucket (``decode_traces`` / ``admit_traces`` count them for the tests);
 * **retirement** — rows whose token budget ran out are collected on the
-  host, their pages evicted back to the free list, their slots freed for the
-  next admission.
+  host, their pages' refcounts dropped (a page returns to the free list only
+  when its last reader retires; trie-registered pristine pages linger as
+  evictable cache), their slots freed for the next admission.
 
 Rows are masked, not compacted: an inactive row samples into the void (its
 emission is dropped), writes its K/V to the reserved TRASH page and keeps
 its SSM state frozen, so retirement costs no reshape or recompile — that is
 the "masked fixed-step scan with early-exit accounting" deferred from PR 2.
 
+Copy-on-write rides the dispatch path: decode writes land at ``pos % ring``,
+so the blocks a round will write are known on the host before the round's
+jit runs.  :meth:`ContinuousBatchingEngine.dispatch_round` resolves each of
+them through :meth:`repro.serving.kvcache.PagedKVCache.note_write` — a
+shared page is forked (one jitted page-copy + page-table remap per fork)
+before any row can write into it, so the round's scan itself never needs
+refcounts and stays one compile per (capacity, sampling tier).
+
+The paged-pool state pytree is *donated* to the round / admission / CoW
+jits (``donate_argnums``): XLA updates the pools in place instead of copying
+the whole pool every micro-round, and the tests pin that down by checking
+the old state buffers are deleted after a round.
+
+Compile-count contract: one decode-round trace per (capacity, sampling
+tier); one admission-scatter trace per (prompt bucket, ring); one prefill
+trace per (prompt bucket, power-of-two admission width); one trace each for
+the CoW page-copy and the skip-prefill admission variant (per page-table
+width).  ``decode_traces`` / ``admit_traces`` / ``prefill_traces`` /
+``admit_skip_traces`` count them for the tests.
+
 Greedy token-exactness: an admitted request decodes through exactly the same
-prefill (same left-padded bucket prompt) and per-token math (see
+prefill (same left-padded bucket prompt; batched prefill rows are
+bitwise row-independent) and per-token math (see
 :func:`repro.serving.kvcache.paged_attention_decode`) as
 ``ServingEngine.generate`` on that padded prompt, with the same
 ``PRNGKey(seed)`` / ``fold_in(key, local_step)`` schedule — so each row's
 tokens match the blocking engine row-for-row, independent of what its
 neighbours in the slot table are doing (``tests/test_continuous.py``).
+Prefix sharing preserves this bit-for-bit: a block is shared only when the
+whole padded prompt up to its end is byte-identical (so the page already
+holds exactly what this request's prefill would have written), forks copy
+pages before the first divergent write, and cached admission logits are the
+stored output of the identical earlier prefill.
 
 Encoder-decoder configs are rejected: their cross-attention caches are
 per-request device tensors with no paged representation here (the slot-based
 paths still serve them).  MoE routing couples rows through expert capacity,
 so MoE archs run continuously but are only *statistically* exchangeable with
-the blocking engine, not bitwise.
+the blocking engine, not bitwise — batched admission prefill and prefix
+sharing sit inside the same caveat (expert-capacity routing couples prefill
+rows, so a shared page holds *a* valid prefill of its chain, not
+necessarily the one a solo prefill of this request would produce).
 """
 from __future__ import annotations
 
@@ -69,7 +105,11 @@ class _Slot:
     target: int
     temp: float                    # resolved sampling params, mirrored on
     top_k: int                     # the host so dispatch_round can pick the
-    tokens: List[int] = dataclasses.field(default_factory=list)   # static sampling tier
+    bucket: int = 0                # static sampling tier
+    ring: int = 0
+    planned: int = 0               # decode steps already dispatched (the
+    tokens: List[int] = dataclasses.field(  # CoW write scan runs at dispatch)
+        default_factory=list)
 
 
 @dataclasses.dataclass
@@ -80,6 +120,12 @@ class RoundHandle:
     steps: int
     t_start: float
     t_dispatched: float
+
+    def ready(self) -> bool:
+        """Non-blocking probe: has the round's device work finished?
+        Conservative (False) for duck-typed stand-ins without a probe."""
+        is_ready = getattr(self.emitted, "is_ready", None)
+        return bool(is_ready()) if is_ready is not None else False
 
 
 @dataclasses.dataclass
@@ -101,7 +147,11 @@ class ContinuousBatchingEngine:
 
     def __init__(self, engine: ServingEngine, capacity: int = 8,
                  page_size: int = 16, num_pages: Optional[int] = None,
-                 inner_steps: int = 4, max_prompt_len: int = 128):
+                 inner_steps: int = 4, max_prompt_len: int = 128,
+                 prefix_sharing: bool = True,
+                 preserve_pristine: bool = True,
+                 batch_admission: bool = True,
+                 logits_cache_size: int = 32):
         cfg = engine.cfg
         if cfg.enc_dec:
             raise ValueError(
@@ -122,13 +172,31 @@ class ContinuousBatchingEngine:
         max_ring = self._ring_len(self.bucket_len(max_prompt_len))
         self.kv = PagedKVCache(cfg, capacity, page_size,
                                -(-max_ring // page_size), num_pages)
+        # prefix sharing needs byte-identical (position, token) blocks: the
+        # ring must cover the whole bucket (no sliding-window wrap) and the
+        # arch must have a paged pool at all
+        self.prefix_sharing = bool(prefix_sharing and self.kv.attn_subs
+                                   and cfg.sliding_window is None)
+        self.preserve_pristine = preserve_pristine
+        self.batch_admission = batch_admission
+        # skip-prefill full hits also need every per-slot state to be
+        # reconstructable from pages + cached logits: SSM slot states are
+        # neither paged nor cached, so hybrids always prefill
+        self._pure_attn = bool(self.kv.attn_subs) and all(
+            mixer == ATTN for mixer, _ in self.sched)
+        self.logits_cache_size = int(logits_cache_size)
+        self._logits_cache: "collections.OrderedDict[bytes, jax.Array]" = \
+            collections.OrderedDict()
         self.state = self._init_state()
         self._slots: List[Optional[_Slot]] = [None] * capacity
         self._free_slots: List[int] = list(range(capacity - 1, -1, -1))
         # trace counters: python side effects run only while jit traces
         self.decode_traces = 0
         self.admit_traces = 0
+        self.admit_skip_traces = 0
         self.prefill_traces = 0
+        self.prefill_calls = 0     # host-side prefill invocations (batched)
+        self.prefill_skips = 0     # admissions served from the logits cache
         self.rounds = 0
         self.row_steps = 0         # sum over rounds of live rows per step
         self._build_jits()
@@ -287,14 +355,60 @@ class ContinuousBatchingEngine:
                 st, None, length=steps)
             return st, emitted, act
 
+        # the slot-table state pytree is donated everywhere it is threaded
+        # through a jit: XLA aliases the page pools input->output and
+        # updates them in place instead of copying the whole pool per call
+        # (the donation test asserts the old buffers die)
         self._round_jit = jax.jit(
-            round_fn, static_argnames=("steps", "all_greedy", "any_topk"))
+            round_fn, static_argnames=("steps", "all_greedy", "any_topk"),
+            donate_argnums=(1,))
 
         def prefill_fn(params, batch):
             self.prefill_traces += 1
             return self.bundle.prefill_fn(params, batch, sh)
 
         self._prefill_jit = jax.jit(prefill_fn)
+
+        def cow_fn(st, src, dst, slot, blk):
+            """Copy-on-write fork: copy page ``src`` -> ``dst`` in every
+            attention pool and the position pool, and repoint the writer's
+            page-table entry.  All operands dynamic: compiles once."""
+            new = dict(st)
+            nc = dict(st["caches"])
+            for name in self.kv.attn_subs:
+                pool = st["caches"][name]
+                nc[name] = {"k": pool["k"].at[:, dst].set(pool["k"][:, src]),
+                            "v": pool["v"].at[:, dst].set(pool["v"][:, src])}
+            new["caches"] = nc
+            new["pos_pool"] = st["pos_pool"].at[dst].set(st["pos_pool"][src])
+            new["page_table"] = st["page_table"].at[slot, blk].set(dst)
+            return new
+
+        self._cow_jit = jax.jit(cow_fn, donate_argnums=(0,))
+
+        def admit_skip_fn(st, logits0, slot, pages, remaining, temp, topk,
+                          key, bucket, ring):
+            """Skip-prefill admission (full prefix hit): every KV block is
+            already resident in shared pages and the first-token logits come
+            from the cache, so only the page-table row and the slot's
+            sampling state are written.  bucket/ring are dynamic: one trace
+            per page-row width."""
+            self.admit_skip_traces += 1
+            new = dict(st)
+            row = jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
+                           jnp.int32).at[:pages.shape[0]].set(pages)
+            new["page_table"] = st["page_table"].at[slot].set(row)
+            new["logits"] = st["logits"].at[slot].set(logits0)
+            new["pos"] = st["pos"].at[slot].set(bucket)
+            new["ring"] = st["ring"].at[slot].set(ring)
+            new["remaining"] = st["remaining"].at[slot].set(remaining)
+            new["temps"] = st["temps"].at[slot].set(temp)
+            new["topks"] = st["topks"].at[slot].set(topk)
+            new["keys"] = st["keys"].at[slot].set(key)
+            new["lstep"] = st["lstep"].at[slot].set(0)
+            return new
+
+        self._admit_skip_jit = jax.jit(admit_skip_fn, donate_argnums=(0,))
 
         def admit_fn(st, caches_p, logits0, slot, pages, remaining, temp,
                      topk, key, *, bucket: int, ring: int):
@@ -344,7 +458,8 @@ class ContinuousBatchingEngine:
             return new
 
         self._admit_jit = jax.jit(admit_fn,
-                                  static_argnames=("bucket", "ring"))
+                                  static_argnames=("bucket", "ring"),
+                                  donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     # admission
@@ -352,47 +467,174 @@ class ContinuousBatchingEngine:
     def try_admit(self, req: Any) -> bool:
         """Admit one request into a free slot; False when no slot or no
         pages are available right now (caller keeps it queued)."""
-        if not self._free_slots:
-            return False
-        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
-        if prompt.size > self.max_prompt_len:
-            raise ValueError(
-                f"prompt of {prompt.size} tokens exceeds max_prompt_len="
-                f"{self.max_prompt_len}")
-        bucket = self.bucket_len(prompt.size)
-        ring = self._ring_len(bucket)
+        return self.try_admit_batch([req])[0]
+
+    def try_admit_batch(self, reqs: List[Any]) -> List[bool]:
+        """Admit up to ``len(self._free_slots)`` requests in one go.
+
+        Three phases:
+
+        1. *plan* — per request: bucket/ring, padded prompt, chain keys and
+           a provisional full-prefix-hit probe (can this admission reuse
+           cached prefill logits?);
+        2. *prefill* — one batched prefill call per prompt bucket for every
+           plan that cannot skip it, width padded to the next power of two
+           (``batch_admission=False`` keeps the PR-3 one-call-per-request
+           baseline); rows are sliced back out per request — batched prefill
+           is bitwise row-independent, so this changes nothing downstream;
+        3. *admit* — sequential per request: re-probe the trie (earlier
+           members of this very batch have registered by now, so same-batch
+           prefix sharing works), allocate shared+fresh pages, scatter KV /
+           sampling state, register the new chain blocks.
+
+        Returns one admitted-flag per request; rejected requests (slot or
+        page pressure) are untouched and stay with the caller.
+        """
+        flags = [False] * len(reqs)
+        plans: List[Dict[str, Any]] = []
+        for i, req in enumerate(reqs):
+            if len(plans) >= len(self._free_slots):
+                break
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            if prompt.size > self.max_prompt_len:
+                raise ValueError(
+                    f"prompt of {prompt.size} tokens exceeds max_prompt_len="
+                    f"{self.max_prompt_len}")
+            bucket = self.bucket_len(prompt.size)
+            padded = np.zeros((bucket,), np.int32)
+            padded[bucket - prompt.size:] = prompt
+            keys = (self.kv.chain_keys(padded) if self.prefix_sharing
+                    else [])
+            # provisional only — the authoritative share decision re-probes
+            # at admit time; this just decides whether to prefill
+            skip = bool(keys and self._pure_attn
+                        and len(self.kv.lookup_chain(keys)) == len(keys)
+                        and keys[-1] in self._logits_cache)
+            plans.append(dict(i=i, req=req, bucket=bucket,
+                              ring=self._ring_len(bucket), padded=padded,
+                              keys=keys, skip=skip, logits=None,
+                              caches=None))
+        if not plans:
+            return flags
+        groups: Dict[int, List[Dict[str, Any]]] = {}
+        for pl in plans:
+            if not pl["skip"]:
+                groups.setdefault(pl["bucket"], []).append(pl)
+        for bucket, grp in groups.items():
+            chunks = [grp] if self.batch_admission else [[pl] for pl in grp]
+            for chunk in chunks:
+                width = 1 << (len(chunk) - 1).bit_length()
+                tokens = np.zeros((width, bucket), np.int32)
+                for j, pl in enumerate(chunk):
+                    tokens[j] = pl["padded"]
+                logits, caches, _ = self._prefill_jit(
+                    self.params, {"tokens": jnp.asarray(tokens)})
+                self.prefill_calls += 1
+                for j, pl in enumerate(chunk):
+                    pl["logits"] = logits[j:j + 1]
+                    pl["caches"] = jax.tree.map(lambda a, j=j: a[:, j:j + 1],
+                                                caches)
+        for pl in plans:
+            flags[pl["i"]] = self._admit_planned(pl)
+        return flags
+
+    def _admit_planned(self, pl: Dict[str, Any]) -> bool:
+        """Phase 3 of :meth:`try_admit_batch`: page mapping + state scatter
+        for one planned request.  False leaves the allocator untouched."""
+        req, bucket, ring = pl["req"], pl["bucket"], pl["ring"]
+        kv = self.kv
+        nb = kv.blocks_for(ring) if kv.attn_subs else 0
+        shared: List[int] = []
+        will_write: Any = ()
+        target = int(req.max_new_tokens)
+        if nb and self.prefix_sharing:
+            shared = kv.lookup_chain(pl["keys"])[:nb]
+            # blocks this request's decode ring-writes will touch: each is
+            # charged one page of fork headroom at allocation time
+            will_write = {((bucket + t) % ring) // self.page_size
+                          for t in range(min(target, ring))}
+        cached_logits = None
+        if pl["skip"]:
+            cached_logits = self._logits_cache.get(pl["keys"][-1])
+            if len(shared) < nb or cached_logits is None:
+                # the chain (or its logits) was evicted between planning and
+                # admission: no prefill result to fall back on — requeue
+                return False
+            self._logits_cache.move_to_end(pl["keys"][-1])
         slot = self._free_slots[-1]
         pages = None
-        if self.kv.attn_subs:
-            pages = self.kv.alloc(slot, self.kv.blocks_for(ring))
+        if nb:
+            pages = kv.alloc_shared(slot, shared, nb - len(shared),
+                                    will_write)
             if pages is None:
                 return False                 # pool pressure: retry later
         self._free_slots.pop()
-        padded = np.zeros((1, bucket), np.int32)
-        padded[0, bucket - prompt.size:] = prompt
-        logits, caches, _ = self._prefill_jit(self.params,
-                                              {"tokens": jnp.asarray(padded)})
         temp = getattr(req, "temperature", None)
         if temp is None:
             temp = self.engine.temperature
         topk = int(getattr(req, "top_k", 0) or 0)
-        self.state = self._admit_jit(
-            self.state, caches, logits, slot,
-            None if pages is None else jnp.asarray(pages),
-            int(req.max_new_tokens), float(temp), topk,
-            jax.random.PRNGKey(int(getattr(req, "seed", 0) or 0)),
-            bucket=bucket, ring=ring)
-        self._slots[slot] = _Slot(req, int(req.max_new_tokens),
-                                  float(temp), topk)
+        key = jax.random.PRNGKey(int(getattr(req, "seed", 0) or 0))
+        if pl["skip"]:
+            self.state = self._admit_skip_jit(
+                self.state, cached_logits, np.int32(slot),
+                jnp.asarray(pages), np.int32(target), np.float32(temp),
+                np.int32(topk), key, np.int32(bucket), np.int32(ring))
+            self.prefill_skips += 1
+        else:
+            self.state = self._admit_jit(
+                self.state, pl["caches"], pl["logits"], slot,
+                None if pages is None else jnp.asarray(pages),
+                target, float(temp), topk, key, bucket=bucket, ring=ring)
+            if self.prefix_sharing and self._pure_attn and pl["keys"]:
+                self._logits_cache_put(pl["keys"][-1], pl["logits"][0])
+        if self.prefix_sharing and pl["keys"]:
+            kv.register(slot, pl["keys"][:nb])
+        self._slots[slot] = _Slot(req, target, float(temp), topk,
+                                  bucket=bucket, ring=ring)
         return True
+
+    def _logits_cache_put(self, key: bytes, row: jax.Array) -> None:
+        cache = self._logits_cache
+        cache[key] = row
+        cache.move_to_end(key)
+        while len(cache) > self.logits_cache_size:
+            cache.popitem(last=False)
 
     # ------------------------------------------------------------------
     # decode micro-rounds
     # ------------------------------------------------------------------
+    def _resolve_round_writes(self) -> None:
+        """Pre-dispatch copy-on-write scan: the blocks each live row will
+        write in the coming round are known on the host (``pos % ring``), so
+        every shared or pristine-registered page among them is forked — page
+        copied device-side, writer's table remapped — *before* the round's
+        jit can touch it.  Without sharing, every page is exclusively owned
+        and the scan is skipped entirely (PR-3 semantics)."""
+        if not (self.prefix_sharing and self.kv.attn_subs):
+            return
+        for c, s in enumerate(self._slots):
+            if s is None:
+                continue
+            n = min(self.inner_steps, s.target - s.planned)
+            if n <= 0:
+                continue
+            blks = sorted({((s.bucket + s.planned + t) % s.ring)
+                           // self.page_size for t in range(n)})
+            for blk in blks:
+                fork = self.kv.note_write(c, blk,
+                                          preserve=self.preserve_pristine)
+                if fork is not None:
+                    src, dst = fork
+                    self.state = self._cow_jit(
+                        self.state, np.int32(src), np.int32(dst),
+                        np.int32(c), np.int32(blk))
+            s.planned += n
+
     def dispatch_round(self) -> RoundHandle:
         """Enqueue one masked micro-round (non-blocking); the caller may
         admit the next requests while it runs on the device."""
         t0 = time.perf_counter()
+        self._resolve_round_writes()
         # static sampling tier from the live rows (an all-greedy round is a
         # bare argmax; at most 3 round variants ever compile)
         live = [s for s in self._slots if s is not None]
@@ -430,13 +672,25 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     def run_all(self, requests) -> List[Tuple[Any, np.ndarray]]:
         """FIFO-drain a request list without a scheduler: admit as slots and
-        pages free up, one micro-round per iteration.  Returns (request,
-        tokens) in completion order."""
+        pages free up (same-bucket admissions batched into one prefill), one
+        micro-round per iteration.  Returns (request, tokens) in completion
+        order."""
         queue: Deque[Any] = collections.deque(requests)
         done: List[Tuple[Any, np.ndarray]] = []
         while queue or self.active_count():
-            while queue and self.try_admit(queue[0]):
-                queue.popleft()
+            while queue and self._free_slots:
+                take = [queue.popleft() for _ in
+                        range(min(len(queue), len(self._free_slots)))]
+                flags = self.try_admit_batch(take)
+                for req, ok in reversed(list(zip(take, flags))):
+                    if not ok:
+                        queue.appendleft(req)
+                if not all(flags):
+                    break              # pool pressure: decode frees pages
+            if queue and not self.active_count():
+                raise RuntimeError(
+                    "paged pool cannot admit any queued request (pool too "
+                    "small for the head request)")
             res = self.collect(self.dispatch_round())
             done.extend((req, toks) for req, toks, _ in res.finished)
         return done

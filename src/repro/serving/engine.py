@@ -124,8 +124,14 @@ class ServingEngine:
         self.params = params
         self.sh = sh or null_sharder()
         self.temperature = temperature
-        self._prefill = jax.jit(
-            lambda p, b: self.bundle.prefill_fn(p, b, self.sh))
+        self.prefill_traces = 0     # compiles (one per (batch, seq) shape)
+        self.prefill_calls = 0      # host invocations
+
+        def prefill_fn(p, b):
+            self.prefill_traces += 1     # python side effect: trace time only
+            return self.bundle.prefill_fn(p, b, self.sh)
+
+        self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(
             lambda p, t, c, i: self.bundle.decode_fn(p, t, c, i, self.sh))
 
@@ -183,6 +189,19 @@ class ServingEngine:
         self.decode_steps = 0       # scanned decode steps enqueued (benchmarks)
 
     # ------------------------------------------------------------------
+    def prefill(self, batch: Dict[str, Any]):
+        """Counted, jit-compiled prefill shared by both generation paths
+        (and by admission layers above the engine): returns (last-token
+        logits, caches, cache index).  One compile per (batch, seq) shape.
+        Prefill rows are bitwise independent of their batch neighbours, so
+        callers may batch several requests' padded prompts into one call and
+        slice the rows back out — the contract the continuous engine's
+        batched admission prefill is built on (it keeps its own jit so its
+        per-engine trace counters stay isolated)."""
+        self.prefill_calls += 1
+        return self._prefill(self.params, batch)
+
+    # ------------------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -206,7 +225,7 @@ class ServingEngine:
         batch = self._make_batch(prompts, extra_inputs)
         self.decode_steps += int(max_new_tokens)
         t0 = time.perf_counter()
-        logits, caches, idx = self._prefill(self.params, batch)
+        logits, caches, idx = self.prefill(batch)
         logits.block_until_ready()
         prefill_s = time.perf_counter() - t0
 
@@ -244,7 +263,7 @@ class ServingEngine:
         """
         batch = self._make_batch(prompts, extra_inputs)
         t_start = time.perf_counter()
-        logits, caches, idx = self._prefill(self.params, batch)
+        logits, caches, idx = self.prefill(batch)
         self.decode_steps += int(max_new_tokens)
         if temperatures is not None or top_ks is not None or seeds is not None:
             b = prompts.shape[0]

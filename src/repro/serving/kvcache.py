@@ -20,6 +20,31 @@ can admit and retire requests independently:
   takes ``blocks_for(ring_len)`` pages, retirement returns them.  LIFO makes
   page reuse immediate, which the eviction tests exploit.  Allocation
   failure (pool pressure) is a soft "not now": the request stays queued.
+  Re-allocating a slot that still owns pages raises (it would silently leak
+  the old pages off both the free list and the owned map).
+* **refcounted prefix sharing (vLLM-style block sharing)** — every page
+  carries a reference count; a host-side prefix trie maps the *chain key* of
+  each page-aligned token block (the bytes of the whole padded prompt up to
+  and including that block — KV at position ``j`` depends on every token
+  ``<= j``, so block identity requires full-prefix identity) to the physical
+  page holding its KV.  Admission looks up the longest full-block prefix of
+  the new request's padded prompt and maps those blocks onto the existing
+  pages (:meth:`PagedKVCache.alloc_shared`), allocating fresh pages only for
+  the unshared suffix.  Because prefill is deterministic and row-independent,
+  a shared page is bitwise what the new request's own prefill would have
+  written, so greedy decode stays token-exact.
+* **copy-on-write** — the decode ring writes back into prompt blocks
+  (logical slot ``pos % ring``), so the first write into a block whose page
+  is shared (refcount > 1) forks it: a fresh page is allocated, the engine
+  copies the old page's K/V + positions device-side and remaps only the
+  writer's page-table slot (:meth:`PagedKVCache.note_write`).  A sole-owner
+  write into a trie-registered (pristine) page optionally *preserves* the
+  pristine copy the same way — the old page stays in the trie as a cached,
+  refcount-0 page that later identical prefixes can re-share, and that the
+  allocator evicts (leaf-most chain entry first) when the free list runs
+  dry.  Forks can never deadlock: admission reserves one page of headroom
+  per block the request will write during its decode (``cow_reserve``), and
+  the allocator admits only while ``available() >= fresh + reserve``.
 * **gather/scatter attention reads** — :func:`paged_attention_decode` writes
   the new token's K/V at ``(page, offset)`` per row and gathers the full
   logical window via the page table, so the decode step has a single static
@@ -29,6 +54,16 @@ Masked (inactive) rows redirect their writes to the reserved ``TRASH`` page,
 which no active row's page table ever references — a retired slot's stale
 page table can therefore neither corrupt pages reallocated to newer requests
 nor resurrect stale positions.
+
+Conservation contract (the allocator's audit, asserted by the property
+tests): every non-reserved page is exactly one of *free* (on the free list),
+*cached* (refcount 0 but trie-registered, reusable and evictable) or *live*
+(refcount > 0), with ``free + cached + live == num_pages - RESERVED``; each
+page's refcount equals the number of (slot, block) page-table references to
+it; and ``available() = free + cached >= cow_reserve`` so every mandatory
+copy-on-write fork is guaranteed a page.  Without sharing (no registration)
+this degenerates to the PR-3 contract ``free + sum(owned) == num_pages -
+RESERVED``.
 
 Exactness contract: the dense decode path (:func:`repro.models.layers.
 apply_attention_decode`) treats a prefix cache of length ``s_c`` as a ring —
@@ -44,7 +79,7 @@ after pages have been freed and reused).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,13 +99,16 @@ def attn_subs(cfg: ArchConfig) -> List[str]:
 
 
 class PagedKVCache:
-    """Page pool + per-slot page tables + host free list.
+    """Page pool + per-slot page tables + host free list / refcounts / trie.
 
     Device state (pools / position pool / page tables) is *built* here but
     owned functionally by the engine's state pytree — every jitted update
     returns new arrays.  This class keeps the host-side truth: which pages
-    are free, which slot owns which pages, and the allocation/reuse counters
-    the eviction tests assert on.
+    are free, cached or live, each page's refcount, the prefix trie, the
+    copy-on-write reserve, and the allocation/sharing/reuse counters the
+    eviction and sharing tests assert on.  It never touches device arrays:
+    the engine applies the device-side half of every fork/remap this class
+    decides (see :meth:`note_write`).
     """
 
     SENTINEL = 0           # page-table padding: never written, never valid
@@ -93,9 +131,21 @@ class PagedKVCache:
         self._free: List[int] = list(range(num_pages - 1, self.RESERVED - 1,
                                            -1))
         self._owned: Dict[int, List[int]] = {}
+        self._ref: Dict[int, int] = {}          # page -> live slot references
+        self._prefix: Dict[bytes, int] = {}     # block chain key -> page
+        self._page_key: Dict[int, bytes] = {}   # inverse of _prefix
+        # refcount-0 but trie-registered pages: page -> (chain depth, age)
+        self._cached: Dict[int, Tuple[int, int]] = {}
+        self._cache_seq = 0
+        # slot -> block indices not yet first-written (each may need a fork)
+        self._pending: Dict[int, Set[int]] = {}
+        self.cow_reserve = 0
         self._ever_used: set = set()
         self.pages_allocated = 0
         self.pages_reused = 0
+        self.pages_shared = 0
+        self.cow_forks = 0
+        self.pristine_forks = 0
 
     # ------------------------------------------------------------------
     # host-side allocator
@@ -106,23 +156,216 @@ class PagedKVCache:
     def free_pages(self) -> int:
         return len(self._free)
 
+    def cached_pages(self) -> int:
+        return len(self._cached)
+
+    def available(self) -> int:
+        """Pages an allocation can draw on: free plus evictable cached."""
+        return len(self._free) + len(self._cached)
+
+    def ref(self, page: int) -> int:
+        return self._ref.get(page, 0)
+
+    def chain_keys(self, padded: np.ndarray) -> List[bytes]:
+        """Chain key per full block of a padded prompt: the bytes of the
+        whole prompt up to and including the block, so two requests share a
+        block only when every earlier token (padding included) agrees —
+        exactly the condition under which the block's KV is bitwise equal."""
+        t = np.ascontiguousarray(np.asarray(padded, np.int32).reshape(-1))
+        p = self.page_size
+        return [t[:(b + 1) * p].tobytes() for b in range(t.size // p)]
+
+    def lookup_chain(self, keys: Iterable[bytes]) -> List[int]:
+        """Pages of the longest registered full-block prefix of ``keys``."""
+        pages: List[int] = []
+        for key in keys:
+            page = self._prefix.get(key)
+            if page is None:
+                break
+            pages.append(page)
+        return pages
+
     def alloc(self, slot: int, n_blocks: int) -> Optional[np.ndarray]:
-        """Take ``n_blocks`` pages for ``slot``; None if the pool is short
-        (the caller leaves the request queued and retries after eviction)."""
-        if n_blocks > len(self._free):
+        """Take ``n_blocks`` fresh pages for ``slot``; None if the pool is
+        short (the caller leaves the request queued and retries after
+        eviction)."""
+        return self.alloc_shared(slot, [], n_blocks, ())
+
+    def alloc_shared(self, slot: int, shared: List[int], n_fresh: int,
+                     will_write: Iterable[int]) -> Optional[np.ndarray]:
+        """Build ``slot``'s page row: ``shared`` (a prefix of existing pages,
+        refcounts incremented) followed by ``n_fresh`` fresh pages.
+
+        ``will_write`` are the block indices the request will write during
+        its decode; each is charged one page of ``cow_reserve`` headroom so
+        the fork it may trigger can never fail.  Returns None (nothing
+        changed) when the pool cannot cover ``n_fresh`` plus the total
+        reserve — the request stays queued.
+        """
+        if slot in self._owned:
+            # silently overwriting would leak the old pages off both the
+            # free list and the owned map (PR-3 bug); the engine retires a
+            # slot before reusing it, so this is always a caller bug
+            raise ValueError(
+                f"slot {slot} already owns pages; free() it before "
+                f"re-allocating")
+        will_write = set(will_write)
+        # reviving a cached shared page takes it out of the evictable set,
+        # so it costs availability exactly like a fresh page does
+        revived = sum(self._ref.get(p, 0) == 0 for p in shared)
+        if self.available() - n_fresh - revived < (self.cow_reserve
+                                                   + len(will_write)):
             return None
-        pages = [self._free.pop() for _ in range(n_blocks)]
-        self._owned[slot] = pages
-        self.pages_allocated += n_blocks
-        self.pages_reused += sum(p in self._ever_used for p in pages)
-        self._ever_used.update(pages)
-        return np.asarray(pages, np.int32)
+        for p in shared:
+            if self._ref.get(p, 0) == 0:        # revive a cached page
+                self._cached.pop(p, None)
+            self._ref[p] = self._ref.get(p, 0) + 1
+        fresh = [self._take_page() for _ in range(n_fresh)]
+        for p in fresh:
+            self._ref[p] = 1
+        self._owned[slot] = list(shared) + fresh
+        self._pending[slot] = will_write
+        self.cow_reserve += len(will_write)
+        self.pages_allocated += n_fresh
+        self.pages_shared += len(shared)
+        return np.asarray(self._owned[slot], np.int32)
+
+    def register(self, slot: int, keys: List[bytes]) -> None:
+        """Enter ``slot``'s pages into the prefix trie under their chain
+        keys.  First registration wins (duplicate-content pages from one
+        admission batch stay private); already-shared prefix pages are
+        naturally skipped because their key is present."""
+        pages = self._owned.get(slot, [])
+        for blk, key in enumerate(keys):
+            if blk >= len(pages):
+                break
+            page = pages[blk]
+            if key in self._prefix or page in self._page_key:
+                continue
+            self._prefix[key] = page
+            self._page_key[page] = key
+
+    def note_write(self, slot: int, blk: int,
+                   preserve: bool = True) -> Optional[Tuple[int, int]]:
+        """Resolve ``slot``'s upcoming decode write into block ``blk``.
+
+        Returns ``(src, dst)`` when the engine must copy page ``src`` to the
+        freshly mapped page ``dst`` (device-side) before the round runs:
+
+        * refcount > 1 — mandatory copy-on-write fork (other requests, or
+          the trie's cached readers, still read ``src``);
+        * sole owner of a trie-registered page with ``preserve`` and a free
+          page at hand — pristine-preserving fork: ``src`` stays in the trie
+          as a cached page so later identical prefixes can re-share it.
+
+        Otherwise returns None; a sole-owner write into a registered page
+        without preservation headroom simply unregisters it (its content is
+        about to diverge from its chain key).  Idempotent per block: after
+        the first resolution the slot owns the page exclusively and
+        unregistered, so later ring wraps fall through.
+        """
+        pages = self._owned.get(slot)
+        if pages is None:
+            return None
+        page = pages[blk]
+        pending = self._pending.get(slot)
+        if pending is not None and blk in pending:
+            pending.discard(blk)
+            self.cow_reserve -= 1
+        if self._ref.get(page, 0) > 1:
+            dst = self._take_page()
+            self._ref[page] -= 1
+            self._ref[dst] = 1
+            pages[blk] = dst
+            self.cow_forks += 1
+            self.pages_allocated += 1
+            return page, dst
+        if page in self._page_key:
+            if preserve and self._free:
+                dst = self._free.pop()
+                self.pages_reused += dst in self._ever_used
+                self._ever_used.add(dst)
+                self._ref[dst] = 1
+                pages[blk] = dst
+                self._ref[page] = 0
+                self._cached[page] = (blk, self._cache_seq)
+                self._cache_seq += 1
+                self.pristine_forks += 1
+                self.pages_allocated += 1
+                return page, dst
+            self._unregister(page)
+        return None
 
     def free(self, slot: int) -> int:
-        """Evict a retired slot: its pages go back on the free list."""
-        pages = self._owned.pop(slot, [])
-        self._free.extend(pages)
-        return len(pages)
+        """Retire a slot: decrement its pages' refcounts.  Pages reaching
+        refcount 0 return to the free list — or stay behind as cached
+        (evictable) pristine pages when still trie-registered, so a later
+        identical prefix can re-share them.  Returns the number of pages
+        whose refcount dropped to 0."""
+        released = 0
+        for blk, page in enumerate(self._owned.pop(slot, [])):
+            self._ref[page] -= 1
+            if self._ref[page] == 0:
+                released += 1
+                if page in self._page_key:
+                    self._cached[page] = (blk, self._cache_seq)
+                    self._cache_seq += 1
+                else:
+                    self._free.append(page)
+        self.cow_reserve -= len(self._pending.pop(slot, ()))
+        return released
+
+    # ------------------------------------------------------------------
+    def _unregister(self, page: int) -> None:
+        key = self._page_key.pop(page, None)
+        if key is not None:
+            self._prefix.pop(key, None)
+        self._cached.pop(page, None)
+
+    def _take_page(self) -> int:
+        """Pop a free page; when the free list is dry, evict a cached
+        pristine page — leaf-most chain entry first (deepest block, then
+        oldest), so short shared prefixes survive longest."""
+        if self._free:
+            page = self._free.pop()
+        else:
+            page = max(self._cached,
+                       key=lambda q: (self._cached[q][0],
+                                      -self._cached[q][1]))
+            self._unregister(page)
+        self.pages_reused += page in self._ever_used
+        self._ever_used.add(page)
+        return page
+
+    # ------------------------------------------------------------------
+    def assert_conserved(self) -> None:
+        """Audit the allocator (tests): page conservation, refcount
+        integrity, trie consistency and fork-reserve headroom."""
+        usable = self.num_pages - self.RESERVED
+        live = {p for p, r in self._ref.items() if r > 0}
+        free_set = set(self._free)
+        cached_set = set(self._cached)
+        assert len(self._free) == len(free_set), "free list has duplicates"
+        assert not (free_set & live), "free page still referenced"
+        assert not (free_set & cached_set), "page both free and cached"
+        assert not (cached_set & live), "cached page still referenced"
+        assert all(p in self._page_key for p in cached_set), \
+            "cached page not trie-registered"
+        assert len(free_set) + len(cached_set) + len(live) == usable, \
+            (len(free_set), len(cached_set), len(live), usable)
+        counts: Dict[int, int] = {}
+        for pages in self._owned.values():
+            for p in pages:
+                counts[p] = counts.get(p, 0) + 1
+        for p in live | set(counts):
+            assert self._ref.get(p, 0) == counts.get(p, 0), \
+                (p, self._ref.get(p, 0), counts.get(p, 0))
+        for key, p in self._prefix.items():
+            assert self._page_key.get(p) == key, "trie inverse out of sync"
+        assert self.cow_reserve == sum(len(s) for s in
+                                       self._pending.values())
+        assert self.available() >= self.cow_reserve, \
+            (self.available(), self.cow_reserve)
 
     # ------------------------------------------------------------------
     # device-state constructors (engine holds the results in its pytree)

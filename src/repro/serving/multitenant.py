@@ -6,17 +6,25 @@ engine under one of three schedules (``mode=``):
 
 * ``"continuous"`` — continuous batching over a persistent slot table
   (:class:`repro.serving.continuous.ContinuousBatchingEngine`): each outer
-  step admits queued requests into free slots (prefill + paged-KV scatter,
-  one request at a time, round-robin or straggler-priority across tenants),
-  dispatches one masked fixed-step decode micro-round over *all* slots, and
-  retires rows that hit their token budget, evicting their
-  :class:`repro.serving.kvcache.PagedKVCache` pages.  The device never
-  drains between tenant batches and short requests never pad out long ones
-  — the finest-grained sharing of the three, and the paper's utilisation
-  argument taken to per-request granularity.  Admission + the next round's
-  dispatch run while the previous round still occupies the device, so the
-  same falsifiable :func:`repro.core.pipeline.timeline_overlaps` predicate
-  applies round-to-round.
+  step admits queued requests into free slots (picked round-robin or
+  straggler-priority across tenants, then admitted as *one batch* — all
+  same-bucket picks share one batched prefill call, and prefix sharing maps
+  common prompt prefixes onto existing pages), dispatches one masked
+  fixed-step decode micro-round over *all* slots, and retires rows that hit
+  their token budget, dropping their :class:`repro.serving.kvcache.
+  PagedKVCache` page references.  The device never drains between tenant
+  batches and short requests never pad out long ones — the finest-grained
+  sharing of the three, and the paper's utilisation argument taken to
+  per-request granularity.  Admission + the next round's dispatch run while
+  the previous round still occupies the device, so the same falsifiable
+  :func:`repro.core.pipeline.timeline_overlaps` predicate applies
+  round-to-round.  When the in-flight round has already landed by the time
+  a step runs, it is collected *first* (retire-before-dispatch fast path):
+  finished rows are evicted and their slots/pages offered to this step's
+  admissions before round k+1 dispatches, instead of riding one extra round
+  as masked lanes.  Per-request admission windows are stamped into
+  ``admission_timeline`` (batch-admitted requests share one transfer
+  window).
 * ``"overlapped"`` (default) — tenant-slot batching on the engine's split
   ``dispatch``/``await_result`` halves: while tenant k's scanned decode
   occupies the device, the host assembles, stages and dispatches up to
@@ -162,6 +170,12 @@ class MultiTenantScheduler:
         self._cont_inflight: Optional[_InflightRound] = None
         self._cont_rounds = 0
         self._row_busy: Dict[int, float] = collections.defaultdict(float)
+        # continuous path: one entry per admitted request (vdev/slot = the
+        # tenant slot, transfer window = its admission batch's host window:
+        # pick + batched prefill + page mapping + state scatter).  Kept
+        # separate from `timeline` so the round-level overlap predicate
+        # isn't polluted by degenerate compute windows.
+        self.admission_timeline: List[TenantTimeline] = []
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -372,23 +386,39 @@ class MultiTenantScheduler:
     # Continuous schedule: admission + micro-rounds over the slot table
     # ------------------------------------------------------------------
     def _admit_continuous(self) -> int:
-        """Admit queued requests into free slots, one per tenant pick so the
-        slot table fills fairly (round-robin / straggler order).  Stops on
-        slot or page exhaustion (the request stays queued)."""
-        admitted = 0
-        while self._ceng.free_slot_count() > 0:
+        """Admit queued requests into free slots: one request per tenant
+        pick so the slot table fills fairly (round-robin / straggler order),
+        then the whole pick list admitted as one batch — same-bucket picks
+        share a single batched prefill call and prefix-share pages.
+        Rejected picks (slot or page pressure) are requeued at the front of
+        their tenant's queue, preserving order."""
+        eng = self._ceng
+        picked: List[Request] = []
+        while len(picked) < eng.free_slot_count():
             tenant = self._next_tenant()
             if tenant is None:
                 break
-            req = self.queues[tenant].popleft()
-            if not self._ceng.try_admit(req):
-                self.queues[tenant].appendleft(req)   # page pressure: retry
+            picked.append(self.queues[tenant].popleft())
+        if not picked:
+            return 0
+        t0 = time.perf_counter() - self._t0
+        flags = eng.try_admit_batch(picked)
+        t1 = time.perf_counter() - self._t0
+        admitted = 0
+        for req, ok in zip(picked, flags):
+            if ok:
+                admitted += 1
+                slot = self._slot_of[req.tenant]
+                self.admission_timeline.append(TenantTimeline(
+                    vdev=slot, pdev=0, slot=slot, transfer_start=t0,
+                    transfer_end=t1, compute_start=t1, compute_end=t1))
+        for req, ok in reversed(list(zip(picked, flags))):
+            if not ok:
+                self.queues[req.tenant].appendleft(req)
                 # the pick didn't result in service: un-mark the tenant so
                 # a straggler whose admission failed keeps its priority for
                 # the rest of the round instead of being demoted
-                self._round_served.discard(tenant)
-                break
-            admitted += 1
+                self._round_served.discard(req.tenant)
         return admitted
 
     def _dispatch_round(self, asm_start: float) -> _InflightRound:
@@ -407,25 +437,41 @@ class MultiTenantScheduler:
         if self._cont_inflight is None:
             asm0 = time.perf_counter() - self._t0
             if self._admit_continuous() == 0 and eng.active_count() == 0:
+                if any(self.queues.values()):
+                    # nothing in flight, so no retirement can ever free
+                    # pages: admission failure is permanent — surface it
+                    # instead of letting drain() spin on pending() forever
+                    # (run_all has the same guard)
+                    raise RuntimeError(
+                        "paged pool cannot admit any queued request (pool "
+                        "too small for the head request)")
                 return None
             self._cont_inflight = self._dispatch_round(asm0)
         cur = self._cont_inflight
+        # retire-before-dispatch fast path: when round k's emissions have
+        # already landed there is nothing to pipeline under — harvest and
+        # retire its finished rows NOW, so their slots and pages are offered
+        # to this step's admissions and round k+1 never carries them as
+        # masked lanes (the PR-3 one-round retirement lag)
+        res = eng.collect(cur.handle) if cur.handle.ready() else None
         # overlap point: the next round's admissions (host assembly, prefill
         # + KV-scatter enqueue) and its dispatch land here, while round k
-        # still occupies the device — rows that finish in round k are then
-        # masked lanes in round k+1 until this collect retires them
+        # still occupies the device — rows that finish in round k ride as
+        # masked lanes in round k+1 only when round k is still in flight
         asm0 = time.perf_counter() - self._t0
         admitted = self._admit_continuous()
         # pipeline round k+1 only if it will have live rows: fresh
-        # admissions, or a current row whose budget outlasts round k (the
-        # in-flight round's emissions aren't collected yet, so
-        # live_after(inner_steps) is exactly "survives round k") — else the
-        # drain would end on a dispatched-but-never-collected all-masked
+        # admissions, or a current row whose budget outlasts round k (when
+        # round k was already collected above, live_after(0) is exactly
+        # "anything still unfinished"; otherwise its emissions are still in
+        # flight and live_after(inner_steps) is "survives round k") — else
+        # the drain would end on a dispatched-but-never-collected all-masked
         # round, wasting a device round and skewing the occupancy counters
-        self._cont_inflight = (
-            self._dispatch_round(asm0)
-            if admitted or eng.live_after(eng.inner_steps) else None)
-        res = eng.collect(cur.handle)
+        live = eng.live_after(0 if res is not None else eng.inner_steps)
+        self._cont_inflight = (self._dispatch_round(asm0)
+                               if admitted or live else None)
+        if res is None:
+            res = eng.collect(cur.handle)
         cur.stamped.wait()
         cur.entry.compute_start = max(cur.entry.compute_start,
                                       min(self._last_ready,

@@ -95,10 +95,12 @@ def test_continuous_token_exact_ssm_family(rng):
 def test_page_reuse_after_eviction_token_exact(engine, rng):
     """Pool pressure: capacity 4 slots but pages for only ~2 concurrent
     rings, so admission must wait for eviction and recycle freed pages —
-    and recycled pages must decode exactly (no stale position/KV leaks)."""
+    and recycled pages must decode exactly (no stale position/KV leaks).
+    Runs unshared (prefix_sharing=False) so the PR-3 LIFO allocation counts
+    stay exact; the sharing paths have their own counters tests."""
     ceng = ContinuousBatchingEngine(engine, capacity=4, page_size=8,
                                     num_pages=2 + 4, inner_steps=2,
-                                    max_prompt_len=16)
+                                    max_prompt_len=16, prefix_sharing=False)
     reqs = [Request("a", rng.integers(1, engine.cfg.vocab_size,
                                       12).astype(np.int32),
                     max_new_tokens=3) for _ in range(5)]
@@ -114,28 +116,35 @@ def test_page_reuse_after_eviction_token_exact(engine, rng):
 
 def test_compile_count_stable_under_ragged_mix(engine, rng):
     """The decode round is shape-stable: one trace per (capacity, sampling
-    tier) no matter how ragged the max_new_tokens mix; admission traces once
-    per prompt bucket."""
+    tier) no matter how ragged the max_new_tokens mix; the admission scatter
+    traces once per prompt bucket; the batched admission prefill traces once
+    per (prompt bucket, power-of-two admission width)."""
     ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
                                     inner_steps=4, max_prompt_len=32)
     cfg = engine.cfg
     mk = lambda plen, steps: Request("a", rng.integers(
         1, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=steps)
-    # one prompt bucket (8), three different token budgets
+    # one prompt bucket (8), three different token budgets: the first two
+    # admissions batch into one width-2 prefill, the third runs at width 1
     ceng.run_all([mk(6, 1), mk(8, 5), mk(7, 9)])
     assert ceng.decode_traces == 1
     assert ceng.admit_traces == 1
-    assert ceng.prefill_traces == 1
-    # second bucket (16) compiles admission once more, decode not at all
+    assert ceng.prefill_traces == 2        # (bucket 8, widths 2 and 1)
+    assert ceng.prefill_calls == 2         # 3 requests, 2 host calls
+    # second bucket (16) compiles admission once more and one width-2
+    # prefill, decode not at all
     ceng.run_all([mk(12, 2), mk(16, 7)])
     assert ceng.decode_traces == 1
     assert ceng.admit_traces == 2
-    assert ceng.prefill_traces == 2
-    # replaying both buckets with fresh ragged budgets retraces nothing
+    assert ceng.prefill_traces == 3        # + (bucket 16, width 2)
+    assert ceng.prefill_calls == 3
+    # replaying both buckets with fresh ragged budgets only fills in the
+    # not-yet-seen (bucket 16, width 1) tier; nothing else retraces
     ceng.run_all([mk(5, 11), mk(14, 3)])
     assert ceng.decode_traces == 1
     assert ceng.admit_traces == 2
-    assert ceng.prefill_traces == 2
+    assert ceng.prefill_traces == 4        # + (bucket 16, width 1)
+    assert ceng.prefill_calls == 5
 
 
 def test_per_request_sampling_continuous(engine, ceng, rng):
@@ -204,6 +213,12 @@ def test_scheduler_continuous_end_to_end(engine, ceng, rng):
     for e in sched.timeline:
         assert e.transfer_start <= e.transfer_end <= e.compute_start \
             <= e.compute_end, vars(e)
+    # every batch-admitted request got an admission window stamped: one
+    # entry per request, transfer window well-formed, slot = tenant slot
+    assert len(sched.admission_timeline) == 7
+    for e in sched.admission_timeline:
+        assert e.transfer_start <= e.transfer_end == e.compute_end
+        assert e.slot in (sched._slot_of["t0"], sched._slot_of["t1"])
     # responses are retirement-ordered; match tokens by tenant sequence
     per_tenant_resp = {"t0": [], "t1": []}
     for resp in responses:
@@ -235,6 +250,174 @@ def test_continuous_pending_and_close(engine, ceng, rng):
     sched.drain()
     assert sched.pending() == 0
     assert ceng.active_count() == 0
+
+
+def test_prefix_sharing_token_exact_with_cow(engine, rng):
+    """The tentpole exactness contract: requests sharing a system-prompt
+    prefix decode through refcounted shared pages + copy-on-write forks and
+    stay token-exact with blocking generate — including after a CoW fork
+    (every row writes block 0 on its first decode step, forking the shared
+    page), after full-prefix repeats that skip their prefill entirely, and
+    after the shared chain's pages have been evicted and reused."""
+    cfg = engine.cfg
+    ceng = ContinuousBatchingEngine(engine, capacity=3, page_size=8,
+                                    inner_steps=4, max_prompt_len=64)
+    assert ceng.prefix_sharing
+    sys_prompt = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    mk = lambda t: Request(f"t{t}", np.concatenate(
+        [sys_prompt, rng.integers(1, cfg.vocab_size, 8).astype(np.int32)]),
+        max_new_tokens=6)
+    wave = [mk(t) for t in range(4)]
+    done = ceng.run_all(wave)
+    assert len(done) == 4
+    for req, tokens in done:
+        np.testing.assert_array_equal(_oracle(engine, ceng, req), tokens)
+    # the prefix actually shared and the first decode write actually forked
+    assert ceng.kv.pages_shared > 0
+    assert ceng.kv.cow_forks + ceng.kv.pristine_forks > 0
+    ceng.kv.assert_conserved()
+
+    # exact repeat of an already-seen prompt: full-prefix hit skips its
+    # prefill (cached logits + shared pages) and still decodes exactly
+    calls0, skips0 = ceng.prefill_calls, ceng.prefill_skips
+    repeat = Request("t0", wave[0].prompt.copy(), max_new_tokens=6)
+    (req, tokens), = ceng.run_all([repeat])
+    np.testing.assert_array_equal(_oracle(engine, ceng, req), tokens)
+    assert ceng.prefill_skips == skips0 + 1
+    assert ceng.prefill_calls == calls0
+    ceng.kv.assert_conserved()
+
+    # churn the pool with share-nothing traffic until the cached chain is
+    # evicted, then replay the shared wave through the recycled pages
+    churn = [Request("x", rng.integers(1, cfg.vocab_size,
+                                       48).astype(np.int32),
+                     max_new_tokens=2) for _ in range(8)]
+    ceng.run_all(churn)
+    for req, tokens in ceng.run_all([mk(t) for t in range(4)]):
+        np.testing.assert_array_equal(_oracle(engine, ceng, req), tokens)
+    ceng.kv.assert_conserved()
+
+
+def test_prefix_sharing_saves_pages_and_prefills(engine, rng):
+    """A/B on the shared-system-prompt workload: sharing+batching allocate
+    measurably fewer pages and issue fewer prefill calls than the PR-3
+    baseline (prefix_sharing=False, batch_admission=False), at identical
+    tokens."""
+    cfg = engine.cfg
+    sys_prompt = rng.integers(1, cfg.vocab_size, 24).astype(np.int32)
+    reqs = [Request(f"t{i}", np.concatenate(
+        [sys_prompt, rng.integers(1, cfg.vocab_size, 8).astype(np.int32)]),
+        max_new_tokens=4) for i in range(6)]
+
+    def run(shared: bool):
+        ceng = ContinuousBatchingEngine(engine, capacity=3, page_size=8,
+                                        inner_steps=4, max_prompt_len=32,
+                                        prefix_sharing=shared,
+                                        batch_admission=shared)
+        done = {id(r): t for r, t in ceng.run_all(reqs)}
+        return ceng, done
+
+    ceng_a, done_a = run(False)
+    # fresh identical requests through a sharing engine
+    ceng_b, done_b = run(True)
+    for r in reqs:
+        np.testing.assert_array_equal(done_a[id(r)], done_b[id(r)])
+    assert ceng_b.kv.pages_allocated < ceng_a.kv.pages_allocated
+    assert ceng_b.prefill_calls < ceng_a.prefill_calls
+    assert ceng_a.kv.pages_shared == 0
+    assert ceng_b.kv.pages_shared > 0
+
+
+def test_state_donated_in_place(engine, rng):
+    """The slot-table state pytree is donated to the round/admission jits:
+    the pre-call buffers die (XLA reuses them in place instead of copying
+    the pools), and the number of live device buffers stays flat across
+    micro-rounds."""
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=2, max_prompt_len=16)
+    req = Request("a", rng.integers(1, engine.cfg.vocab_size,
+                                    12).astype(np.int32),
+                  max_new_tokens=12)
+    old_pool = ceng.state["caches"][ceng.kv.attn_subs[0]]["k"]
+    old_pos = ceng.state["pos_pool"]
+    assert ceng.try_admit(req)
+    # admission donated the pre-admission state
+    assert old_pool.is_deleted() and old_pos.is_deleted()
+    old_pool = ceng.state["caches"][ceng.kv.attn_subs[0]]["k"]
+    ceng.collect(ceng.dispatch_round())
+    assert old_pool.is_deleted()
+    # steady state: repeated rounds neither copy pools nor accumulate
+    # buffers (the ever-used pool pages are updated in place)
+    ceng.collect(ceng.dispatch_round())
+    n0 = len(jax.live_arrays())
+    ceng.collect(ceng.dispatch_round())
+    ceng.collect(ceng.dispatch_round())
+    assert len(jax.live_arrays()) == n0
+
+
+def test_retire_before_dispatch_fast_path(engine, rng):
+    """A request finishing in round k is evicted — slot and pages free —
+    before round k+1 dispatches, whenever round k has already landed when
+    the scheduler steps: its replacement joins round k+1 instead of the
+    PR-3 behaviour of riding one extra round behind a masked lane."""
+    cfg = engine.cfg
+    sched = MultiTenantScheduler(
+        engine, mode="continuous",
+        continuous=dict(capacity=2, page_size=8, num_pages=2 + 4,
+                        inner_steps=4, max_prompt_len=16,
+                        prefix_sharing=False))
+    eng = sched.continuous_engine
+    mk = lambda t, n: Request(t, rng.integers(
+        1, cfg.vocab_size, 12).astype(np.int32), max_new_tokens=n)
+    r1, r2, r3 = mk("a", 8), mk("b", 20), mk("c", 8)
+    for r in (r1, r2, r3):
+        sched.submit(r)
+
+    dispatches = []                  # (free pages, tenants) at dispatch time
+    orig = eng.dispatch_round
+
+    def recording_dispatch():
+        dispatches.append((eng.kv.free_pages(),
+                           [s.req.tenant if s is not None else None
+                            for s in eng._slots]))
+        return orig()
+
+    eng.dispatch_round = recording_dispatch
+    # step 1: admits r1+r2 (pool full -> r3 queued), dispatches rounds 1
+    # and 2 (r1 finishes inside round 2)
+    sched.step()
+    assert sched._cont_inflight is not None
+    # force "round 2 has landed" before the next step
+    jax.block_until_ready(sched._cont_inflight.handle.emitted)
+    responses = sched.step()
+    # the fast path collected round 2 first: r1 retired, r3 admitted into
+    # round 3's dispatch — with the PR-3 ordering round 3 would have been
+    # dispatched before r1's retirement, with r3 still queued
+    assert [r.tenant for r in responses] == ["a"]
+    assert len(dispatches) >= 3
+    assert "c" in dispatches[2][1] and "a" not in dispatches[2][1]
+    sched.drain()
+    assert eng.kv.free_pages() == 4
+    eng.dispatch_round = orig
+
+
+def test_unadmittable_request_raises_not_spins(engine, rng):
+    """A request the pool can never admit (fresh pages + CoW reserve exceed
+    the usable pool, and nothing is in flight to retire) must raise from
+    both drain paths instead of busy-looping on pending() forever."""
+    cfg = engine.cfg
+    req = Request("a", rng.integers(1, cfg.vocab_size, 16).astype(np.int32),
+                  max_new_tokens=4)
+    kwargs = dict(capacity=2, page_size=8, num_pages=2 + 2, inner_steps=2,
+                  max_prompt_len=16)      # usable == blocks, reserve unmet
+    ceng = ContinuousBatchingEngine(engine, **kwargs)
+    with pytest.raises(RuntimeError, match="cannot admit"):
+        ceng.run_all([req])
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous=dict(kwargs))
+    sched.submit(Request("a", req.prompt.copy(), 4))
+    with pytest.raises(RuntimeError, match="cannot admit"):
+        sched.drain()
 
 
 def test_enc_dec_rejected():

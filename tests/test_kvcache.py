@@ -1,0 +1,269 @@
+"""PagedKVCache allocator: leak regression, conservation, sharing property.
+
+Host-side allocator tests (no model, no jitted state): the allocator is the
+single source of truth for page ownership, refcounts, the prefix trie and
+the copy-on-write reserve, so its invariants are checked exhaustively here:
+
+* the PR-3 alloc leak: re-allocating a slot that still owns pages used to
+  silently drop the old list off both the free list and the owned map;
+* conservation under unshared admit/retire fuzz — the literal PR-3 contract
+  ``free_pages() + sum(owned) == num_pages - RESERVED``;
+* a Hypothesis property suite over random interleavings of shared/unshared
+  admission, decode writes (CoW forks / pristine preserves / in-place) and
+  retirement: pages are never leaked or double-freed, every page's refcount
+  equals the number of page-table references to it, the trie stays
+  consistent, and the fork reserve never exceeds the available pool (so a
+  mandatory copy-on-write fork can never fail).
+"""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving.kvcache import PagedKVCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+CFG = get_config("internlm2-1.8b").reduced()
+PAGE = 4
+
+
+def make_kv(num_pages=None, capacity=4, max_blocks=4):
+    return PagedKVCache(CFG, capacity, PAGE, max_blocks, num_pages)
+
+
+def usable(kv):
+    return kv.num_pages - kv.RESERVED
+
+
+def owned_total(kv):
+    return sum(len(p) for p in kv._owned.values())
+
+
+# ---------------------------------------------------------------------------
+# PR-3 leak regression
+# ---------------------------------------------------------------------------
+def test_realloc_of_owned_slot_raises():
+    """alloc() on a slot that still owns pages must refuse loudly: silently
+    overwriting the owned list leaked the old pages (they were neither on
+    the free list nor reachable through _owned)."""
+    kv = make_kv()
+    assert kv.alloc(0, 2) is not None
+    with pytest.raises(ValueError, match="already owns"):
+        kv.alloc(0, 1)
+    # the refusing call must not have touched anything
+    assert kv.free_pages() + owned_total(kv) == usable(kv)
+    kv.free(0)
+    assert kv.free_pages() == usable(kv)
+
+
+def test_admit_retire_fuzz_conservation():
+    """Unshared admit/retire cycles at random sizes: the PR-3 conservation
+    contract holds after every operation (the leak would break it on the
+    first re-allocation pattern that used to overwrite)."""
+    kv = make_kv(num_pages=PagedKVCache.RESERVED + 10, capacity=6,
+                 max_blocks=4)
+    rng = np.random.default_rng(0)
+    live = set()
+    for _ in range(500):
+        if live and rng.random() < 0.45:
+            slot = int(rng.choice(sorted(live)))
+            kv.free(slot)
+            live.discard(slot)
+        else:
+            slot = int(rng.integers(0, 6))
+            n = int(rng.integers(1, 5))
+            if slot in live:
+                with pytest.raises(ValueError, match="already owns"):
+                    kv.alloc(slot, n)
+            elif kv.alloc(slot, n) is not None:
+                live.add(slot)
+        assert kv.free_pages() + owned_total(kv) == usable(kv)
+        kv.assert_conserved()
+    for slot in sorted(live):
+        kv.free(slot)
+    assert kv.free_pages() == usable(kv)
+
+
+# ---------------------------------------------------------------------------
+# sharing property suite
+# ---------------------------------------------------------------------------
+# a small prompt pool with deliberately shared prefixes: prompts are padded
+# to 2-4 blocks of PAGE tokens, several sharing their leading blocks
+def _prompt_pool():
+    base = np.arange(1, 1 + 4 * PAGE, dtype=np.int32)
+    pool = []
+    for nblk in (2, 3, 4):
+        for variant in range(3):
+            p = base[:nblk * PAGE].copy()
+            if variant:      # diverge in the last block only
+                p[-1] = 200 + variant
+            pool.append(p)
+    return pool
+
+
+PROMPTS = _prompt_pool()
+
+
+class _Model:
+    """Host-side mirror of the engine's admission/write montage, driving a
+    PagedKVCache exactly the way ContinuousBatchingEngine does."""
+
+    def __init__(self, num_pages, capacity):
+        self.kv = make_kv(num_pages=num_pages, capacity=capacity)
+        self.capacity = capacity
+        # slot -> (keys, set of not-yet-written will_write blocks)
+        self.live = {}
+
+    def admit(self, slot, prompt, max_new, share):
+        kv = self.kv
+        if slot in self.live:
+            return
+        keys = kv.chain_keys(prompt) if share else []
+        nb = prompt.size // PAGE
+        ring = prompt.size
+        shared = kv.lookup_chain(keys)[:nb]
+        will_write = {((ring + t) % ring) // PAGE
+                      for t in range(min(max_new, ring))}
+        pages = kv.alloc_shared(slot, shared, nb - len(shared), will_write)
+        if pages is None:
+            return
+        if share:
+            kv.register(slot, keys)
+        self.live[slot] = set(will_write)
+
+    def write(self, slot, preserve):
+        """First-write one pending block (a decode round reaching it)."""
+        pending = self.live.get(slot)
+        if not pending:
+            return
+        blk = min(pending)
+        fork = self.kv.note_write(slot, blk, preserve=preserve)
+        pending.discard(blk)
+        if fork is not None:
+            src, dst = fork
+            assert src != dst
+            assert self.kv.ref(dst) == 1
+
+    def retire(self, slot):
+        if slot in self.live:
+            self.kv.free(slot)
+            del self.live[slot]
+
+
+def _walk(m: _Model, ops) -> None:
+    """Drive a model through (op, slot, *params) tuples, auditing the
+    allocator after every step, then drain and check the terminal state:
+    every non-reserved page free or cached, zero outstanding reserve."""
+    for op, slot, *params in ops:
+        if op == "admit":
+            prompt_idx, max_new, share = params
+            m.admit(slot, PROMPTS[prompt_idx], max_new=max_new, share=share)
+        elif op == "write":
+            m.write(slot, preserve=params[0])
+        else:
+            m.retire(slot)
+        m.kv.assert_conserved()
+    for slot in sorted(m.live):
+        m.retire(slot)
+    m.kv.assert_conserved()
+    kv = m.kv
+    assert kv.free_pages() + kv.cached_pages() == usable(kv)
+    assert kv.cow_reserve == 0
+
+
+def test_sharing_allocator_fuzz():
+    """Seeded-random interleavings of shared/unshared admission,
+    pending-block writes (mandatory CoW forks, pristine preserves,
+    in-place) and retirement: never leak, never double-free, refcounts
+    always equal the page-table references, reserve always covered."""
+    rng = np.random.default_rng(7)
+    for _ in range(150):
+        m = _Model(PagedKVCache.RESERVED + int(rng.integers(6, 21)),
+                   capacity=int(rng.integers(2, 7)))
+        ops = []
+        for _ in range(int(rng.integers(5, 41))):
+            op = ("admit", "write", "retire")[int(rng.integers(0, 3))]
+            slot = int(rng.integers(0, m.capacity))
+            if op == "admit":
+                ops.append((op, slot, int(rng.integers(0, len(PROMPTS))),
+                            int(rng.integers(1, 3 * PAGE + 1)),
+                            bool(rng.integers(0, 2))))
+            elif op == "write":
+                ops.append((op, slot, bool(rng.integers(0, 2))))
+            else:
+                ops.append((op, slot))
+        _walk(m, ops)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_sharing_allocator_property():
+    """The same state machine under Hypothesis (shrinking finds minimal
+    violating interleavings; runs in CI where hypothesis is installed)."""
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.data())
+    def run(data):
+        m = _Model(PagedKVCache.RESERVED + data.draw(st.integers(6, 20)),
+                   capacity=data.draw(st.integers(2, 6)))
+        ops = []
+        for _ in range(data.draw(st.integers(5, 40))):
+            op = data.draw(st.sampled_from(("admit", "write", "retire")))
+            slot = data.draw(st.integers(0, m.capacity - 1))
+            if op == "admit":
+                ops.append((op, slot,
+                            data.draw(st.integers(0, len(PROMPTS) - 1)),
+                            data.draw(st.integers(1, 3 * PAGE)),
+                            data.draw(st.booleans())))
+            elif op == "write":
+                ops.append((op, slot, data.draw(st.booleans())))
+            else:
+                ops.append((op, slot))
+        _walk(m, ops)
+
+    run()
+
+
+def test_shared_admission_and_cow_fork_lifecycle():
+    """Deterministic walk through the sharing lifecycle: share, fork on
+    write, pristine retention, revival from cache, eviction."""
+    kv = make_kv(num_pages=PagedKVCache.RESERVED + 8, capacity=4)
+    prompt = PROMPTS[0][:2 * PAGE]
+    keys = kv.chain_keys(prompt)
+    # original admission registers its blocks
+    pages0 = kv.alloc_shared(0, [], 2, {0})
+    kv.register(0, keys)
+    assert kv.lookup_chain(keys) == list(pages0)
+    # second request shares the full chain (refcounts 2)
+    pages1 = kv.alloc_shared(1, kv.lookup_chain(keys), 0, {0})
+    assert list(pages1) == list(pages0)
+    assert kv.ref(pages0[0]) == 2
+    assert kv.pages_shared == 2
+    # slot 1 writes block 0: mandatory fork, slot 0 untouched
+    fork = kv.note_write(1, 0)
+    assert fork is not None and fork[0] == pages0[0]
+    assert kv.ref(pages0[0]) == 1 and kv.ref(fork[1]) == 1
+    assert kv.cow_forks == 1
+    # slot 0 writes block 0: sole owner of a registered page -> preserve
+    fork0 = kv.note_write(0, 0)
+    assert fork0 is not None and kv.pristine_forks == 1
+    assert kv.ref(pages0[0]) == 0 and kv.cached_pages() == 1
+    # the pristine chain is still shareable after both owners retire
+    kv.free(0)
+    kv.free(1)
+    assert kv.lookup_chain(keys) == list(pages0)
+    revived = kv.alloc_shared(2, kv.lookup_chain(keys), 0, set())
+    assert list(revived) == list(pages0)
+    assert kv.ref(pages0[0]) == 1
+    kv.free(2)
+    kv.assert_conserved()
+    # pool pressure evicts cached pristine pages (leaf-most first)
+    taken = [kv._take_page() for _ in range(kv.free_pages())]
+    assert kv.cached_pages() == 2
+    extra = kv._take_page()          # must come from the cached set
+    assert kv.cached_pages() == 1
+    assert len(kv.lookup_chain(keys)) == 1      # chain truncated, not torn
+    kv._free.extend(taken + [extra])
