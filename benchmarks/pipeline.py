@@ -22,8 +22,21 @@ Two A/B comparisons on the real (CPU-reduced) stack:
   real TPUs — the rows exist to track both variants' health and relative
   drift.
 
+* **paged-attention backends** — the serving decode's dense jnp KV gather
+  against the fused Pallas page-streaming kernel at several (bucket,
+  page-size) points, with pages-touched and bytes-moved derived columns
+  (the structural metric that transfers to real accelerators) plus a
+  serving-level per-round A/B.
+
 Run with ``python -m benchmarks.run --only pipeline [--json out.json]``.
 Scale trials/devices via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+``--device-time`` switches the timers from bare wall time to
+``jax.block_until_ready``-bracketed device timing: each timed call blocks
+on every device array it returned before the clock stops, so on real
+accelerators the number is time-to-device-completion instead of
+time-to-enqueue (deferred from PR 1; on CPU the two coincide for the
+host-blocking drains and differ only for benches that return device
+arrays).
 """
 from __future__ import annotations
 
@@ -35,29 +48,49 @@ import numpy as np
 
 Row = Tuple[str, float, str]
 
+# set by ``benchmarks.run --device-time``: bracket every timed call with
+# jax.block_until_ready on its result (device timing, not enqueue timing)
+DEVICE_TIME = False
+
+
+_BLOCK = None                                  # jax.block_until_ready, lazy
+
+
+def _ready(result):
+    """Under --device-time, block on every device array in ``result``
+    before the caller stops its clock; otherwise a pass-through."""
+    global _BLOCK
+    if DEVICE_TIME and result is not None:
+        if _BLOCK is None:                     # resolve once, outside the
+            import jax                         # per-sample timed region
+            _BLOCK = jax.block_until_ready
+        _BLOCK(result)
+    return result
+
 
 def _best_of(fn, n: int = 3) -> float:
     best = float("inf")
     for _ in range(n):
         t0 = time.perf_counter()
-        fn()
+        _ready(fn())
         best = min(best, time.perf_counter() - t0)
     return best
 
 
 def _min_ab(fn_a, fn_b, n: int = 9) -> Tuple[float, float, float, float]:
-    """Interleaved A/B wall times; returns (min_a, min_b, med_a, med_b).
+    """Interleaved A/B times; returns (min_a, min_b, med_a, med_b).
 
     The minimum is the noise-robust estimator on shared/throttled CPU hosts
     (scheduling noise is strictly additive); the median is reported alongside
-    for drift tracking."""
+    for drift tracking.  Under --device-time each call is bracketed by
+    ``jax.block_until_ready`` on its return value."""
     ts_a, ts_b = [], []
     for _ in range(n):
         t0 = time.perf_counter()
-        fn_a()
+        _ready(fn_a())
         ts_a.append(time.perf_counter() - t0)
         t0 = time.perf_counter()
-        fn_b()
+        _ready(fn_b())
         ts_b.append(time.perf_counter() - t0)
     return (min(ts_a), min(ts_b),
             sorted(ts_a)[n // 2], sorted(ts_b)[n // 2])
@@ -348,8 +381,34 @@ def bench_serving_prefix_sharing() -> List[Row]:
         lambda: ceng_base.run_all(mix), lambda: ceng_share.run_all(mix),
         n=5)
 
+    # reuse-aware pristine-preserve A/B: on a share-nothing workload the
+    # PR-4 preserve-always policy pays one page copy per admission to cache
+    # chains nobody ever re-shares; the reuse-aware default (preserve only
+    # after a recorded sharing hit) should pay none — while the shared
+    # workload above keeps its pristine cache (hits recorded)
+    lonely = [Request(f"t{i}", rng.integers(1, cfg.vocab_size,
+                                            sys_len).astype(np.int32),
+                      max_new_tokens=new_tok) for i in range(8)]
+    policy_rows = []
+    for policy in ("always", True):
+        ceng_p = ContinuousBatchingEngine(
+            engine, capacity=8, page_size=page, inner_steps=4,
+            max_prompt_len=sys_len + user_len, preserve_pristine=policy)
+        ceng_p.run_all(lonely)
+        policy_rows.append((policy, ceng_p.kv.pristine_forks,
+                            ceng_p.kv.pages_allocated))
+
     tag = f"{tenants}t_{len(mix)}r_sysprompt"
     out: List[Row] = []
+    (_, forks_always, pages_always), (_, forks_reuse, pages_reuse) = \
+        policy_rows
+    out.append((f"serving/pristine_policy_sharenothing_{tag}",
+                float(forks_always),
+                f"pristine_forks_always={forks_always};"
+                f"pristine_forks_reuse_aware={forks_reuse};"
+                f"pages_allocated_always={pages_always};"
+                f"pages_allocated_reuse_aware={pages_reuse};"
+                f"copies_eliminated={forks_always - forks_reuse}"))
     out.append((f"serving/prefix_unshared_{tag}", t_base * 1e6,
                 f"median_us={med_base * 1e6:.0f};"
                 f"pages_allocated={pages_base};"
@@ -370,6 +429,163 @@ def bench_serving_prefix_sharing() -> List[Row]:
                 f"steady_pages={steady_pages};"
                 f"steady_prefill_calls={steady_calls};"
                 f"steady_prefill_skips={steady_skips}"))
+    return out
+
+
+def bench_paged_attention() -> List[Row]:
+    """Paged-attention backend A/B: the dense jnp gather (materialise every
+    row's full logical window per decode step) against the fused Pallas
+    kernel (stream page blocks in place through the page table) at several
+    (bucket, page-size) points, plus a serving-level per-round comparison.
+
+    Two metric families per point:
+
+    * **wall/device time** — honest but, for the pallas rows on CPU, an
+      *interpret-mode emulation artefact* (every grid cell is a Python-level
+      block evaluation): rank them for drift, not for speed.  On real TPUs
+      the time ratio follows the bytes ratio.
+    * **derived traffic columns** — pages touched and pool bytes moved per
+      call, computed from the page tables: the gather path always touches
+      ``C x NB`` page blocks *and* materialises them as a dense
+      ``[C, NB*P, Hkv, D]`` intermediate (written then re-read by the
+      attention einsum); the fused path touches only the live pages (+ the
+      shared SENTINEL page for table padding) and materialises nothing.
+      This is the structural O(bucket) -> O(live-tokens) claim, measured
+      from the same tables the kernels consume.
+
+    The serving-level rows run one ragged workload through both backends of
+    the continuous engine and derive per-round pool traffic from the
+    allocator's live-page counts at each dispatch.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.serving.kvcache import (POS_SENTINEL, PagedKVCache,
+                                       paged_attend)
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    C, Hkv, D, H = 4, cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+    rng = np.random.default_rng(0)
+    out: List[Row] = []
+    bf16 = 2                                   # pool bytes per element
+
+    for bucket, page in ((64, 8), (128, 16), (256, 16)):
+        NB = bucket // page
+        NP_ = PagedKVCache.RESERVED + C * NB
+        k_pool = jnp.asarray(rng.standard_normal((NP_, page, Hkv, D)),
+                             jnp.bfloat16)
+        v_pool = jnp.asarray(rng.standard_normal((NP_, page, Hkv, D)),
+                             jnp.bfloat16)
+        pos_pool = np.full((NP_, page), POS_SENTINEL, np.int32)
+        page_table = np.full((C, NB), PagedKVCache.SENTINEL, np.int32)
+        next_page, live_pages, live_tokens = PagedKVCache.RESERVED, 0, 0
+        for c in range(C):                     # ragged: 1/4 .. 4/4 of NB
+            nb_c = max(1, ((c + 1) * NB) // C)
+            pos = nb_c * page - 1
+            live_pages += nb_c
+            live_tokens += pos + 1
+            for b in range(nb_c):
+                page_table[c, b] = next_page
+                pos_pool[next_page] = np.arange(b * page, (b + 1) * page)
+                next_page += 1
+        pt = jnp.asarray(page_table)
+        pp_ = jnp.asarray(pos_pool)
+        pos = jnp.asarray([max(1, ((c + 1) * NB) // C) * page - 1
+                           for c in range(C)], jnp.int32)
+        q = jnp.asarray(rng.standard_normal((C, H, D)).astype(np.float32))
+
+        fn_jnp = jax.jit(lambda q, k, v, pp_, pt, ps: paged_attend(
+            q, {"k": k, "v": v}, pt, ps, cfg, pos_pool=pp_, backend="jnp"))
+        fn_pal = jax.jit(lambda q, k, v, pp_, pt, ps: paged_attend(
+            q, {"k": k, "v": v}, pt, ps, cfg, pos_pool=pp_,
+            backend="pallas"))
+        a = fn_jnp(q, k_pool, v_pool, pp_, pt, pos)     # warm + validate
+        b = fn_pal(q, k_pool, v_pool, pp_, pt, pos)
+        ok = bool(np.allclose(np.asarray(a), np.asarray(b), rtol=3e-5,
+                              atol=3e-6))
+        t_jnp, t_pal, med_jnp, med_pal = _min_ab(
+            lambda: fn_jnp(q, k_pool, v_pool, pp_, pt, pos),
+            lambda: fn_pal(q, k_pool, v_pool, pp_, pt, pos))
+
+        page_bytes = page * Hkv * D * bf16 * 2          # k + v
+        dense_blocks = C * NB                           # every table entry
+        gather_bytes = dense_blocks * page_bytes        # pool reads
+        dense_interm = dense_blocks * page_bytes * 2    # write + re-read
+        fused_blocks = live_pages + 1                   # + shared SENTINEL
+        fused_bytes = fused_blocks * page_bytes
+        tag = f"{bucket}b_{page}p"
+        out.append((f"paged/attend_jnp_{tag}", t_jnp * 1e6,
+                    f"median_us={med_jnp * 1e6:.0f};"
+                    f"pages_touched={dense_blocks};"
+                    f"bytes_moved={gather_bytes + dense_interm};"
+                    f"dense_intermediate_bytes={dense_interm};"
+                    f"live_tokens={live_tokens}"))
+        out.append((f"paged/attend_pallas_{tag}", t_pal * 1e6,
+                    f"median_us={med_pal * 1e6:.0f};"
+                    f"pages_touched={fused_blocks};"
+                    f"bytes_moved={fused_bytes};"
+                    f"dense_intermediate_bytes=0;"
+                    f"live_tokens={live_tokens};"
+                    f"bytes_saved={(gather_bytes + dense_interm) / fused_bytes:.1f}x;"
+                    f"matches_jnp={ok};interp_emulation=True"))
+
+    # serving-level per-round A/B on a ragged continuous workload
+    from repro.models import params as pp2
+    from repro.models.model import build_model
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import Request
+
+    from repro.serving.kvcache import attn_subs
+    params, _ = pp2.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    reqs = [Request(f"t{i % 2}",
+                    rng.integers(1, cfg.vocab_size,
+                                 8 + 8 * (i % 3)).astype(np.int32),
+                    max_new_tokens=4 + 4 * (i % 2)) for i in range(8)]
+    n_attn = len(attn_subs(cfg))
+
+    rows = {}
+    for backend in ("jnp", "pallas"):
+        ceng = ContinuousBatchingEngine(engine, capacity=4, page_size=8,
+                                        inner_steps=4, max_prompt_len=32,
+                                        backend=backend)
+        live_at_dispatch = []
+        orig = ceng.dispatch_round
+
+        def probe(ceng=ceng, live=live_at_dispatch, orig=orig):
+            kv = ceng.kv
+            live.append(kv.num_pages - kv.RESERVED - kv.free_pages()
+                        - kv.cached_pages())
+            return orig()
+
+        ceng.dispatch_round = probe
+        ceng.run_all(reqs)                      # warm (compiles)
+        live_at_dispatch.clear()
+        r0 = ceng.rounds
+        t = _best_of(lambda: ceng.run_all(reqs), n=3)
+        rounds = (ceng.rounds - r0) // 3
+        rows[backend] = (t, rounds, float(np.mean(live_at_dispatch)), ceng)
+
+    page_bytes = 8 * Hkv * D * bf16 * 2
+    n_layers = n_attn * rows["jnp"][3].n_stages
+    per_round = {}
+    for backend, (t, rounds, live_mean, ceng) in rows.items():
+        steps = ceng.inner_steps
+        if backend == "jnp":
+            blocks = 4 * ceng.kv.max_blocks             # capacity x NB
+            traffic = steps * n_layers * blocks * page_bytes * 3
+        else:
+            traffic = steps * n_layers * (live_mean + 1) * page_bytes
+        per_round[backend] = traffic
+        out.append((f"paged/serving_round_{backend}", t / max(rounds, 1) * 1e6,
+                    f"rounds_per_drain={rounds};"
+                    f"mean_live_pages={live_mean:.1f};"
+                    f"pool_bytes_per_round={traffic:.0f};"
+                    + (f"bytes_improvement="
+                       f"{per_round['jnp'] / traffic:.1f}x;"
+                       f"interp_emulation=True" if backend == "pallas"
+                       else "dense_window=full")))
     return out
 
 
@@ -403,4 +619,4 @@ def bench_kernel_variants() -> List[Row]:
 
 ALL = [bench_pipeline_overlap, bench_serving_overlap,
        bench_serving_continuous, bench_serving_prefix_sharing,
-       bench_kernel_variants]
+       bench_paged_attention, bench_kernel_variants]

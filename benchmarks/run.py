@@ -25,10 +25,17 @@ def main() -> None:
                     help="comma-separated substring filters on bench names")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write rows to PATH as a JSON perf record")
+    ap.add_argument("--device-time", action="store_true",
+                    help="bracket every timed call with jax.block_until_"
+                         "ready on its result: on accelerators the rows "
+                         "measure device completion instead of host "
+                         "enqueue (min-of-N wall time otherwise)")
     args = ap.parse_args()
     filters = args.only.split(",") if args.only else None
 
     from benchmarks import paper_figures, pipeline, roofline
+    if args.device_time:
+        pipeline.DEVICE_TIME = True
     benches = list(paper_figures.ALL) + list(pipeline.ALL) + [roofline.run]
 
     print("name,us_per_call,derived")
@@ -54,6 +61,7 @@ def main() -> None:
         record = {
             "schema": "repro-bench-rows/v1",
             "devices": [str(d) for d in jax.devices()],
+            "device_time": bool(args.device_time),
             "failures": len(errors),
             "errors": errors,
             "rows": rows,

@@ -117,6 +117,66 @@ def ssd_decode_step_ref(state, x_t, dt_t, a_t, B_t, C_t):
 
 
 # ---------------------------------------------------------------------------
+# Paged attention (serving decode hot path) — gather/scatter oracles
+# ---------------------------------------------------------------------------
+def paged_attention_decode_ref(q, k_pool, v_pool, page_table, positions, *,
+                               kpos: Optional[jax.Array] = None,
+                               pos_pool: Optional[jax.Array] = None,
+                               window: Optional[int] = None) -> jax.Array:
+    """Dense-gather paged decode read: the numerics source of truth for
+    :func:`repro.kernels.paged_attention.paged_attention_decode_pallas` and
+    the ``backend="jnp"`` serving path (which calls this directly).
+
+    q: (C, H, D) compute dtype, already roped; k_pool/v_pool:
+    (NP, P, Hkv, D) storage dtype; page_table: (C, NB) int32; positions:
+    (C,) int32.  Validity comes from ``kpos`` (C, NB*P) — pass it
+    pre-gathered (the serving decode step shares one gather across
+    sublayers) or let it be gathered here from ``pos_pool`` (NP, P).
+    Returns (C, H, D) float32.
+
+    This is operation-for-operation the dense ring-cache decode math of
+    :func:`repro.models.layers.apply_attention_decode` (same einsum
+    equations, -1e30 mask bias, bf16->f32 cache casts, full-row softmax)
+    applied to the page-table-gathered logical view — it materialises the
+    dense [C, NB*P, Hkv, D] KV the fused kernel exists to avoid.
+    """
+    C, H, D = q.shape
+    Hkv = k_pool.shape[2]
+
+    def gather(pool):
+        g = pool[page_table]                       # (C, NB, P, ...)
+        return g.reshape((g.shape[0], g.shape[1] * g.shape[2])
+                         + g.shape[3:])
+
+    k = gather(k_pool)                             # (C, L, Hkv, D)
+    v = gather(v_pool)
+    if kpos is None:
+        kpos = gather(pos_pool[..., None])[..., 0]
+    valid = kpos <= positions[:, None]
+    if window is not None:
+        valid &= kpos > positions[:, None] - window
+    bias_pos = jnp.where(valid, 0.0, -1e30)        # (C, L)
+    rep = H // Hkv
+    qr = q.reshape(C, 1, Hkv, rep, D)
+    scale = 1.0 / (D ** 0.5)
+    s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, k.astype(qr.dtype),
+                   preferred_element_type=jnp.float32) * scale
+    s = s + bias_pos[:, None, None, None, :]
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhrk,bkhd->bqhrd", pattn, v.astype(qr.dtype),
+                   preferred_element_type=jnp.float32)
+    return o.reshape(C, H, D)
+
+
+def paged_scatter_ref(pool, pages, values) -> jax.Array:
+    """Scatter oracle for the prefill fused-write kernel: write ``values``
+    (S, nb, P, ...) into ``pool`` (S, NP, P, ...) at page ids ``pages``
+    (nb,), cast to the pool dtype.  Bit-exact contract: the Pallas kernel
+    performs the same cast and the same page-granular stores."""
+    return pool.at[:, pages].set(values.astype(pool.dtype))
+
+
+# ---------------------------------------------------------------------------
 # Aggregate Risk Analysis (paper Algorithm 3) — trial-loss oracle
 # ---------------------------------------------------------------------------
 def aggregate_loss_ref(event_ids, elt_losses, occ_ret, occ_lim, agg_ret, agg_lim):

@@ -14,7 +14,10 @@ overlap pairs.  ``--mode`` selects the schedule:
   ``--prefix-sharing`` common prompt prefixes map onto existing pages with
   copy-on-write) and retired rows are evicted, so the device never drains
   between tenant batches (also prints micro-round occupancy and
-  page-sharing stats);
+  page-sharing stats).  ``--kernel-backend pallas`` swaps the decode
+  round's dense KV gather for the fused page-streaming Pallas kernels
+  (token-exact; interpret mode on CPU, where it demonstrates structure,
+  not speed);
 * ``overlapped`` (default) — tenant-slot batching with up to
   ``--stage-depth`` batches staged under the running decode;
 * ``blocking`` — the legacy host-blocking schedule (A/B baseline).
@@ -65,6 +68,21 @@ def main(argv=None) -> int:
                     action=argparse.BooleanOptionalAction, default=True,
                     help="continuous mode: batch same-bucket admissions "
                          "into one prefill call")
+    ap.add_argument("--kernel-backend", choices=("jnp", "pallas"),
+                    default="jnp",
+                    help="paged-attention backend: 'jnp' gathers each "
+                         "row's dense logical window per decode step (A/B "
+                         "baseline), 'pallas' streams pages in place "
+                         "through the fused kernels (interpret mode on "
+                         "CPU)")
+    ap.add_argument("--preserve-pristine", choices=("never", "reuse",
+                                                    "always"),
+                    default="reuse",
+                    help="pristine-preserve policy for shared chains: "
+                         "'reuse' copies a written pristine page only "
+                         "after its chain recorded a sharing hit, "
+                         "'always' is the PR-4 one-copy-per-admission "
+                         "behaviour, 'never' disables preservation")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
                     help="prepend a common system-prompt prefix of this "
                          "many tokens to every request (demo workload for "
@@ -76,7 +94,9 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
-    engine = ServingEngine(cfg, params)
+    engine = ServingEngine(cfg, params, kernel_backend=args.kernel_backend)
+    preserve = {"never": False, "reuse": True,
+                "always": "always"}[args.preserve_pristine]
     sched = MultiTenantScheduler(
         engine, max_batch=args.max_batch,
         tenancy=TenancyConfig(1, args.tenants), mode=mode,
@@ -85,6 +105,7 @@ def main(argv=None) -> int:
                         inner_steps=args.inner_steps,
                         prefix_sharing=args.prefix_sharing,
                         batch_admission=args.batch_admission,
+                        preserve_pristine=preserve,
                         max_prompt_len=max(64, 2 * args.prompt_len
                                            + args.shared_prefix_len)))
 
@@ -116,7 +137,8 @@ def main(argv=None) -> int:
         eng = sched.continuous_engine
         print(f"micro-rounds={eng.rounds} x {eng.inner_steps} steps, "
               f"slot occupancy={eng.occupancy()*100:.1f}%, "
-              f"pages reused={eng.kv.pages_reused}/{eng.kv.pages_allocated}")
+              f"pages reused={eng.kv.pages_reused}/{eng.kv.pages_allocated}, "
+              f"backend={eng.backend}")
         print(f"prefix sharing={'on' if eng.prefix_sharing else 'off'}: "
               f"pages allocated={eng.kv.pages_allocated} "
               f"shared={eng.kv.pages_shared} cow_forks={eng.kv.cow_forks} "

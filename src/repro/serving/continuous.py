@@ -47,6 +47,18 @@ jits (``donate_argnums``): XLA updates the pools in place instead of copying
 the whole pool every micro-round, and the tests pin that down by checking
 the old state buffers are deleted after a round.
 
+``backend`` selects how the round's jit reads the paged pool: ``"jnp"``
+gathers each row's full logical window into a dense ``[C, bucket, Hkv, D]``
+tensor per decode step (the PR-3 path, kept as the A/B baseline and
+numerics oracle), ``"pallas"`` streams page-sized KV blocks in place
+through the fused paged-attention kernel (page-table indexing inside the
+kernel grid, online softmax across pages — O(live pages) bytes per round
+instead of O(capacity x bucket)) and scatters admission KV page-granularly
+(see :mod:`repro.kernels.paged_attention`).  Both backends share every
+other part of the engine — allocator, CoW, donation, compile-count
+contract — and greedy decode is token-exact across them
+(``tests/test_paged_attention.py``).
+
 Compile-count contract: one decode-round trace per (capacity, sampling
 tier); one admission-scatter trace per (prompt bucket, ring); one prefill
 trace per (prompt bucket, power-of-two admission width); one trace each for
@@ -94,8 +106,8 @@ from repro.models import ssm as ssm_mod
 from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
                                  apply_unembed, pad_vocab)
 from repro.serving.engine import ServingEngine, sample_rows
-from repro.serving.kvcache import (POS_SENTINEL, PagedKVCache,
-                                   paged_attention_decode)
+from repro.serving.kvcache import (BACKENDS, POS_SENTINEL, PagedKVCache,
+                                   paged_attention_decode, paged_scatter)
 
 
 @dataclasses.dataclass
@@ -149,9 +161,11 @@ class ContinuousBatchingEngine:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  inner_steps: int = 4, max_prompt_len: int = 128,
                  prefix_sharing: bool = True,
-                 preserve_pristine: bool = True,
+                 preserve_pristine: Any = True,
                  batch_admission: bool = True,
-                 logits_cache_size: int = 32):
+                 logits_cache_size: int = 32,
+                 backend: Optional[str] = None,
+                 pallas_interpret: bool = True):
         cfg = engine.cfg
         if cfg.enc_dec:
             raise ValueError(
@@ -177,8 +191,22 @@ class ContinuousBatchingEngine:
         # arch must have a paged pool at all
         self.prefix_sharing = bool(prefix_sharing and self.kv.attn_subs
                                    and cfg.sliding_window is None)
+        # pristine-preserve policy: False = never copy; True (default) =
+        # reuse-aware (preserve a sole-owner registered page only once its
+        # chain has recorded a sharing hit); "always" = PR-4 behaviour
+        # (one page copy per admission even on share-nothing traffic)
         self.preserve_pristine = preserve_pristine
         self.batch_admission = batch_admission
+        # paged-attention backend: "jnp" gathers the dense logical window
+        # per decode step (A/B baseline), "pallas" streams pages in place
+        # through the fused kernels; inherited from the engine when unset
+        if backend is None:
+            backend = getattr(engine, "kernel_backend", "jnp")
+        if backend not in BACKENDS:
+            raise ValueError(f"backend {backend!r}: must be one of "
+                             f"{BACKENDS}")
+        self.backend = backend
+        self.pallas_interpret = pallas_interpret
         # skip-prefill full hits also need every per-slot state to be
         # reconstructable from pages + cached logits: SSM slot states are
         # neither paged nor cached, so hybrids always prefill
@@ -262,6 +290,7 @@ class ContinuousBatchingEngine:
         p_sz = self.kv.page_size
         trash = PagedKVCache.TRASH
         has_attn = bool(self.kv.attn_subs)
+        backend, interp = self.backend, self.pallas_interpret
 
         def decode_step(params, st, all_greedy, any_topk):
             active = st["remaining"] > 0
@@ -277,7 +306,10 @@ class ContinuousBatchingEngine:
                 page = jnp.where(active, page, trash)
                 pos_pool = st["pos_pool"].at[page, off].set(
                     jnp.where(active, pos, POS_SENTINEL))
-                kpos = pos_pool[pt].reshape(pt.shape[0], -1)
+                # the fused kernel reads positions per page in place; only
+                # the dense-gather backend materialises the (C, L) view
+                kpos = (None if backend == "pallas"
+                        else pos_pool[pt].reshape(pt.shape[0], -1))
             else:
                 page = off = kpos = None
                 pos_pool = st["pos_pool"]
@@ -299,7 +331,9 @@ class ContinuousBatchingEngine:
                     if mixer == ATTN:
                         hout, nci = paged_attention_decode(
                             sub["attn"], hin, stage_cache[f"sub{i}"], pt,
-                            kpos, page, off, pos, cfg, sh)
+                            kpos, page, off, pos, cfg, sh,
+                            pos_pool=pos_pool, backend=backend,
+                            interpret=interp)
                     else:
                         hout, nci = ssm_mod.apply_ssm_decode(
                             sub["mamba"], hin, stage_cache[f"sub{i}"],
@@ -431,13 +465,17 @@ class ContinuousBatchingEngine:
                 cur = st["caches"][sname]
                 if mixer == ATTN:
                     def to_pages(leaf, pool_leaf):
+                        # fused compute-then-scatter: the bucket's freshly
+                        # prefilled KV goes straight into its allocated
+                        # pages (page-granular on the pallas backend)
                         pad = nb * p_sz - ring
                         v = jnp.pad(leaf[:, 0],
                                     ((0, 0), (0, pad), (0, 0), (0, 0)))
                         v = v.reshape(self.n_stages, nb, p_sz,
                                       *leaf.shape[3:])
-                        return pool_leaf.at[:, pages].set(
-                            v.astype(pool_leaf.dtype))
+                        return paged_scatter(pool_leaf, pages, v,
+                                             backend=backend,
+                                             interpret=interp)
                     nc[sname] = {"k": to_pages(caches_p[sname]["k"],
                                                cur["k"]),
                                  "v": to_pages(caches_p[sname]["v"],
@@ -612,6 +650,8 @@ class ContinuousBatchingEngine:
         and the scan is skipped entirely (PR-3 semantics)."""
         if not (self.prefix_sharing and self.kv.attn_subs):
             return
+        preserve = bool(self.preserve_pristine)
+        require_hit = self.preserve_pristine != "always"
         for c, s in enumerate(self._slots):
             if s is None:
                 continue
@@ -621,8 +661,8 @@ class ContinuousBatchingEngine:
             blks = sorted({((s.bucket + s.planned + t) % s.ring)
                            // self.page_size for t in range(n)})
             for blk in blks:
-                fork = self.kv.note_write(c, blk,
-                                          preserve=self.preserve_pristine)
+                fork = self.kv.note_write(c, blk, preserve=preserve,
+                                          require_hit=require_hit)
                 if fork is not None:
                     src, dst = fork
                     self.state = self._cow_jit(

@@ -118,12 +118,18 @@ class PendingGeneration:
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params: Any,
-                 sh: Optional[Sharder] = None, temperature: float = 0.0):
+                 sh: Optional[Sharder] = None, temperature: float = 0.0,
+                 kernel_backend: str = "jnp"):
         self.cfg = cfg
         self.bundle: ModelBundle = build_model(cfg)
         self.params = params
         self.sh = sh or null_sharder()
         self.temperature = temperature
+        # default paged-attention backend for serving layers built on this
+        # engine ("jnp" dense gather | "pallas" fused page-streaming
+        # kernels); the engine's own dense ring-cache paths are unaffected,
+        # but ContinuousBatchingEngine inherits this unless overridden
+        self.kernel_backend = kernel_backend
         self.prefill_traces = 0     # compiles (one per (batch, seq) shape)
         self.prefill_calls = 0      # host invocations
 
@@ -197,7 +203,12 @@ class ServingEngine:
         callers may batch several requests' padded prompts into one call and
         slice the rows back out — the contract the continuous engine's
         batched admission prefill is built on (it keeps its own jit so its
-        per-engine trace counters stay isolated)."""
+        per-engine trace counters stay isolated).  The dense per-bucket
+        caches returned here feed :func:`repro.serving.kvcache.
+        paged_scatter` during paged admission — with ``kernel_backend=
+        "pallas"`` the scatter lands page-granularly in the allocated pages
+        (no dense intermediate hop), which is the compute side of the fused
+        prefill-scatter pipeline."""
         self.prefill_calls += 1
         return self._prefill(self.params, batch)
 

@@ -42,13 +42,33 @@ can admit and retire requests independently:
   pristine copy the same way — the old page stays in the trie as a cached,
   refcount-0 page that later identical prefixes can re-share, and that the
   allocator evicts (leaf-most chain entry first) when the free list runs
-  dry.  Forks can never deadlock: admission reserves one page of headroom
-  per block the request will write during its decode (``cow_reserve``), and
-  the allocator admits only while ``available() >= fresh + reserve``.
-* **gather/scatter attention reads** — :func:`paged_attention_decode` writes
-  the new token's K/V at ``(page, offset)`` per row and gathers the full
-  logical window via the page table, so the decode step has a single static
-  shape regardless of the prompt-length mix (shape-stable: one compile).
+  dry.  Preservation is *reuse-aware* by default: a pristine page is only
+  worth a copy once its chain has recorded at least one sharing hit
+  (``_hits``), so share-nothing traffic registers its blocks but never pays
+  the one-page-copy-per-admission churn (``require_hit=False`` restores the
+  PR-4 always-preserve behaviour for A/B).  Forks can never deadlock:
+  ``cow_reserve`` counts the *mandatory* forks outstanding — pending
+  first-writes whose page is currently multi-referenced (refcount > 1) —
+  and every allocation keeps ``available() >= cow_reserve``.  The reserve
+  is derived from actual sharer counts, not one page per to-be-written
+  block (the PR-4 coarse charge), so admission no longer rejects requests
+  whose writes target exclusively owned pages the pool can in fact hold;
+  an admission that *shares* pages picks up the reserve its new sharers
+  impose (both on its own pending writes and on other slots' pending
+  writes into the pages it is joining).
+* **gather/scatter attention reads, two backends** — :func:`paged_attention_
+  decode` writes the new token's K/V at ``(page, offset)`` per row and reads
+  the logical window through :func:`paged_attend`, which dispatches on
+  ``backend``: ``"jnp"`` gathers the window into a dense ``[C, NB*P, Hkv,
+  D]`` view (the PR-3 path, kept as the A/B baseline and numerics oracle —
+  O(bucket) bytes per emitted token), ``"pallas"`` streams page-sized KV
+  blocks directly from the pool inside a fused kernel (page-table indexing
+  in the kernel grid's index maps, online softmax across pages — O(live
+  pages) bytes, no dense KV ever materialised; see :mod:`repro.kernels.
+  paged_attention`).  Admission's KV writes go through :func:`paged_scatter`
+  with the same switch (dense ``at[].set`` vs an aliased page-granular
+  scatter kernel).  Either way the decode step has a single static shape
+  regardless of the prompt-length mix (shape-stable: one compile).
 
 Masked (inactive) rows redirect their writes to the reserved ``TRASH`` page,
 which no active row's page table ever references — a retired slot's stale
@@ -78,7 +98,6 @@ after pages have been freed and reused).
 """
 from __future__ import annotations
 
-import math
 from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import jax
@@ -139,7 +158,9 @@ class PagedKVCache:
         self._cache_seq = 0
         # slot -> block indices not yet first-written (each may need a fork)
         self._pending: Dict[int, Set[int]] = {}
-        self.cow_reserve = 0
+        # page -> sharing hits recorded while trie-registered (cleared on
+        # unregister): the evidence the reuse-aware preserve policy needs
+        self._hits: Dict[int, int] = {}
         self._ever_used: set = set()
         self.pages_allocated = 0
         self.pages_reused = 0
@@ -165,6 +186,27 @@ class PagedKVCache:
 
     def ref(self, page: int) -> int:
         return self._ref.get(page, 0)
+
+    def hits(self, page: int) -> int:
+        """Sharing hits recorded against ``page`` while trie-registered."""
+        return self._hits.get(page, 0)
+
+    @property
+    def cow_reserve(self) -> int:
+        """Headroom the allocator must keep for *mandatory* copy-on-write
+        forks: pending first-writes whose page is multi-referenced right
+        now.  Derived from actual sharer counts (a pending write into an
+        exclusively owned page costs nothing — if it is registered, the
+        write merely unregisters or optionally preserves it, and
+        preservation moves a page from free to cached without shrinking
+        ``available()``)."""
+        need = 0
+        for slot, blks in self._pending.items():
+            pages = self._owned.get(slot, ())
+            for b in blks:
+                if self._ref.get(pages[b], 0) > 1:
+                    need += 1
+        return need
 
     def chain_keys(self, padded: np.ndarray) -> List[bytes]:
         """Chain key per full block of a padded prompt: the bytes of the
@@ -197,10 +239,14 @@ class PagedKVCache:
         refcounts incremented) followed by ``n_fresh`` fresh pages.
 
         ``will_write`` are the block indices the request will write during
-        its decode; each is charged one page of ``cow_reserve`` headroom so
-        the fork it may trigger can never fail.  Returns None (nothing
-        changed) when the pool cannot cover ``n_fresh`` plus the total
-        reserve — the request stays queued.
+        its decode; ``cow_reserve`` headroom is charged only for those that
+        land on *shared* pages (refcount > 1 once this admission joins) —
+        the mandatory forks — plus any pending writes of other slots whose
+        page this admission newly makes shared.  Writes into exclusively
+        owned pages are free: the PR-4 coarse one-page-per-block charge
+        rejected admissions the pool could in fact hold.  Returns None
+        (nothing changed) when the pool cannot cover ``n_fresh`` plus the
+        post-admission reserve — the request stays queued.
         """
         if slot in self._owned:
             # silently overwriting would leak the old pages off both the
@@ -213,19 +259,32 @@ class PagedKVCache:
         # reviving a cached shared page takes it out of the evictable set,
         # so it costs availability exactly like a fresh page does
         revived = sum(self._ref.get(p, 0) == 0 for p in shared)
-        if self.available() - n_fresh - revived < (self.cow_reserve
-                                                   + len(will_write)):
+        # post-admission reserve: every pending write (existing slots' and
+        # this one's) whose page will be multi-referenced after the shared
+        # refcounts are bumped needs a guaranteed fork page
+        shared_set = set(shared)
+        reserve = 0
+        for s2, blks in self._pending.items():
+            pages2 = self._owned.get(s2, ())
+            for b in blks:
+                p = pages2[b]
+                if self._ref.get(p, 0) + (p in shared_set) > 1:
+                    reserve += 1
+        for b in will_write:
+            if b < len(shared) and self._ref.get(shared[b], 0) + 1 > 1:
+                reserve += 1
+        if self.available() - n_fresh - revived < reserve:
             return None
         for p in shared:
             if self._ref.get(p, 0) == 0:        # revive a cached page
                 self._cached.pop(p, None)
             self._ref[p] = self._ref.get(p, 0) + 1
+            self._hits[p] = self._hits.get(p, 0) + 1
         fresh = [self._take_page() for _ in range(n_fresh)]
         for p in fresh:
             self._ref[p] = 1
         self._owned[slot] = list(shared) + fresh
         self._pending[slot] = will_write
-        self.cow_reserve += len(will_write)
         self.pages_allocated += n_fresh
         self.pages_shared += len(shared)
         return np.asarray(self._owned[slot], np.int32)
@@ -245,8 +304,8 @@ class PagedKVCache:
             self._prefix[key] = page
             self._page_key[page] = key
 
-    def note_write(self, slot: int, blk: int,
-                   preserve: bool = True) -> Optional[Tuple[int, int]]:
+    def note_write(self, slot: int, blk: int, preserve: bool = True,
+                   require_hit: bool = True) -> Optional[Tuple[int, int]]:
         """Resolve ``slot``'s upcoming decode write into block ``blk``.
 
         Returns ``(src, dst)`` when the engine must copy page ``src`` to the
@@ -254,14 +313,19 @@ class PagedKVCache:
 
         * refcount > 1 — mandatory copy-on-write fork (other requests, or
           the trie's cached readers, still read ``src``);
-        * sole owner of a trie-registered page with ``preserve`` and a free
-          page at hand — pristine-preserving fork: ``src`` stays in the trie
-          as a cached page so later identical prefixes can re-share it.
+        * sole owner of a trie-registered page with ``preserve``, a free
+          page at hand, and — under the default reuse-aware policy
+          (``require_hit``) — at least one sharing hit recorded against the
+          page: pristine-preserving fork, ``src`` stays in the trie as a
+          cached page so later identical prefixes can re-share it.  Without
+          a recorded hit there is no evidence the chain is ever re-used, so
+          the copy is skipped (the share-nothing fast path);
+          ``require_hit=False`` restores the PR-4 preserve-always policy.
 
         Otherwise returns None; a sole-owner write into a registered page
-        without preservation headroom simply unregisters it (its content is
-        about to diverge from its chain key).  Idempotent per block: after
-        the first resolution the slot owns the page exclusively and
+        that is not preserved simply unregisters it (its content is about
+        to diverge from its chain key).  Idempotent per block: after the
+        first resolution the slot owns the page exclusively and
         unregistered, so later ring wraps fall through.
         """
         pages = self._owned.get(slot)
@@ -269,9 +333,8 @@ class PagedKVCache:
             return None
         page = pages[blk]
         pending = self._pending.get(slot)
-        if pending is not None and blk in pending:
+        if pending is not None:
             pending.discard(blk)
-            self.cow_reserve -= 1
         if self._ref.get(page, 0) > 1:
             dst = self._take_page()
             self._ref[page] -= 1
@@ -281,7 +344,11 @@ class PagedKVCache:
             self.pages_allocated += 1
             return page, dst
         if page in self._page_key:
-            if preserve and self._free:
+            if (preserve and self._free
+                    and (not require_hit or self._hits.get(page, 0) > 0)):
+                # moves a page free -> live and a page live -> cached, so
+                # available() (free + cached) is unchanged: preservation
+                # can never eat into the mandatory-fork reserve
                 dst = self._free.pop()
                 self.pages_reused += dst in self._ever_used
                 self._ever_used.add(dst)
@@ -312,7 +379,7 @@ class PagedKVCache:
                     self._cache_seq += 1
                 else:
                     self._free.append(page)
-        self.cow_reserve -= len(self._pending.pop(slot, ()))
+        self._pending.pop(slot, None)
         return released
 
     # ------------------------------------------------------------------
@@ -321,6 +388,7 @@ class PagedKVCache:
         if key is not None:
             self._prefix.pop(key, None)
         self._cached.pop(page, None)
+        self._hits.pop(page, None)
 
     def _take_page(self) -> int:
         """Pop a free page; when the free list is dry, evict a cached
@@ -362,8 +430,13 @@ class PagedKVCache:
                 (p, self._ref.get(p, 0), counts.get(p, 0))
         for key, p in self._prefix.items():
             assert self._page_key.get(p) == key, "trie inverse out of sync"
-        assert self.cow_reserve == sum(len(s) for s in
-                                       self._pending.values())
+        for p in self._hits:
+            assert p in self._page_key, "hit count on an unregistered page"
+        for slot, blks in self._pending.items():
+            assert slot in self._owned, "pending writes on a retired slot"
+            assert all(b < len(self._owned[slot]) for b in blks)
+        # the refcount-derived reserve (mandatory forks outstanding) must
+        # always be coverable, so a copy-on-write fork can never fail
         assert self.available() >= self.cow_reserve, \
             (self.available(), self.cow_reserve)
 
@@ -390,14 +463,6 @@ class PagedKVCache:
 # ---------------------------------------------------------------------------
 # pure gather/scatter primitives (used inside the jitted decode step)
 # ---------------------------------------------------------------------------
-def paged_read(pool: jax.Array, page_table: jax.Array) -> jax.Array:
-    """Gather a pool ``(NP, P, ...)`` through ``page_table (C, NB)`` into the
-    logical view ``(C, NB*P, ...)``: block b, offset o -> logical slot
-    ``b*P + o``, the exact layout of the dense ring cache."""
-    g = pool[page_table]                       # (C, NB, P, ...)
-    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
-
-
 def paged_write(pool: jax.Array, pages: jax.Array, offsets: jax.Array,
                 values: jax.Array) -> jax.Array:
     """Scatter one entry per row: ``pool[pages[c], offsets[c]] = values[c]``.
@@ -406,27 +471,90 @@ def paged_write(pool: jax.Array, pages: jax.Array, offsets: jax.Array,
     return pool.at[pages, offsets].set(values)
 
 
+BACKENDS = ("jnp", "pallas")
+
+
+def paged_attend(q: jax.Array, pool: Dict[str, jax.Array],
+                 page_table: jax.Array, positions: jax.Array,
+                 cfg: ArchConfig, *, kpos: Optional[jax.Array] = None,
+                 pos_pool: Optional[jax.Array] = None,
+                 backend: str = "jnp", interpret: bool = True) -> jax.Array:
+    """Paged attention read, backend-switched.
+
+    q: (C, H, D) already-roped queries; pool: {"k","v"} (NP, P, Hkv, D);
+    page_table: (C, NB); positions: (C,).  Returns (C, H, D) float32.
+
+    * ``backend="jnp"`` — gather the logical window dense through the page
+      table and run the PR-3 reference math (:func:`repro.kernels.ref.
+      paged_attention_decode_ref`): bitwise the historical path, O(C * NB *
+      P) pool bytes touched per call.  Needs ``kpos`` (the decode step
+      pre-gathers it once and shares it across sublayers).
+    * ``backend="pallas"`` — the fused kernel (:func:`repro.kernels.
+      paged_attention.paged_attention_decode_pallas`): pages stream through
+      the grid's index maps, online softmax across pages, no dense KV.
+      Needs ``pos_pool`` (positions are read per page, in place, so the
+      dense kpos gather is skipped too).  Token-exact with jnp for greedy
+      decode; logits agree to f32 rounding (see the kernel module).
+    """
+    if backend == "pallas":
+        from repro.kernels.paged_attention import paged_attention_decode_pallas
+        return paged_attention_decode_pallas(
+            q, pool["k"], pool["v"], pos_pool, page_table, positions,
+            window=cfg.sliding_window, interpret=interpret)
+    if backend != "jnp":
+        raise ValueError(f"backend {backend!r}: must be one of {BACKENDS}")
+    from repro.kernels.ref import paged_attention_decode_ref
+    return paged_attention_decode_ref(
+        q, pool["k"], pool["v"], page_table, positions, kpos=kpos,
+        pos_pool=pos_pool, window=cfg.sliding_window)
+
+
+def paged_scatter(pool: jax.Array, pages: jax.Array, values: jax.Array, *,
+                  backend: str = "jnp", interpret: bool = True) -> jax.Array:
+    """Admission-time KV scatter, backend-switched: write ``values``
+    (S, nb, P, Hkv, D) into ``pool`` (S, NP, P, Hkv, D) at ``pages`` (nb,).
+
+    ``"jnp"`` is the dense ``at[].set`` hop; ``"pallas"`` the aliased
+    page-granular scatter kernel that writes prefill KV straight into its
+    allocated pages (:func:`repro.kernels.paged_attention.
+    paged_prefill_scatter_pallas`).  Both cast to the pool dtype and are
+    bit-exact with each other."""
+    if backend == "pallas":
+        from repro.kernels.paged_attention import paged_prefill_scatter_pallas
+        return paged_prefill_scatter_pallas(pool, pages, values,
+                                            interpret=interpret)
+    if backend != "jnp":
+        raise ValueError(f"backend {backend!r}: must be one of {BACKENDS}")
+    from repro.kernels.ref import paged_scatter_ref
+    return paged_scatter_ref(pool, pages, values)
+
+
 def paged_attention_decode(p, x, pool: Dict[str, jax.Array],
-                           page_table: jax.Array, kpos: jax.Array,
+                           page_table: jax.Array, kpos: Optional[jax.Array],
                            write_page: jax.Array, write_off: jax.Array,
                            positions: jax.Array, cfg: ArchConfig,
-                           sh: Sharder):
+                           sh: Sharder, *,
+                           pos_pool: Optional[jax.Array] = None,
+                           backend: str = "jnp", interpret: bool = True):
     """Single-token GQA decode against a paged cache (per-row positions).
 
     Mirrors :func:`repro.models.layers.apply_attention_decode` operation for
     operation (same projections, rope at the row's absolute position, bf16
     cache casts, validity mask ``kpos <= pos`` with optional sliding window,
-    identical einsum contractions) — only the cache storage is paged.  The
-    gathered logical view may be longer than a row's ring (page-table padding
-    points at the SENTINEL page), but padded entries carry ``POS_SENTINEL``
-    so their bias is -1e30 and their softmax weight underflows to exactly 0.
+    identical einsum contractions) — only the cache storage is paged and the
+    window read goes through :func:`paged_attend` (``backend`` selects the
+    dense gather or the fused page-streaming kernel).  The logical view may
+    be longer than a row's ring (page-table padding points at the SENTINEL
+    page), but padded entries carry ``POS_SENTINEL`` so their bias is -1e30
+    and their softmax weight underflows to exactly 0.
 
-    x: (C, 1, d); kpos: (C, L) gathered positions (already includes this
-    step's write); positions: (C,) absolute position of the new token.
+    x: (C, 1, d); kpos: (C, L) gathered positions including this step's
+    write (jnp backend; pallas reads positions per page from ``pos_pool``
+    instead); positions: (C,) absolute position of the new token.
     Returns (out (C, 1, d), new pool dict).
     """
     cdt_x = x.dtype
-    H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    H, D = cfg.num_heads, cfg.head_dim
     C = x.shape[0]
     q, k_new, v_new = _project_qkv(p, x, x, cfg, sh)
     if cfg.use_rope:
@@ -436,21 +564,9 @@ def paged_attention_decode(p, x, pool: Dict[str, jax.Array],
                          k_new[:, 0].astype(pool["k"].dtype))
     v_pool = paged_write(pool["v"], write_page, write_off,
                          v_new[:, 0].astype(pool["v"].dtype))
-    k = paged_read(k_pool, page_table)                     # (C, L, Hkv, D)
-    v = paged_read(v_pool, page_table)
-    valid = kpos <= positions[:, None]
-    if cfg.sliding_window is not None:
-        valid &= kpos > positions[:, None] - cfg.sliding_window
-    bias_pos = jnp.where(valid, 0.0, -1e30)                # (C, L)
-    rep = H // Hkv
-    qr = q.reshape(C, 1, Hkv, rep, D)
-    scale = 1.0 / math.sqrt(D)
-    s = jnp.einsum("bqhrd,bkhd->bqhrk", qr, k.astype(qr.dtype),
-                   preferred_element_type=jnp.float32) * scale
-    s = s + bias_pos[:, None, None, None, :]
-    pattn = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bqhrk,bkhd->bqhrd", pattn, v.astype(qr.dtype),
-                   preferred_element_type=jnp.float32)
+    o = paged_attend(q[:, 0], {"k": k_pool, "v": v_pool}, page_table,
+                     positions, cfg, kpos=kpos, pos_pool=pos_pool,
+                     backend=backend, interpret=interpret)
     o = o.reshape(C, 1, H * D).astype(cdt_x)
     from repro.models.layers import dtype_of
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(dtype_of(

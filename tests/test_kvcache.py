@@ -128,21 +128,53 @@ class _Model:
         shared = kv.lookup_chain(keys)[:nb]
         will_write = {((ring + t) % ring) // PAGE
                       for t in range(min(max_new, ring))}
-        pages = kv.alloc_shared(slot, shared, nb - len(shared), will_write)
+        # mirror of the sharer-count admission criterion: the allocator
+        # must admit iff the pool covers fresh pages + revivals + the
+        # post-admission mandatory-fork reserve (pending writes landing on
+        # multi-referenced pages) — nothing coarser
+        fresh = nb - len(shared)
+        revived = sum(kv.ref(p) == 0 for p in shared)
+        shared_set = set(shared)
+        reserve = sum(1 for s2, blks in self.live.items()
+                      for b in blks
+                      if kv.ref(kv._owned[s2][b])
+                      + (kv._owned[s2][b] in shared_set) > 1)
+        reserve += sum(1 for b in will_write
+                       if b < len(shared) and kv.ref(shared[b]) + 1 > 1)
+        fits = kv.available() - fresh - revived >= reserve
+        pages = kv.alloc_shared(slot, shared, fresh, will_write)
+        assert (pages is not None) == fits, (fits, fresh, revived, reserve)
         if pages is None:
             return
         if share:
             kv.register(slot, keys)
         self.live[slot] = set(will_write)
 
-    def write(self, slot, preserve):
-        """First-write one pending block (a decode round reaching it)."""
+    def write(self, slot, preserve_mode):
+        """First-write one pending block (a decode round reaching it).
+        preserve_mode: 0 = never, 1 = reuse-aware (engine default),
+        2 = always (PR-4 behaviour)."""
         pending = self.live.get(slot)
         if not pending:
             return
         blk = min(pending)
-        fork = self.kv.note_write(slot, blk, preserve=preserve)
+        kv = self.kv
+        page = kv._owned[slot][blk]
+        pre_ref, pre_hits = kv.ref(page), kv.hits(page)
+        registered = page in kv._page_key
+        had_free = bool(kv._free)
+        fork = kv.note_write(slot, blk, preserve=preserve_mode > 0,
+                             require_hit=preserve_mode == 1)
         pending.discard(blk)
+        if pre_ref > 1:
+            assert fork is not None                     # mandatory CoW
+        elif (registered and had_free and preserve_mode == 2):
+            assert fork is not None                     # preserve-always
+        elif (registered and had_free and preserve_mode == 1
+                and pre_hits > 0):
+            assert fork is not None                     # reuse-aware hit
+        else:
+            assert fork is None                         # in-place write
         if fork is not None:
             src, dst = fork
             assert src != dst
@@ -163,7 +195,7 @@ def _walk(m: _Model, ops) -> None:
             prompt_idx, max_new, share = params
             m.admit(slot, PROMPTS[prompt_idx], max_new=max_new, share=share)
         elif op == "write":
-            m.write(slot, preserve=params[0])
+            m.write(slot, preserve_mode=params[0])
         else:
             m.retire(slot)
         m.kv.assert_conserved()
@@ -177,9 +209,12 @@ def _walk(m: _Model, ops) -> None:
 
 def test_sharing_allocator_fuzz():
     """Seeded-random interleavings of shared/unshared admission,
-    pending-block writes (mandatory CoW forks, pristine preserves,
-    in-place) and retirement: never leak, never double-free, refcounts
-    always equal the page-table references, reserve always covered."""
+    pending-block writes (mandatory CoW forks, pristine preserves under
+    all three policies, in-place) and retirement: never leak, never
+    double-free, refcounts always equal the page-table references, the
+    sharer-count reserve always covered and admission decisions exactly
+    matching the refined criterion (the _Model re-derives it
+    independently)."""
     rng = np.random.default_rng(7)
     for _ in range(150):
         m = _Model(PagedKVCache.RESERVED + int(rng.integers(6, 21)),
@@ -193,7 +228,7 @@ def test_sharing_allocator_fuzz():
                             int(rng.integers(1, 3 * PAGE + 1)),
                             bool(rng.integers(0, 2))))
             elif op == "write":
-                ops.append((op, slot, bool(rng.integers(0, 2))))
+                ops.append((op, slot, int(rng.integers(0, 3))))
             else:
                 ops.append((op, slot))
         _walk(m, ops)
@@ -219,12 +254,100 @@ def test_sharing_allocator_property():
                             data.draw(st.integers(1, 3 * PAGE)),
                             data.draw(st.booleans())))
             elif op == "write":
-                ops.append((op, slot, data.draw(st.booleans())))
+                ops.append((op, slot, data.draw(st.integers(0, 2))))
             else:
                 ops.append((op, slot))
         _walk(m, ops)
 
     run()
+
+
+def test_refined_reserve_admits_exact_fit():
+    """The PR-4 coarse reserve charged one page per to-be-written block, so
+    a request whose fresh pages exactly fill the pool was rejected even
+    though none of its writes could ever fork.  The sharer-count reserve
+    admits it: exclusively owned pages carry no fork obligation."""
+    kv = make_kv(num_pages=PagedKVCache.RESERVED + 2, capacity=2,
+                 max_blocks=2)
+    pages = kv.alloc_shared(0, [], 2, {0, 1})    # coarse: 2 + 2 > 2 usable
+    assert pages is not None
+    assert kv.cow_reserve == 0
+    assert kv.free_pages() == 0
+    # both writes resolve in place (unshared, unregistered): no forks
+    assert kv.note_write(0, 0) is None
+    assert kv.note_write(0, 1) is None
+    kv.assert_conserved()
+    kv.free(0)
+    assert kv.free_pages() == 2
+
+
+def test_reserve_tracks_sharer_counts():
+    """Reserve follows actual refcounts: joining a chain charges headroom
+    for every pending write the share makes mandatory (the sharer's own and
+    other slots'), a third sharer the pool cannot indemnify is rejected,
+    and a resolving fork releases exactly its obligations."""
+    kv = make_kv(num_pages=PagedKVCache.RESERVED + 3, capacity=3,
+                 max_blocks=1)
+    prompt = PROMPTS[0][:PAGE]
+    keys = kv.chain_keys(prompt)
+    assert kv.alloc_shared(0, [], 1, {0}) is not None
+    kv.register(0, keys)
+    assert kv.cow_reserve == 0                   # sole owner: no obligation
+    chain = kv.lookup_chain(keys)
+    assert kv.alloc_shared(1, chain, 0, {0}) is not None
+    # both slots now pend a write into the ref-2 page: 2 mandatory forks
+    assert kv.cow_reserve == 2
+    assert kv.available() == 2
+    # a third sharer would need reserve 3 > 2 available: rejected, state
+    # untouched (the coarse policy would also reject, but for the wrong
+    # ledger — 0 fresh + 1 will_write vs 2 available passes it)
+    assert kv.alloc_shared(2, kv.lookup_chain(keys), 0, {0}) is None
+    assert kv.ref(chain[0]) == 2
+    kv.assert_conserved()
+    # slot 1 writes: mandatory fork consumes one reserved page and releases
+    # both obligations (slot 0 is sole owner afterwards)
+    fork = kv.note_write(1, 0)
+    assert fork is not None and fork[0] == chain[0]
+    assert kv.cow_reserve == 0
+    kv.assert_conserved()
+    kv.free(0)
+    kv.free(1)
+    kv.assert_conserved()
+
+
+def test_pristine_preserve_is_reuse_aware():
+    """A sole-owner write into a registered page copies the pristine page
+    only once the chain has recorded a sharing hit; require_hit=False
+    restores the PR-4 always-preserve policy."""
+    kv = make_kv(num_pages=PagedKVCache.RESERVED + 6, capacity=3)
+    prompt = PROMPTS[0][:2 * PAGE]
+    keys = kv.chain_keys(prompt)
+    kv.alloc_shared(0, [], 2, {0})
+    kv.register(0, keys)
+    assert kv.hits(kv.lookup_chain(keys)[0]) == 0
+    # share-nothing: the write unregisters instead of copying
+    assert kv.note_write(0, 0) is None
+    assert kv.pristine_forks == 0
+    assert len(kv.lookup_chain(keys)) == 0       # chain head gone
+    kv.free(0)
+    # re-admit and re-register, then record a hit via a sharer
+    kv.alloc_shared(0, [], 2, {0})
+    kv.register(0, keys)
+    chain = kv.lookup_chain(keys)
+    kv.alloc_shared(1, chain, 0, set())
+    assert kv.hits(chain[0]) == 1
+    kv.free(1)                                   # hit persists past retire
+    fork = kv.note_write(0, 0)                   # now worth preserving
+    assert fork is not None and kv.pristine_forks == 1
+    assert kv.lookup_chain(keys) == chain        # pristine copy cached
+    kv.free(0)
+    kv.assert_conserved()
+    # the "always" policy preserves without evidence
+    kv2 = make_kv(num_pages=PagedKVCache.RESERVED + 6, capacity=3)
+    kv2.alloc_shared(0, [], 2, {0})
+    kv2.register(0, kv2.chain_keys(prompt))
+    assert kv2.note_write(0, 0, require_hit=False) is not None
+    assert kv2.pristine_forks == 1
 
 
 def test_shared_admission_and_cow_fork_lifecycle():

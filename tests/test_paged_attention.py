@@ -1,0 +1,369 @@
+"""Fused paged-attention kernels: interpret-mode parity + backend contracts.
+
+Two layers of lock-in for ``kernels/paged_attention.py``:
+
+* **kernel vs oracle parity** — the Pallas decode kernel against
+  :func:`repro.kernels.ref.paged_attention_decode_ref` (the dense-gather
+  math the jnp serving backend runs verbatim) across page sizes, GQA
+  ratios, ragged per-row lengths, sliding windows and SENTINEL-padded
+  tables, to float32-rounding tolerance (the online softmax reassociates
+  the reduction, so bitwise equality is not expected — token-level
+  equality is, and the end-to-end tests assert it); the prefill scatter
+  kernel against :func:`repro.kernels.ref.paged_scatter_ref` *bit-exactly*
+  (it performs no arithmetic beyond the storage cast).
+* **backend contracts** — ``ContinuousBatchingEngine(backend="pallas")``
+  decodes greedy token-exactly with the jnp backend and with blocking
+  ``generate`` on attention, sliding-window and hybrid (jamba) archs,
+  including after page eviction/reuse under pool pressure, across
+  shared/CoW-forked pages and skip-prefill full-prefix hits, and keeps the
+  compile-count contract: one decode-round trace per (capacity, sampling
+  tier) no matter the request mix.
+
+A physical-page permutation property (seeded fuzz + Hypothesis where
+installed) pins down that the kernel's output depends on page *content*
+reached through the table, never on physical page ids.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.kernels.paged_attention import (paged_attention_decode_pallas,
+                                           paged_prefill_scatter_pallas)
+from repro.kernels.ref import paged_attention_decode_ref, paged_scatter_ref
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.kvcache import POS_SENTINEL, PagedKVCache
+from repro.serving.multitenant import Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover - CI installs it
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# synthetic paged states
+# ---------------------------------------------------------------------------
+def _rand_paged_state(rng, *, C, NB, P, H, Hkv, D, n_extra_pages=3):
+    """A plausible mid-decode paged state: per-row rings of ragged length
+    laid out over distinct physical pages (SENTINEL-padded tables), the
+    position plane holding the dense ring's positions, plus unreferenced
+    distractor pages full of garbage."""
+    NP_ = PagedKVCache.RESERVED + C * NB + n_extra_pages
+    k_pool = rng.standard_normal((NP_, P, Hkv, D)).astype(np.float32)
+    v_pool = rng.standard_normal((NP_, P, Hkv, D)).astype(np.float32)
+    pos_pool = np.full((NP_, P), POS_SENTINEL, np.int32)
+    page_table = np.full((C, NB), PagedKVCache.SENTINEL, np.int32)
+    free = list(rng.permutation(np.arange(PagedKVCache.RESERVED, NP_)))
+    positions = np.zeros((C,), np.int32)
+    for c in range(C):
+        nb_c = int(rng.integers(1, NB + 1))        # ragged ring lengths
+        ring = nb_c * P
+        pos = int(rng.integers(ring - P, 2 * ring + 3))  # may have wrapped
+        positions[c] = pos
+        pages = [free.pop() for _ in range(nb_c)]
+        page_table[c, :nb_c] = pages
+        for j in range(ring):                      # dense ring semantics:
+            filled = j <= pos                      # slot j holds the latest
+            wraps = (pos - j) // ring if filled else 0   # pos' = j (mod ring)
+            pos_pool[pages[j // P], j % P] = (
+                j + wraps * ring if filled else POS_SENTINEL)
+    return (jnp.asarray(k_pool, jnp.bfloat16), jnp.asarray(v_pool,
+                                                           jnp.bfloat16),
+            jnp.asarray(pos_pool), jnp.asarray(page_table),
+            jnp.asarray(positions),
+            jnp.asarray(rng.standard_normal((C, H, D)).astype(np.float32)))
+
+
+def _agree(a, b, rtol=3e-5, atol=3e-6):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=rtol,
+                               atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("P,NB,H,Hkv,window", [
+    (4, 3, 4, 2, None),          # GQA 2:1, three ragged blocks
+    (8, 2, 2, 2, None),          # MHA
+    (4, 2, 4, 1, None),          # MQA
+    (4, 4, 4, 2, 6),             # sliding window smaller than the ring
+])
+def test_decode_kernel_matches_oracle(P, NB, H, Hkv, window):
+    rng = np.random.default_rng(hash((P, NB, H, Hkv, window or 0)) % 2**31)
+    D = 8
+    k_pool, v_pool, pos_pool, pt, pos, q = _rand_paged_state(
+        rng, C=3, NB=NB, P=P, H=H, Hkv=Hkv, D=D)
+    got = paged_attention_decode_pallas(q, k_pool, v_pool, pos_pool, pt,
+                                        pos, window=window)
+    want = paged_attention_decode_ref(q, k_pool, v_pool, pt, pos,
+                                      pos_pool=pos_pool, window=window)
+    assert got.shape == want.shape == (3, H, D)
+    assert got.dtype == want.dtype == jnp.float32
+    _agree(got, want)
+
+
+def test_decode_kernel_all_masked_row_degenerates_like_softmax():
+    """A row whose table is all SENTINEL (fresh slot / masked lane) must
+    produce the same uniform-average degenerate output as the full softmax
+    over an all-(-1e30) score row — no NaNs, no infs."""
+    rng = np.random.default_rng(5)
+    k_pool, v_pool, pos_pool, pt, pos, q = _rand_paged_state(
+        rng, C=2, NB=2, P=4, H=2, Hkv=2, D=8)
+    pt = pt.at[0].set(PagedKVCache.SENTINEL)       # row 0: nothing valid
+    got = paged_attention_decode_pallas(q, k_pool, v_pool, pos_pool, pt, pos)
+    want = paged_attention_decode_ref(q, k_pool, v_pool, pt, pos,
+                                      pos_pool=pos_pool)
+    assert np.isfinite(np.asarray(got)).all()
+    _agree(got, want)
+
+
+def test_decode_kernel_under_jit_and_vs_dense_window():
+    """The kernel composes with jit (the round jit wraps it) and agrees
+    with the oracle when every row shares one full-block ring — the densest
+    case, where the dense gather wastes the least."""
+    rng = np.random.default_rng(11)
+    k_pool, v_pool, pos_pool, pt, pos, q = _rand_paged_state(
+        rng, C=4, NB=3, P=4, H=4, Hkv=2, D=8)
+    f = jax.jit(lambda *a: paged_attention_decode_pallas(*a))
+    _agree(f(q, k_pool, v_pool, pos_pool, pt, pos),
+           paged_attention_decode_ref(q, k_pool, v_pool, pt, pos,
+                                      pos_pool=pos_pool))
+
+
+def _permute_pages(perm, k_pool, v_pool, pos_pool, pt):
+    """Relabel physical pages by ``perm`` (identity on reserved pages):
+    pool rows move to their new ids and the table follows."""
+    inv = np.argsort(perm)
+    return (k_pool[inv], v_pool[inv], pos_pool[inv],
+            jnp.asarray(perm)[pt])
+
+
+def _page_permutation(rng_or_data, NP_, draw=None):
+    ids = np.arange(NP_)
+    body = ids[PagedKVCache.RESERVED:].copy()
+    if draw is None:
+        rng_or_data.shuffle(body)
+    else:
+        body = np.asarray(draw(st.permutations(list(body))))
+    ids[PagedKVCache.RESERVED:] = body
+    return ids
+
+
+def test_page_permutation_invariance_fuzz():
+    """Physical page ids are pure routing: relabelling every page (pool
+    rows + table entries consistently) must leave the kernel output
+    *bitwise* unchanged — the kernel may depend on page content and block
+    order only."""
+    rng = np.random.default_rng(17)
+    for trial in range(6):
+        k_pool, v_pool, pos_pool, pt, pos, q = _rand_paged_state(
+            rng, C=3, NB=3, P=4, H=4, Hkv=2, D=8)
+        base = np.asarray(paged_attention_decode_pallas(
+            q, k_pool, v_pool, pos_pool, pt, pos))
+        perm = _page_permutation(rng, k_pool.shape[0])
+        kp, vp, pp_, ptp = _permute_pages(perm, k_pool, v_pool, pos_pool, pt)
+        got = np.asarray(paged_attention_decode_pallas(
+            q, kp, vp, pp_, ptp, pos))
+        np.testing.assert_array_equal(base, got)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+def test_page_permutation_invariance_property():
+    """The same invariance under Hypothesis-shrunk permutations."""
+    rng = np.random.default_rng(23)
+    state = _rand_paged_state(rng, C=2, NB=2, P=4, H=2, Hkv=2, D=8)
+    k_pool, v_pool, pos_pool, pt, pos, q = state
+    base = np.asarray(paged_attention_decode_pallas(
+        q, k_pool, v_pool, pos_pool, pt, pos))
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.data())
+    def run(data):
+        perm = _page_permutation(None, k_pool.shape[0], draw=data.draw)
+        kp, vp, pp_, ptp = _permute_pages(perm, k_pool, v_pool, pos_pool, pt)
+        got = np.asarray(paged_attention_decode_pallas(
+            q, kp, vp, pp_, ptp, pos))
+        np.testing.assert_array_equal(base, got)
+
+    run()
+
+
+def test_prefill_scatter_kernel_bit_exact():
+    """The scatter kernel is bit-exact with the jnp ``at[].set`` hop: the
+    named pages carry exactly the cast values, every other page — live
+    neighbours, SENTINEL, TRASH — is bit-untouched."""
+    rng = np.random.default_rng(3)
+    S, NP_, P, Hkv, D, nb = 2, 9, 4, 2, 8, 3
+    pool = jnp.asarray(rng.standard_normal((S, NP_, P, Hkv, D)),
+                       jnp.bfloat16)
+    values = jnp.asarray(
+        rng.standard_normal((S, nb, P, Hkv, D)).astype(np.float32))
+    pages = jnp.asarray([4, 2, 7], jnp.int32)
+    got = paged_prefill_scatter_pallas(pool, pages, values)
+    want = paged_scatter_ref(pool, pages, values)
+    assert got.dtype == pool.dtype
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+    # and under jit with donation, as the admission jit runs it
+    f = jax.jit(paged_prefill_scatter_pallas, donate_argnums=(0,))
+    got2 = f(want, pages, values)
+    np.testing.assert_array_equal(np.asarray(got2, np.float32),
+                                  np.asarray(got, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# backend contracts (end-to-end through the continuous engine)
+# ---------------------------------------------------------------------------
+def _make_engine(arch):
+    cfg = get_config(arch).reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    return ServingEngine(cfg, params)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return _make_engine("internlm2-1.8b")
+
+
+def _oracle(engine, ceng, req):
+    b = ceng.bucket_len(req.prompt.size)
+    padded = np.zeros((1, b), np.int32)
+    padded[0, b - req.prompt.size:] = req.prompt
+    return engine.generate(padded, max_new_tokens=req.max_new_tokens,
+                           seed=req.seed).tokens[0]
+
+
+def test_pallas_backend_token_exact_with_eviction_and_reuse(engine):
+    """backend="pallas" under pool pressure: page eviction and reuse, with
+    every request token-exact against blocking generate — recycled pages
+    must not leak stale KV through the fused read."""
+    rng = np.random.default_rng(31)
+    ceng = ContinuousBatchingEngine(engine, capacity=4, page_size=8,
+                                    num_pages=2 + 4, inner_steps=2,
+                                    max_prompt_len=16, prefix_sharing=False,
+                                    backend="pallas")
+    reqs = [Request("a", rng.integers(1, engine.cfg.vocab_size,
+                                      12).astype(np.int32),
+                    max_new_tokens=3) for _ in range(5)]
+    done = ceng.run_all(reqs)
+    assert len(done) == 5
+    assert ceng.kv.pages_reused >= 6          # reuse was actually forced
+    for req, tokens in done:
+        np.testing.assert_array_equal(_oracle(engine, ceng, req), tokens)
+
+
+def test_pallas_backend_token_exact_with_sharing_and_cow(engine):
+    """backend="pallas" across the sharing lifecycle: shared prefix pages,
+    CoW forks on first decode write, a skip-prefill full-prefix repeat, and
+    a replay after churn evicted the cached chain — all token-exact with
+    generate and bit-identical to the jnp backend."""
+    cfg = engine.cfg
+    rng = np.random.default_rng(37)
+    sys_prompt = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+    mk = lambda t: Request(f"t{t}", np.concatenate(
+        [sys_prompt, rng.integers(1, cfg.vocab_size, 8).astype(np.int32)]),
+        max_new_tokens=4)
+    wave = [mk(t) for t in range(3)]
+    repeat = Request("t0", wave[0].prompt.copy(), max_new_tokens=4)
+    churn = [Request("x", rng.integers(1, cfg.vocab_size, 32).astype(
+        np.int32), max_new_tokens=2) for _ in range(6)]
+    wave2 = [mk(t) for t in range(3)]
+
+    def run(backend):
+        ceng = ContinuousBatchingEngine(engine, capacity=3, page_size=8,
+                                        inner_steps=4, max_prompt_len=32,
+                                        backend=backend)
+        out = [t for _, t in ceng.run_all(wave)]
+        out += [t for _, t in ceng.run_all([repeat])]
+        ceng.run_all(churn)
+        out += [t for _, t in ceng.run_all(wave2)]
+        return ceng, out
+
+    ceng_p, toks_p = run("pallas")
+    assert ceng_p.kv.pages_shared > 0
+    assert ceng_p.kv.cow_forks + ceng_p.kv.pristine_forks > 0
+    assert ceng_p.prefill_skips >= 1          # the full-prefix repeat hit
+    ceng_p.kv.assert_conserved()
+    ceng_j, toks_j = run("jnp")
+    assert len(toks_p) == len(toks_j) == 7
+    for a, b in zip(toks_p, toks_j):
+        np.testing.assert_array_equal(a, b)
+    # spot-check the shared wave against the blocking engine too
+    for req, tokens in zip(wave, toks_p[:3]):
+        np.testing.assert_array_equal(_oracle(engine, ceng_p, req), tokens)
+
+
+def test_pallas_backend_sliding_window_arch():
+    """Sliding-window arch (ring wraps inside the bucket): the in-kernel
+    window mask must match the gather path token-for-token."""
+    engine = _make_engine("h2o-danube-1.8b")
+    rng = np.random.default_rng(41)
+    reqs = [Request("a", rng.integers(1, engine.cfg.vocab_size,
+                                      6 + 4 * i).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    out = {}
+    for backend in ("jnp", "pallas"):
+        ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=4,
+                                        inner_steps=3, max_prompt_len=16,
+                                        backend=backend)
+        assert not ceng.prefix_sharing        # SWA disables sharing
+        out[backend] = {id(r): t for r, t in ceng.run_all(reqs)}
+    for r in reqs:
+        np.testing.assert_array_equal(out["jnp"][id(r)],
+                                      out["pallas"][id(r)])
+
+
+def test_pallas_backend_hybrid_arch_matches_jnp():
+    """Hybrid (jamba: mamba + attention + MoE) through both backends: only
+    the attention pool read differs, so rows must match token-for-token
+    (MoE couples rows, but identically in both engines)."""
+    engine = _make_engine("jamba-1.5-large-398b")
+    rng = np.random.default_rng(43)
+    reqs = [Request("a", rng.integers(1, engine.cfg.vocab_size,
+                                      5 + 3 * i).astype(np.int32),
+                    max_new_tokens=3) for i in range(2)]
+    out = {}
+    for backend in ("jnp", "pallas"):
+        ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                        inner_steps=3, max_prompt_len=16,
+                                        backend=backend)
+        out[backend] = {id(r): t for r, t in ceng.run_all(reqs)}
+    for r in reqs:
+        np.testing.assert_array_equal(out["jnp"][id(r)],
+                                      out["pallas"][id(r)])
+
+
+def test_pallas_backend_compile_count(engine):
+    """The fused backend keeps the compile-count contract: one decode-round
+    trace per (capacity, sampling tier) across ragged budget/bucket mixes,
+    one admission trace per bucket, one prefill trace per (bucket, width
+    tier) — the kernel's page streaming never retraces with the mix."""
+    rng = np.random.default_rng(47)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=32,
+                                    backend="pallas")
+    cfg = engine.cfg
+    mk = lambda plen, steps: Request("a", rng.integers(
+        1, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=steps)
+    ceng.run_all([mk(6, 1), mk(8, 5), mk(7, 9)])
+    assert ceng.decode_traces == 1
+    assert ceng.admit_traces == 1
+    assert ceng.prefill_traces == 2
+    ceng.run_all([mk(12, 2), mk(16, 7)])
+    assert ceng.decode_traces == 1            # same capacity, same tier
+    assert ceng.admit_traces == 2
+    ceng.run_all([mk(5, 11), mk(14, 3)])
+    assert ceng.decode_traces == 1
+    assert ceng.admit_traces == 2
+
+
+def test_backend_validation(engine):
+    with pytest.raises(ValueError, match="backend"):
+        ContinuousBatchingEngine(engine, capacity=2, max_prompt_len=16,
+                                 backend="cuda")
