@@ -33,10 +33,11 @@ def main() -> None:
     args = ap.parse_args()
     filters = args.only.split(",") if args.only else None
 
-    from benchmarks import paper_figures, pipeline, roofline
+    from benchmarks import overload, paper_figures, pipeline, roofline
     if args.device_time:
         pipeline.DEVICE_TIME = True
-    benches = list(paper_figures.ALL) + list(pipeline.ALL) + [roofline.run]
+    benches = (list(paper_figures.ALL) + list(pipeline.ALL)
+               + list(overload.ALL) + [roofline.run])
 
     print("name,us_per_call,derived")
     rows, errors = [], []

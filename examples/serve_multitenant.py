@@ -78,8 +78,20 @@ lane raggedness.  On CPU, Pallas runs in *interpret mode* — every grid
 cell is emulated — so its wall time there is an artefact (often slower
 than jnp); use jnp for CPU throughput, pallas to validate kernel semantics
 and to track the bytes-moved structure (``bench_paged_attention`` carries
-both columns).  The final section decodes one workload on both backends
-and checks the tokens agree.
+both columns).  The backends section decodes one workload on both and
+checks the tokens agree.
+
+Overload: priorities, preemption, shedding
+------------------------------------------
+The last section oversubscribes a deliberately tiny engine (2 slots) with
+long tier-1 report jobs, then lands a tier-0 dashboard query mid-flight.
+With preemption on, the scheduler swaps a tier-1 victim's KV pages out to
+the host store, serves the tier-0 request in the freed slot, and restores
+the victim token-exactly afterwards — the victim's final tokens are
+bitwise what an uninterrupted run produces.  A ``max_backlog`` bound sheds
+the lowest-priority queued work with an explicit REJECTED outcome instead
+of letting the queue grow past the SLO; every submitted request always
+reaches exactly one terminal outcome (completed / rejected / failed).
 """
 import jax
 import numpy as np
@@ -209,6 +221,50 @@ def main():
     agree = all(np.array_equal(tokens["jnp"][id(r)], tokens["pallas"][id(r)])
                 for r in reqs)
     print(f"tokens identical across backends: {agree}")
+
+    # oversubscribed: 2 slots, long tier-1 reports in flight, a tier-0
+    # dashboard query arriving mid-decode — preemption swaps a victim's
+    # pages to the host tier, serves the query, restores token-exactly
+    print("\n=== overload: priority preemption + load shedding ===")
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16)
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous_engine=ceng,
+                                 preemption=True, max_backlog=4)
+    rng = np.random.default_rng(17)
+    reports = [Request(f"report-{i}",
+                       rng.integers(1, cfg.vocab_size, 12).astype(np.int32),
+                       max_new_tokens=40, priority=1) for i in range(2)]
+    for r in reports:
+        sched.submit(r)
+    sched.step()                       # reports admitted, decode in flight
+    dash = Request("dashboard",
+                   rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                   max_new_tokens=4, priority=0)
+    sched.submit(dash)                 # tier 0 against a full slot table
+    backlog = [Request(f"backlog-{i}",
+                       rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                       max_new_tokens=4, priority=1) for i in range(6)]
+    for r in backlog:                  # 6 queued > max_backlog=4: 2 shed
+        sched.submit(r)
+    responses = {r.tenant: r for r in sched.drain()}
+    shed = sum(int(s["shed"]) for s in sched.stats.values())
+    print(f"preemptions={ceng.preemptions} restores={ceng.restores} "
+          f"shed={shed}")
+    for name in ("dashboard", *(r.tenant for r in reports)):
+        resp = responses[name]
+        print(f"  {name:>11}: {resp.outcome:9s} ttft={resp.ttft_s:.3f}s "
+              f"swapped_out={resp.preemptions}x")
+    n_rej = sum(r.outcome == 'rejected' for r in responses.values())
+    print(f"  backlog: {sum(r.outcome == 'completed' for r in responses.values()) - 3} completed, "
+          f"{n_rej} explicitly rejected (shed)")
+    # the preempted report's tokens are bitwise an uninterrupted run's
+    victim, = [r for r in reports if responses[r.tenant].preemptions]
+    (
+        _, want
+    ), = ceng.run_all([Request("oracle", victim.prompt.copy(), 40)])
+    exact = np.array_equal(want, responses[victim.tenant].tokens)
+    print(f"  preempted row token-exact vs uninterrupted run: {exact}")
 
 
 if __name__ == "__main__":

@@ -7,10 +7,20 @@ in distributed/checkpoint.py and core/transfer.py.
 
 * HeartbeatMonitor — wall-clock watchdog around the step loop; a step
   exceeding ``timeout_s`` marks the worker suspect (on a real cluster this
-  feeds the coordinator; here it triggers restart-from-checkpoint).
+  feeds the coordinator; here it triggers restart-from-checkpoint).  The
+  serving scheduler (:mod:`repro.serving.multitenant`) beats it once per
+  collected decode round, so a wedged round surfaces as a suspect count
+  instead of a silent hang.
 * StragglerDetector — per-tenant EWMA of step times; tenants slower than
   ``z_threshold`` sigma are flagged and re-ordered first in the next staging
   plan (paper's sequential staging makes order a free knob).
+* FaultPlane / InjectedFault — deterministic fault injector for the serving
+  overload tests and the trace-driven load harness: drop a decode round,
+  stall an admission batch, or poison a swap-store read, each on a fixed
+  every-k counter (no randomness — the same trace always injects the same
+  faults).  Injection *raises* before any engine state mutates, so the
+  caller's retry/limit policy decides whether the request survives
+  (retried) or lands in a terminal state — the engine itself never crashes.
 * run_with_recovery — supervised step loop: on failure, restore the latest
   checkpoint (possibly onto a smaller elastic mesh) and continue; gives up
   after ``max_failures``.
@@ -39,6 +49,68 @@ class HeartbeatMonitor:
             self.missed += 1
             return True
         return False
+
+
+class InjectedFault(RuntimeError):
+    """A fault raised by :class:`FaultPlane`.  Always transient from the
+    injector's point of view — whether it becomes terminal is the caller's
+    retry/limit policy, never the engine's."""
+
+
+@dataclasses.dataclass
+class FaultPlane:
+    """Deterministic every-k fault injection for the serving stack.
+
+    Each knob is a period: ``0`` disables that fault, ``k`` fires it on
+    every k-th event of its kind (events counted from 1, so ``k=3`` fires
+    on the 3rd, 6th, ... event).  The three planes map onto the serving
+    engine's three state-mutation sites, and every injection raises
+    *before* the mutation it guards:
+
+    * ``drop_round_every`` — :meth:`round_fault` raises at the top of
+      ``dispatch_round`` (before the copy-on-write scan), so a dropped
+      round leaves the slot table exactly as it was and a bare re-dispatch
+      is sound;
+    * ``stall_admission_every`` — :meth:`admission_fault` raises at the top
+      of ``try_admit_batch`` (before any prefill or page allocation), so a
+      stalled admission batch simply stays queued;
+    * ``poison_swap_every`` — :meth:`swap_read_fault` raises inside the
+      swap store's read path, before the staged copy is handed to the
+      restore jit; the host-side record is untouched, so a retry re-reads
+      the intact copy.
+    """
+    drop_round_every: int = 0
+    stall_admission_every: int = 0
+    poison_swap_every: int = 0
+    rounds: int = 0
+    admissions: int = 0
+    swap_reads: int = 0
+    injected: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {"round": 0, "admission": 0, "swap": 0})
+
+    def _fire(self, every: int, count: int) -> bool:
+        return every > 0 and count % every == 0
+
+    def round_fault(self) -> None:
+        self.rounds += 1
+        if self._fire(self.drop_round_every, self.rounds):
+            self.injected["round"] += 1
+            raise InjectedFault("injected fault: decode round dropped")
+
+    def admission_fault(self) -> None:
+        self.admissions += 1
+        if self._fire(self.stall_admission_every, self.admissions):
+            self.injected["admission"] += 1
+            raise InjectedFault("injected fault: admission stalled")
+
+    def swap_read_fault(self) -> None:
+        self.swap_reads += 1
+        if self._fire(self.poison_swap_every, self.swap_reads):
+            self.injected["swap"] += 1
+            raise InjectedFault("injected fault: swap read poisoned")
+
+    def total_injected(self) -> int:
+        return sum(self.injected.values())
 
 
 class StragglerDetector:

@@ -17,7 +17,11 @@ overlap pairs.  ``--mode`` selects the schedule:
   page-sharing stats).  ``--kernel-backend pallas`` swaps the decode
   round's dense KV gather for the fused page-streaming Pallas kernels
   (token-exact; interpret mode on CPU, where it demonstrates structure,
-  not speed);
+  not speed).  Overload knobs: ``--priority K`` marks every K-th request
+  tier 0, ``--swap`` (default on) lets blocked tier-0 arrivals preempt
+  tier-1 rows via host-tier KV swap (token-exact restore), and
+  ``--max-backlog N`` sheds the lowest-priority queued work past N with
+  an explicit REJECTED outcome;
 * ``overlapped`` (default) — tenant-slot batching with up to
   ``--stage-depth`` batches staged under the running decode;
 * ``blocking`` — the legacy host-blocking schedule (A/B baseline).
@@ -87,6 +91,27 @@ def main(argv=None) -> int:
                     help="prepend a common system-prompt prefix of this "
                          "many tokens to every request (demo workload for "
                          "--prefix-sharing)")
+    ap.add_argument("--priority", type=int, default=0, metavar="K",
+                    help="continuous mode: mark every K-th request as "
+                         "tier 0 (highest priority; admitted first, shed "
+                         "last, preempts tier-1 rows under slot/page "
+                         "pressure when --swap is on).  0 = single-tier "
+                         "traffic (default)")
+    ap.add_argument("--swap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="continuous mode: preemption via KV tiering — a "
+                         "blocked higher-priority arrival swaps a lower-"
+                         "priority victim's pages out to the host store "
+                         "and restores them token-exactly when capacity "
+                         "frees (--no-swap = admission waits instead; "
+                         "pure-attention archs only, SSM rows are never "
+                         "victims)")
+    ap.add_argument("--max-backlog", type=int, default=None, metavar="N",
+                    help="continuous mode: SLO backlog bound — when more "
+                         "than N requests are queued, the lowest-priority "
+                         "(then latest-deadline) queued work is shed with "
+                         "an explicit REJECTED outcome instead of growing "
+                         "the queue (default: unbounded)")
     args = ap.parse_args(argv)
     mode = args.mode or ("blocking" if args.blocking else "overlapped")
 
@@ -101,6 +126,7 @@ def main(argv=None) -> int:
         engine, max_batch=args.max_batch,
         tenancy=TenancyConfig(1, args.tenants), mode=mode,
         stage_depth=args.stage_depth,
+        preemption=args.swap, max_backlog=args.max_backlog,
         continuous=dict(capacity=args.capacity, page_size=args.page_size,
                         inner_steps=args.inner_steps,
                         prefix_sharing=args.prefix_sharing,
@@ -118,17 +144,24 @@ def main(argv=None) -> int:
                               args.prompt_len).astype(np.int32)
         if args.shared_prefix_len:
             prompt = np.concatenate([shared_prefix, prompt])
-        sched.submit(Request(tenant, prompt, args.new_tokens))
+        tier0 = args.priority > 0 and i % args.priority == args.priority - 1
+        sched.submit(Request(tenant, prompt, args.new_tokens,
+                             priority=0 if tier0 else 1))
 
     responses = sched.drain()
-    print(f"served {len(responses)} requests")
+    n_done = sum(r.outcome == "completed" for r in responses)
+    print(f"served {len(responses)} requests "
+          f"(completed={n_done} "
+          f"rejected={sum(r.outcome == 'rejected' for r in responses)} "
+          f"failed={sum(r.outcome == 'failed' for r in responses)})")
     for t, rep in sorted(sched.utilization_report().items()):
         print(f"  {t}: requests={rep['requests']:.0f} "
               f"tokens={rep['tokens']:.0f} busy={rep['busy_s']*1e3:.0f}ms "
               f"share={rep['busy_share']*100:.1f}%")
-    lat = [r.latency_s for r in responses]
-    print(f"latency p50={np.percentile(lat,50)*1e3:.0f}ms "
-          f"p99={np.percentile(lat,99)*1e3:.0f}ms")
+    lat = [r.latency_s for r in responses if r.outcome == "completed"]
+    if lat:
+        print(f"latency p50={np.percentile(lat,50)*1e3:.0f}ms "
+              f"p99={np.percentile(lat,99)*1e3:.0f}ms")
     from repro.core.pipeline import timeline_overlaps
     ov = timeline_overlaps(sched.timeline)
     print(f"schedule={mode} overlap_pairs={sum(ov)}/{len(ov)} "
@@ -146,6 +179,10 @@ def main(argv=None) -> int:
               f"prefill calls={eng.prefill_calls} "
               f"skipped={eng.prefill_skips} "
               f"(batch admission={'on' if eng.batch_admission else 'off'})")
+        shed = sum(int(s["shed"]) for s in sched.stats.values())
+        print(f"overload: preemption={'on' if args.swap else 'off'} "
+              f"preemptions={eng.preemptions} restores={eng.restores} "
+              f"shed={shed} heartbeat_suspects={sched.heartbeat_suspects}")
     return 0
 
 

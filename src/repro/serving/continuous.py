@@ -80,6 +80,23 @@ holds exactly what this request's prefill would have written), forks copy
 pages before the first divergent write, and cached admission logits are the
 stored output of the identical earlier prefill.
 
+Preemption (overload survival, PR 6): a live row can be *swapped out* —
+its page blocks and entire per-slot decode state snapshotted to a
+:class:`repro.serving.swap.HostSwapStore`, its pages freed through the
+ordinary allocator accounting (shared prefix pages stay under their other
+readers; only the victim's private suffix is uniquely host-held), and its
+slot vacated for a higher-priority admission.  :meth:`ContinuousBatching
+Engine.try_restore` later re-admits it: still-registered unwritten prefix
+blocks are re-shared straight from the trie, everything else stages back
+through the swap store's sequential :class:`repro.core.transfer.
+StagingEngine` (prefetched ahead of re-admission), and the slot's scalars
+(pos / remaining / lstep / PRNG key / last logits) are rebuilt bitwise — so
+the resumed decode is token-exact with an uninterrupted run.  Only
+pure-attention archs are preemptable (``can_preempt``): SSM slot states are
+not paged and have no host representation, so hybrid rows must never be
+chosen as victims.  Preemption requires a quiesced engine (no round in
+flight) — the scheduler force-collects first.
+
 Encoder-decoder configs are rejected: their cross-attention caches are
 per-request device tensors with no paged representation here (the slot-based
 paths still serve them).  MoE routing couples rows through expert capacity,
@@ -101,6 +118,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ATTN, MOE, NONE, ArchConfig
+from repro.distributed.fault import InjectedFault
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
@@ -108,6 +126,7 @@ from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
 from repro.serving.engine import ServingEngine, sample_rows
 from repro.serving.kvcache import (BACKENDS, POS_SENTINEL, PagedKVCache,
                                    paged_attention_decode, paged_scatter)
+from repro.serving.swap import HostSwapStore, SwapRecord
 
 
 @dataclasses.dataclass
@@ -122,6 +141,10 @@ class _Slot:
     planned: int = 0               # decode steps already dispatched (the
     tokens: List[int] = dataclasses.field(  # CoW write scan runs at dispatch)
         default_factory=list)
+    priority: int = 1              # 0 = highest; victims are picked among
+    preemptions: int = 0           # strictly lower tiers only
+    chain_keys: List[bytes] = dataclasses.field(default_factory=list)
+    t_first: Optional[float] = None  # wall stamp of the first collected token
 
 
 @dataclasses.dataclass
@@ -145,6 +168,9 @@ class CollectResult:
     finished: List[Tuple[Any, np.ndarray, int]]   # (request, tokens, slot)
     active_steps: np.ndarray       # (C,) decode steps each row was live for
     slot_reqs: List[Optional[Any]]  # slot -> request, pre-retirement snapshot
+    # retired slot records aligned with `finished` (TTFT stamp, preemption
+    # count); a separate list so `finished` keeps its 3-tuple shape
+    retired: List[Any] = dataclasses.field(default_factory=list)
 
 
 class ContinuousBatchingEngine:
@@ -165,7 +191,11 @@ class ContinuousBatchingEngine:
                  batch_admission: bool = True,
                  logits_cache_size: int = 32,
                  backend: Optional[str] = None,
-                 pallas_interpret: bool = True):
+                 pallas_interpret: bool = True,
+                 swap: bool = True,
+                 swap_store: Optional[HostSwapStore] = None,
+                 fault_plane: Optional[Any] = None,
+                 admission_retry_limit: int = 8):
         cfg = engine.cfg
         if cfg.enc_dec:
             raise ValueError(
@@ -218,15 +248,28 @@ class ContinuousBatchingEngine:
         self.state = self._init_state()
         self._slots: List[Optional[_Slot]] = [None] * capacity
         self._free_slots: List[int] = list(range(capacity - 1, -1, -1))
+        # preemption (KV tiering): only pure-attention archs can be swapped
+        # out — SSM slot states are neither paged nor host-representable,
+        # so hybrid rows must never be chosen as victims
+        self.fault_plane = fault_plane
+        self.can_preempt = bool(swap) and self._pure_attn
+        self.swap_store = (swap_store if swap_store is not None
+                           else (HostSwapStore(fault_plane=fault_plane)
+                                 if self.can_preempt else None))
+        self.admission_retry_limit = int(admission_retry_limit)
+        self.rejected: List[Any] = []   # run_all's terminal REJECTED requests
         # trace counters: python side effects run only while jit traces
         self.decode_traces = 0
         self.admit_traces = 0
         self.admit_skip_traces = 0
         self.prefill_traces = 0
+        self.restore_traces = 0
         self.prefill_calls = 0     # host-side prefill invocations (batched)
         self.prefill_skips = 0     # admissions served from the logits cache
         self.rounds = 0
         self.row_steps = 0         # sum over rounds of live rows per step
+        self.preemptions = 0
+        self.restores = 0
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -499,6 +542,58 @@ class ContinuousBatchingEngine:
                                   static_argnames=("bucket", "ring"),
                                   donate_argnums=(0,))
 
+        def evict_fn(st, slot):
+            """Vacate a preempted (or terminally failed) row: zero its
+            remaining budget and point its whole page-table row at SENTINEL,
+            so the stale table can neither decode garbage nor address pages
+            reallocated to newer requests.  All operands dynamic: one
+            trace."""
+            new = dict(st)
+            new["remaining"] = st["remaining"].at[slot].set(0)
+            new["page_table"] = st["page_table"].at[slot].set(
+                jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
+                         jnp.int32))
+            return new
+
+        self._evict_jit = jax.jit(evict_fn, donate_argnums=(0,))
+
+        def restore_fn(st, kv_blocks, pos_rows, logits, slot, pages,
+                       scatter_pages, pos, remaining, temp, topk, key,
+                       lstep, ring):
+            """Swap-in: scatter a preempted request's snapshot blocks into
+            freshly allocated pages and rebuild its slot row bitwise.
+            ``pages`` is the full SENTINEL-padded page-table row and the
+            snapshot is padded to the same width, so this traces ONCE
+            whatever the victim's ring; ``scatter_pages`` redirects both
+            the padding's and the re-shared blocks' writes to TRASH —
+            re-shared device pages already hold the identical pristine
+            content, and TRASH is never read as valid, exactly like
+            masked-row writes."""
+            self.restore_traces += 1
+            new = dict(st)
+            new["page_table"] = st["page_table"].at[slot].set(pages)
+            new["pos_pool"] = st["pos_pool"].at[scatter_pages].set(pos_rows)
+            nc = dict(st["caches"])
+            for name in self.kv.attn_subs:
+                cur = st["caches"][name]
+                nc[name] = {
+                    "k": cur["k"].at[:, scatter_pages].set(
+                        kv_blocks[name]["k"].astype(cur["k"].dtype)),
+                    "v": cur["v"].at[:, scatter_pages].set(
+                        kv_blocks[name]["v"].astype(cur["v"].dtype))}
+            new["caches"] = nc
+            new["logits"] = st["logits"].at[slot].set(logits)
+            new["pos"] = st["pos"].at[slot].set(pos)
+            new["ring"] = st["ring"].at[slot].set(ring)
+            new["remaining"] = st["remaining"].at[slot].set(remaining)
+            new["temps"] = st["temps"].at[slot].set(temp)
+            new["topks"] = st["topks"].at[slot].set(topk)
+            new["keys"] = st["keys"].at[slot].set(key)
+            new["lstep"] = st["lstep"].at[slot].set(lstep)
+            return new
+
+        self._restore_jit = jax.jit(restore_fn, donate_argnums=(0,))
+
     # ------------------------------------------------------------------
     # admission
     # ------------------------------------------------------------------
@@ -526,8 +621,12 @@ class ContinuousBatchingEngine:
            sampling state, register the new chain blocks.
 
         Returns one admitted-flag per request; rejected requests (slot or
-        page pressure) are untouched and stay with the caller.
+        page pressure) are untouched and stay with the caller.  An injected
+        admission stall (fault plane) raises before any prefill or page
+        allocation, so the whole batch stays with the caller too.
         """
+        if self.fault_plane is not None and reqs:
+            self.fault_plane.admission_fault()
         flags = [False] * len(reqs)
         plans: List[Dict[str, Any]] = []
         for i, req in enumerate(reqs):
@@ -628,7 +727,9 @@ class ContinuousBatchingEngine:
         if self.prefix_sharing and pl["keys"]:
             kv.register(slot, pl["keys"][:nb])
         self._slots[slot] = _Slot(req, target, float(temp), topk,
-                                  bucket=bucket, ring=ring)
+                                  bucket=bucket, ring=ring,
+                                  priority=int(getattr(req, "priority", 1)),
+                                  chain_keys=list(pl["keys"][:nb]))
         return True
 
     def _logits_cache_put(self, key: bytes, row: jax.Array) -> None:
@@ -672,7 +773,11 @@ class ContinuousBatchingEngine:
 
     def dispatch_round(self) -> RoundHandle:
         """Enqueue one masked micro-round (non-blocking); the caller may
-        admit the next requests while it runs on the device."""
+        admit the next requests while it runs on the device.  An injected
+        round drop (fault plane) raises before the copy-on-write scan — the
+        slot table is untouched, so a bare re-dispatch is sound."""
+        if self.fault_plane is not None:
+            self.fault_plane.round_fault()
         t0 = time.perf_counter()
         self._resolve_round_writes()
         # static sampling tier from the live rows (an all-greedy round is a
@@ -696,41 +801,238 @@ class ContinuousBatchingEngine:
         active_steps = act.sum(axis=0).astype(np.int64)
         self.row_steps += int(active_steps.sum())
         finished: List[Tuple[Any, np.ndarray, int]] = []
+        retired: List[_Slot] = []
         for c, s in enumerate(self._slots):
             if s is None:
                 continue
-            s.tokens.extend(int(t) for t in emitted[act[:, c], c])
+            row = emitted[act[:, c], c]
+            if row.size and s.t_first is None:
+                # first token materialised on the host: the TTFT stamp
+                # (survives preemption — a restored slot keeps its stamp)
+                s.t_first = time.perf_counter()
+            s.tokens.extend(int(t) for t in row)
             if len(s.tokens) >= s.target:
                 finished.append((s.req,
                                  np.asarray(s.tokens[:s.target], np.int32),
                                  c))
+                retired.append(s)
                 self.kv.free(c)
                 self._slots[c] = None
                 self._free_slots.append(c)
-        return CollectResult(finished, active_steps, slot_reqs)
+        return CollectResult(finished, active_steps, slot_reqs, retired)
+
+    # ------------------------------------------------------------------
+    # preemption: swap-out / swap-in (KV tiering)
+    # ------------------------------------------------------------------
+    def preempt(self, slot: int) -> int:
+        """Swap a live row out to the host tier and vacate its slot.
+
+        Snapshots *every* page block of the victim (K/V per attention
+        sublayer + position rows — a pure read, so sharers are untouched)
+        plus the complete per-slot decode state, parks it in the swap
+        store, then drops the page references through the ordinary
+        allocator accounting: shared prefix pages keep serving their other
+        readers, registered pristine pages linger as cache, and only the
+        victim's private suffix is uniquely host-held (the ledger count).
+
+        Caller contract: no decode round may be in flight (the scheduler
+        force-collects first), so the slot's collected tokens are caught up
+        with its dispatched steps.  Returns the swap-store ticket.
+        """
+        s = self._slots[slot]
+        if s is None:
+            raise ValueError(f"slot {slot} is empty")
+        if not self.can_preempt:
+            raise RuntimeError(
+                "engine cannot preempt: swap disabled or the arch has "
+                "unswappable (SSM) slot state")
+        if self.prefix_sharing:
+            assert s.planned == len(s.tokens), \
+                "preempt with a decode round in flight"
+        kv, st = self.kv, self.state
+        pages = np.asarray(kv.owned_pages(slot), np.int32)
+        # snapshots are padded to the page-table width so the restore jit
+        # sees one shape whatever the victim's ring (padding scatters to
+        # TRASH and is never read back) — and the snapshot *gathers* here
+        # index with the same fixed width, else each distinct victim page
+        # count compiles its own device gather (a mid-trace stall the
+        # first time a 1-page victim is preempted after a 2-page warm-up);
+        # the pad gathers SENTINEL's content and is zeroed host-side
+        mb, nb = kv.max_blocks, len(pages)
+        padded = np.zeros(mb, np.int32)
+        padded[:nb] = pages
+
+        def grab(pool):
+            arr = np.array(pool[:, padded])
+            arr[:, nb:] = 0
+            return arr
+
+        host_kv = {name: {"k": grab(st["caches"][name]["k"]),
+                          "v": grab(st["caches"][name]["v"])}
+                   for name in kv.attn_subs}
+        host_pos = np.array(st["pos_pool"][padded])
+        host_pos[nb:] = POS_SENTINEL
+        written = {((s.bucket + t) % s.ring) // self.page_size
+                   for t in range(min(len(s.tokens), s.ring))}
+        private = kv.private_blocks(slot)
+        rec = SwapRecord(
+            req=s.req, priority=s.priority, target=s.target, temp=s.temp,
+            top_k=s.top_k, bucket=s.bucket, ring=s.ring,
+            tokens=list(s.tokens), chain_keys=list(s.chain_keys),
+            written=written, pos=int(st["pos"][slot]),
+            remaining=int(st["remaining"][slot]),
+            lstep=int(st["lstep"][slot]), key=np.asarray(st["keys"][slot]),
+            logits=np.asarray(st["logits"][slot]), host_kv=host_kv,
+            host_pos=host_pos, n_private=len(private),
+            preemptions=s.preemptions + 1, t_first=s.t_first)
+        ticket = self.swap_store.put(rec)
+        kv.swap_out(slot, len(private))
+        self.state = self._evict_jit(self.state, np.int32(slot))
+        self._slots[slot] = None
+        self._free_slots.append(slot)
+        self.preemptions += 1
+        return ticket
+
+    def try_restore(self, ticket: int) -> bool:
+        """Swap a preempted request back into a free slot, token-exactly.
+
+        Blocks the victim never wrote whose chain is *still* registered are
+        re-shared straight from the trie (their pages hold bitwise the
+        snapshot content); every other block gets a fresh page and receives
+        the staged host copy (re-shared blocks' scatter is redirected to
+        TRASH).  The slot scalars are restored bitwise, so the remaining
+        decode — same ``fold_in(key, lstep)`` schedule, same positions,
+        same page content — is indistinguishable from an uninterrupted run.
+
+        Returns False (allocator untouched, record kept) on slot or page
+        pressure; raises :class:`InjectedFault` on a poisoned swap read
+        (record kept intact for the retry).
+        """
+        if not self._free_slots:
+            return False
+        kv = self.kv
+        rec = self.swap_store.record(ticket)
+        nb = kv.blocks_for(rec.ring)
+        # pristine prefix: contiguous blocks the decode ring never wrote
+        pristine = 0
+        while pristine < nb and pristine not in rec.written:
+            pristine += 1
+        shared: List[int] = []
+        if self.prefix_sharing and rec.chain_keys:
+            shared = kv.lookup_chain(rec.chain_keys)[:pristine]
+        will_write = {((rec.pos + t) % rec.ring) // self.page_size
+                      for t in range(min(rec.remaining, rec.ring))}
+        slot = self._free_slots[-1]
+        pages = kv.alloc_shared(slot, shared, nb - len(shared), will_write)
+        if pages is None:
+            return False
+        try:
+            arrays = self.swap_store.fetch(ticket)
+        except InjectedFault:
+            kv.free(slot)            # undo; the host record is intact
+            raise
+        self._free_slots.pop()
+        # pad the page row to the table width (SENTINEL) and redirect both
+        # the padding's and the re-shared blocks' scatter to TRASH: the
+        # snapshot was padded the same way, so the restore jit traces once
+        mb = kv.max_blocks
+        row = np.full((mb,), PagedKVCache.SENTINEL, np.int32)
+        row[:nb] = pages
+        scatter = np.full((mb,), PagedKVCache.TRASH, np.int32)
+        scatter[len(shared):nb] = np.asarray(pages)[len(shared):nb]
+        self.state = self._restore_jit(
+            self.state, arrays["kv"], arrays["pos"],
+            jnp.asarray(rec.logits), np.int32(slot), jnp.asarray(row),
+            jnp.asarray(scatter), np.int32(rec.pos),
+            np.int32(rec.remaining), np.float32(rec.temp),
+            np.int32(rec.top_k), jnp.asarray(rec.key),
+            np.int32(rec.lstep), np.int32(rec.ring))
+        kv.swap_in(rec.n_private)
+        self.swap_store.pop(ticket)
+        if self.prefix_sharing and rec.chain_keys:
+            # unwritten restored blocks hold bitwise their chains' prefill
+            # content: re-register them so later identical prefixes (or a
+            # second preemption of this request) can re-share
+            kv.register(slot, rec.chain_keys[:pristine])
+        self._slots[slot] = _Slot(
+            rec.req, rec.target, rec.temp, rec.top_k, bucket=rec.bucket,
+            ring=rec.ring, planned=len(rec.tokens), tokens=list(rec.tokens),
+            priority=rec.priority, preemptions=rec.preemptions,
+            chain_keys=list(rec.chain_keys), t_first=rec.t_first)
+        self.restores += 1
+        return True
+
+    def drop_swapped(self, ticket: int) -> SwapRecord:
+        """Abandon a swapped-out record (terminal failure after the restore
+        retry budget): its host blocks leave the ledger without a restore.
+        Returns the record so the caller can surface the request."""
+        rec = self.swap_store.pop(ticket)
+        self.kv.swap_in(rec.n_private, restored=False)
+        return rec
+
+    def fail_live(self) -> List[Any]:
+        """Terminal failure path (round-fault limit exceeded): vacate every
+        live row — pages freed through the ordinary accounting, rows
+        evicted device-side — and return the abandoned requests so the
+        caller can surface them as FAILED.  Caller contract: no round in
+        flight."""
+        failed: List[Any] = []
+        for c, s in enumerate(self._slots):
+            if s is None:
+                continue
+            failed.append(s.req)
+            self.kv.free(c)
+            self.state = self._evict_jit(self.state, np.int32(c))
+            self._slots[c] = None
+            self._free_slots.append(c)
+        return failed
 
     # ------------------------------------------------------------------
     def run_all(self, requests) -> List[Tuple[Any, np.ndarray]]:
         """FIFO-drain a request list without a scheduler: admit as slots and
         pages free up (same-bucket admissions batched into one prefill), one
         micro-round per iteration.  Returns (request, tokens) in completion
-        order."""
+        order.
+
+        Overload contract (PR 6): a head request the pool cannot admit no
+        longer raises.  When nothing is in flight (so no retirement can
+        ever free pages) admission is retried up to
+        ``admission_retry_limit`` times — injected admission stalls are
+        transient, pool-too-small is not — after which the head request is
+        dropped into ``self.rejected`` (terminal REJECTED) and the drain
+        continues, so a 2x oversubscribed burst finishes without an
+        exception and without a hang.
+        """
         queue: Deque[Any] = collections.deque(requests)
         done: List[Tuple[Any, np.ndarray]] = []
+        stall = 0
         while queue or self.active_count():
+            progress = False
             while queue and self._free_slots:
                 take = [queue.popleft() for _ in
                         range(min(len(queue), len(self._free_slots)))]
-                flags = self.try_admit_batch(take)
+                try:
+                    flags = self.try_admit_batch(take)
+                except InjectedFault:
+                    for req in reversed(take):
+                        queue.appendleft(req)
+                    break
                 for req, ok in reversed(list(zip(take, flags))):
                     if not ok:
                         queue.appendleft(req)
+                progress = progress or any(flags)
                 if not all(flags):
                     break              # pool pressure: decode frees pages
-            if queue and not self.active_count():
-                raise RuntimeError(
-                    "paged pool cannot admit any queued request (pool too "
-                    "small for the head request)")
-            res = self.collect(self.dispatch_round())
+            if queue and not self.active_count() and not progress:
+                stall += 1
+                if stall > self.admission_retry_limit:
+                    self.rejected.append(queue.popleft())
+                    stall = 0
+                continue               # nothing live: a round would be
+            stall = 0                  # all-masked, retry admission instead
+            try:
+                res = self.collect(self.dispatch_round())
+            except InjectedFault:
+                continue               # dropped round: state untouched
             done.extend((req, toks) for req, toks, _ in res.finished)
         return done

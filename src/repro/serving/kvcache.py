@@ -83,7 +83,11 @@ page's refcount equals the number of (slot, block) page-table references to
 it; and ``available() = free + cached >= cow_reserve`` so every mandatory
 copy-on-write fork is guaranteed a page.  Without sharing (no registration)
 this degenerates to the PR-3 contract ``free + sum(owned) == num_pages -
-RESERVED``.
+RESERVED``.  Preemption (see :mod:`repro.serving.swap`) adds a *host tier*
+on top without disturbing the device invariant: a swap-out frees the
+victim's device pages through the ordinary accounting and records its
+private blocks in the ``swapped_pages`` ledger, which
+``assert_conserved(host_pages=...)`` audits against the swap store.
 
 Exactness contract: the dense decode path (:func:`repro.models.layers.
 apply_attention_decode`) treats a prefix cache of length ``s_c`` as a ring —
@@ -167,6 +171,16 @@ class PagedKVCache:
         self.pages_shared = 0
         self.cow_forks = 0
         self.pristine_forks = 0
+        # host tier (preemption swap): page blocks whose only copy lives in
+        # the host-side swap store right now.  Device conservation is
+        # untouched by swapping — a victim's device pages go through the
+        # ordinary free() accounting — but the *two-tier* audit
+        # (assert_conserved(host_pages=...)) checks this ledger against the
+        # store, so a swap record can neither leak nor double-count blocks.
+        self.swapped_pages = 0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swap_drops = 0
 
     # ------------------------------------------------------------------
     # host-side allocator
@@ -363,6 +377,46 @@ class PagedKVCache:
             self._unregister(page)
         return None
 
+    def owned_pages(self, slot: int) -> List[int]:
+        """The slot's current page row (block order), read-only."""
+        return list(self._owned.get(slot, ()))
+
+    def private_blocks(self, slot: int) -> List[int]:
+        """Block indices whose page content exists nowhere but this slot's
+        row: refcount 1 and not trie-registered.  These are a preemption
+        victim's *private suffix* — the only blocks a swap-out actually
+        moves to the host tier.  Every other block's content stays
+        device-resident after the victim's refcounts drop: shared pages
+        keep serving their other readers, and registered pristine pages
+        linger as evictable cache."""
+        return [b for b, p in enumerate(self._owned.get(slot, ()))
+                if self._ref.get(p, 0) == 1 and p not in self._page_key]
+
+    def swap_out(self, slot: int, host_blocks: int) -> int:
+        """Preemption swap-out: retire a victim slot's page references —
+        exactly :meth:`free`, shared prefix pages are never pulled out from
+        under their other sequences — and account ``host_blocks`` page
+        blocks (the victim's private suffix, see :meth:`private_blocks`) as
+        now held by the host tier.  The engine snapshots page content
+        *before* calling this; the allocator only moves the ledger.
+        Returns the pages whose refcount dropped to 0."""
+        released = self.free(slot)
+        self.swapped_pages += host_blocks
+        self.swap_outs += 1
+        return released
+
+    def swap_in(self, host_blocks: int, restored: bool = True) -> None:
+        """Account ``host_blocks`` page blocks leaving the host tier —
+        either restored into fresh device pages (``restored``) or dropped
+        with a terminally failed swap record."""
+        assert self.swapped_pages >= host_blocks, \
+            (self.swapped_pages, host_blocks)
+        self.swapped_pages -= host_blocks
+        if restored:
+            self.swap_ins += 1
+        else:
+            self.swap_drops += 1
+
     def free(self, slot: int) -> int:
         """Retire a slot: decrement its pages' refcounts.  Pages reaching
         refcount 0 return to the free list — or stay behind as cached
@@ -406,9 +460,17 @@ class PagedKVCache:
         return page
 
     # ------------------------------------------------------------------
-    def assert_conserved(self) -> None:
+    def assert_conserved(self, host_pages: Optional[int] = None) -> None:
         """Audit the allocator (tests): page conservation, refcount
-        integrity, trie consistency and fork-reserve headroom."""
+        integrity, trie consistency and fork-reserve headroom.
+
+        With ``host_pages`` (the swap store's current block count) the audit
+        extends to the host tier: the device invariant must hold unchanged
+        — a swapped victim's pages went through the ordinary free/realloc
+        accounting — *and* every block the allocator believes is
+        host-resident is in the store exactly once (``swapped_pages ==
+        host_pages``), so a swap round-trip conserves pages across both
+        tiers."""
         usable = self.num_pages - self.RESERVED
         live = {p for p, r in self._ref.items() if r > 0}
         free_set = set(self._free)
@@ -439,6 +501,10 @@ class PagedKVCache:
         # always be coverable, so a copy-on-write fork can never fail
         assert self.available() >= self.cow_reserve, \
             (self.available(), self.cow_reserve)
+        assert self.swapped_pages >= 0, self.swapped_pages
+        if host_pages is not None:
+            assert self.swapped_pages == host_pages, \
+                (self.swapped_pages, host_pages)
 
     # ------------------------------------------------------------------
     # device-state constructors (engine holds the results in its pytree)

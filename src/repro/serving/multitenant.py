@@ -49,6 +49,59 @@ dispatch -> device-ready) feed the benchmark harness; a shared
 moment the decode output is ready, so :func:`repro.core.pipeline.
 timeline_overlaps` is falsifiable on the serving timeline exactly as on the
 risk pipeline's.
+
+Priority, preemption & overload (continuous mode)
+-------------------------------------------------
+
+The paper's on-demand sharing claim only holds if the shared device
+degrades *gracefully* past saturation, so the continuous schedule carries
+an overload-survival layer:
+
+* **priority classes + fair share** — each :class:`Request` carries a
+  ``priority`` tier (0 = highest; default 1) and an optional ``deadline_s``
+  hint.  When queue heads span more than one tier, or a tenant holds more
+  than its fair share of the paged pool while a same-tier tenant with
+  backlog holds less, admission picks by ``(priority, over-share, deadline,
+  row-steps consumed)`` instead of the plain rotation; workloads that never
+  set priorities keep the legacy round-robin / straggler order bit-for-bit.
+  Per-tenant pages held and decode row-steps consumed are the fair-share
+  accounting inputs.
+* **bounded retry + backoff, terminal REJECTED** — an admission the pool
+  refuses no longer raises: the request re-queues with exponential backoff
+  (clocked by admission passes) and, after ``admission_retry_limit``
+  failed attempts, lands in a terminal ``REJECTED`` outcome — an empty
+  :class:`Response` with ``outcome="rejected"``, surfaced through
+  :meth:`step`/:meth:`drain` and the per-tenant stats.  When the backlog
+  exceeds ``max_backlog`` (the SLO bound), the lowest-priority,
+  furthest-deadline queued work is load-shed the same way (``shed`` stat).
+* **preemption via KV tiering** — when a higher-priority request cannot
+  admit and a strictly lower-priority row is live, the scheduler
+  force-collects the in-flight round (preemption needs a quiesced engine)
+  and swaps the victim out through :meth:`repro.serving.continuous.
+  ContinuousBatchingEngine.preempt` (pages to the host-side
+  :class:`repro.serving.swap.HostSwapStore`, shared prefix pages left
+  under their readers).  Swapped requests wait in a restore queue served
+  *before* fresh picks of their own or lower tiers (free slots are left
+  to strictly-higher-priority waiting arrivals — a lower-tier restore
+  never re-takes the slot a blocked tier-0 request needs), stage their
+  pages back through the
+  sequential :class:`repro.core.transfer.StagingEngine` with async
+  prefetch, and resume token-exactly.  Only pure-attention engines
+  preempt; SSM/hybrid rows are never victims.
+* **graceful degradation under faults** — a :class:`repro.distributed.
+  fault.FaultPlane` can drop rounds, stall admissions and poison swap
+  reads; each injection raises before state mutates and feeds a retry/limit
+  policy (``round_fault_limit``): transient faults are retried, persistent
+  ones land requests in terminal ``FAILED`` outcomes instead of crashing
+  or hanging the drain.  A :class:`repro.distributed.fault.
+  HeartbeatMonitor` is beaten once per collected round; missed beats are
+  counted in ``heartbeat_suspects``.
+
+Every submitted request therefore ends in exactly one terminal outcome —
+``completed``, ``rejected`` or ``failed`` — and ``drain()`` returns a
+response for each.  Completed responses carry ``ttft_s`` (first collected
+token minus arrival) and their ``preemptions`` count for the load harness's
+per-priority latency reporting.
 """
 from __future__ import annotations
 
@@ -61,11 +114,13 @@ import numpy as np
 
 from repro.core.pipeline import CompletionWaiter, TenantTimeline
 from repro.core.tenancy import TenancyConfig
-from repro.distributed.fault import StragglerDetector
+from repro.distributed.fault import (HeartbeatMonitor, InjectedFault,
+                                     StragglerDetector)
 from repro.serving.engine import (GenerationResult, PendingGeneration,
                                   ServingEngine)
 
 MODES = ("continuous", "overlapped", "blocking")
+OUTCOMES = ("completed", "rejected", "failed")
 
 
 @dataclasses.dataclass
@@ -81,6 +136,12 @@ class Request:
     top_k: int = 0
     seed: int = 0
     arrival_s: float = dataclasses.field(default_factory=time.perf_counter)
+    # overload layer (continuous mode): priority tier (0 = highest; lower
+    # tiers are admitted first, shed last, and preempt higher numbers) and
+    # an optional absolute-deadline hint used to order same-tier admissions
+    # and pick shedding victims
+    priority: int = 1
+    deadline_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -89,6 +150,13 @@ class Response:
     tokens: np.ndarray
     latency_s: float
     batch_size: int
+    # terminal outcome: "completed" (tokens valid), "rejected" (admission
+    # retry budget or load shed; tokens empty) or "failed" (fault-injection
+    # limit exceeded; tokens empty)
+    outcome: str = "completed"
+    ttft_s: Optional[float] = None   # first collected token minus arrival
+    priority: int = 1
+    preemptions: int = 0             # times the row was swapped out
 
 
 @dataclasses.dataclass
@@ -123,7 +191,13 @@ class MultiTenantScheduler:
                  mode: Optional[str] = None,
                  stage_depth: int = 1,
                  continuous: Optional[Dict[str, Any]] = None,
-                 continuous_engine: Optional[Any] = None):
+                 continuous_engine: Optional[Any] = None,
+                 preemption: bool = True,
+                 max_backlog: Optional[int] = None,
+                 admission_retry_limit: int = 8,
+                 round_fault_limit: int = 3,
+                 fault_plane: Optional[Any] = None,
+                 heartbeat_timeout_s: float = 300.0):
         self.engine = engine
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
@@ -137,7 +211,8 @@ class MultiTenantScheduler:
             collections.deque)
         self.detector = StragglerDetector()
         self.stats: Dict[str, Dict[str, float]] = collections.defaultdict(
-            lambda: {"requests": 0, "tokens": 0, "busy_s": 0.0})
+            lambda: {"requests": 0, "tokens": 0, "busy_s": 0.0,
+                     "rejected": 0, "failed": 0, "preempted": 0, "shed": 0})
         self.timeline: List[TenantTimeline] = []
         self._order: List[str] = []
         self._slot_of: Dict[str, int] = {}
@@ -165,11 +240,35 @@ class MultiTenantScheduler:
                 self._ceng = continuous_engine
             else:
                 from repro.serving.continuous import ContinuousBatchingEngine
-                self._ceng = ContinuousBatchingEngine(engine,
-                                                      **(continuous or {}))
+                ckw = dict(continuous or {})
+                if fault_plane is not None:
+                    ckw.setdefault("fault_plane", fault_plane)
+                self._ceng = ContinuousBatchingEngine(engine, **ckw)
         self._cont_inflight: Optional[_InflightRound] = None
         self._cont_rounds = 0
         self._row_busy: Dict[int, float] = collections.defaultdict(float)
+        # ---- overload-survival layer (continuous mode) ----
+        self.preemption = preemption
+        self.max_backlog = max_backlog
+        self.admission_retry_limit = int(admission_retry_limit)
+        self.round_fault_limit = int(round_fault_limit)
+        self.fault_plane = fault_plane or getattr(self._ceng, "fault_plane",
+                                                  None)
+        self.heartbeat = HeartbeatMonitor(timeout_s=heartbeat_timeout_s)
+        self.heartbeat_suspects = 0
+        self.faults_survived = 0        # injected faults retried past
+        self.rejected: List[Request] = []
+        self.failed: List[Request] = []
+        self._terminal: List[Response] = []   # awaiting emission via step()
+        self._adm_clock = 0             # admission passes (backoff clock)
+        self._attempts: Dict[int, int] = {}       # id(req) -> failed admits
+        self._backoff: Dict[int, int] = {}        # id(req) -> eligible clock
+        self._restore_q: List[int] = []           # swap tickets to re-admit
+        self._ticket_attempts: Dict[int, int] = {}
+        self._ticket_backoff: Dict[int, int] = {}
+        self._tenant_steps: Dict[str, int] = collections.defaultdict(int)
+        self._round_fault_streak = 0
+        self._admission_blocked = False
         # continuous path: one entry per admitted request (vdev/slot = the
         # tenant slot, transfer window = its admission batch's host window:
         # pick + batched prefill + page mapping + state scatter).  Kept
@@ -191,6 +290,8 @@ class MultiTenantScheduler:
         n += sum(len(fl.reqs) for fl in self._inflight)   # dispatched slots
         if self._ceng is not None:       # admitted, not yet retired rows
             n += self._ceng.active_count()
+        n += len(self._restore_q)        # swapped out, awaiting re-admission
+        n += len(self._terminal)         # terminal responses to emit
         return n
 
     def close(self) -> None:
@@ -385,40 +486,321 @@ class MultiTenantScheduler:
     # ------------------------------------------------------------------
     # Continuous schedule: admission + micro-rounds over the slot table
     # ------------------------------------------------------------------
-    def _admit_continuous(self) -> int:
-        """Admit queued requests into free slots: one request per tenant
-        pick so the slot table fills fairly (round-robin / straggler order),
-        then the whole pick list admitted as one batch — same-bucket picks
-        share a single batched prefill call and prefix-share pages.
-        Rejected picks (slot or page pressure) are requeued at the front of
-        their tenant's queue, preserving order."""
+    @staticmethod
+    def _prio(req: Any) -> int:
+        return int(getattr(req, "priority", 1))
+
+    @staticmethod
+    def _deadline(req: Any) -> float:
+        d = getattr(req, "deadline_s", None)
+        return float("inf") if d is None else float(d)
+
+    def _reject(self, req: Request, shed: bool = False) -> None:
+        """Terminal REJECTED outcome: an empty response surfaced through
+        :meth:`step` (and counted per tenant), never a silent drop."""
+        self.rejected.append(req)
+        st = self.stats[req.tenant]
+        st["rejected"] += 1
+        if shed:
+            st["shed"] += 1
+        self._attempts.pop(id(req), None)
+        self._backoff.pop(id(req), None)
+        self._terminal.append(Response(
+            req.tenant, np.zeros((0,), np.int32),
+            time.perf_counter() - req.arrival_s, 0, outcome="rejected",
+            priority=self._prio(req)))
+
+    def _fail(self, req: Any, preemptions: int = 0) -> None:
+        """Terminal FAILED outcome (a fault-injection retry limit was
+        exceeded for this request)."""
+        self.failed.append(req)
+        self.stats[req.tenant]["failed"] += 1
+        self._attempts.pop(id(req), None)
+        self._backoff.pop(id(req), None)
+        self._terminal.append(Response(
+            req.tenant, np.zeros((0,), np.int32),
+            time.perf_counter() - req.arrival_s, 0, outcome="failed",
+            priority=self._prio(req), preemptions=preemptions))
+
+    def _pop_terminal(self, responses: Optional[List[Response]] = None
+                      ) -> List[Response]:
+        out = list(responses or [])
+        if self._terminal:
+            out.extend(self._terminal)
+            self._terminal.clear()
+        return out
+
+    def _shed_backlog(self) -> None:
+        """Load-shed above the SLO bound: while the queued backlog exceeds
+        ``max_backlog``, the lowest-priority, furthest-deadline, newest
+        queued request is dropped with an explicit REJECTED outcome."""
+        if self.max_backlog is None:
+            return
+        backlog = sum(len(q) for q in self.queues.values())
+        while backlog > self.max_backlog:
+            victim = None
+            for t, q in self.queues.items():
+                for r in q:
+                    key = (self._prio(r), self._deadline(r), r.arrival_s)
+                    if victim is None or key > victim[0]:
+                        victim = (key, t, r)
+            _, tenant, req = victim
+            self.queues[tenant].remove(req)
+            self._reject(req, shed=True)
+            backlog -= 1
+
+    def _tenant_pages(self) -> Dict[str, int]:
+        """Pages currently held per tenant (fair-share accounting input)."""
+        held: Dict[str, int] = collections.defaultdict(int)
         eng = self._ceng
+        for c, s in enumerate(eng._slots):
+            if s is not None:
+                held[s.req.tenant] += len(eng.kv.owned_pages(c))
+        return held
+
+    def _over_share(self, held: Dict[str, int]) -> Dict[str, bool]:
+        """Per-tenant fair-share check: over-share means holding strictly
+        more pages than usable_pages / active_tenants."""
+        eng = self._ceng
+        active = {t for t, q in self.queues.items() if q} | set(held)
+        if not active:
+            return {}
+        share = (eng.kv.num_pages - eng.kv.RESERVED) / len(active)
+        return {t: held.get(t, 0) > share for t in active}
+
+    def _pick_continuous(self, budget: int) -> List[Request]:
+        """Pick up to ``budget`` queue heads for this admission batch.
+
+        Legacy path — bit-for-bit the pre-overload behaviour — when every
+        head shares one priority tier, nobody is in admission backoff and
+        no fair-share conflict exists: plain rotation / straggler order.
+        Otherwise candidates are ordered by (priority tier, page
+        over-share, deadline, row-steps consumed, tenant order): the
+        priority-aware fair-share admission of the overload layer."""
         picked: List[Request] = []
-        while len(picked) < eng.free_slot_count():
-            tenant = self._next_tenant()
-            if tenant is None:
+        while len(picked) < budget:
+            heads = [(t, q[0]) for t, q in self.queues.items()
+                     if q and self._adm_clock >= self._backoff.get(
+                         id(q[0]), 0)]
+            if not heads:
                 break
+            backoff_free = not any(id(q[0]) in self._backoff
+                                   for q in self.queues.values() if q)
+            over = self._over_share(self._tenant_pages())
+            flags = [over.get(t, False) for t, _ in heads]
+            conflict = any(flags) and not all(flags)
+            if (backoff_free and not conflict
+                    and len({self._prio(r) for _, r in heads}) == 1):
+                tenant = self._next_tenant()
+                if tenant is None:
+                    break
+                picked.append(self.queues[tenant].popleft())
+                continue
+            tenant, _ = min(heads, key=lambda tr: (
+                self._prio(tr[1]), over.get(tr[0], False),
+                self._deadline(tr[1]), self._tenant_steps[tr[0]],
+                self._order.index(tr[0])))
             picked.append(self.queues[tenant].popleft())
-        if not picked:
-            return 0
-        t0 = time.perf_counter() - self._t0
-        flags = eng.try_admit_batch(picked)
-        t1 = time.perf_counter() - self._t0
-        admitted = 0
-        for req, ok in zip(picked, flags):
+        return picked
+
+    def _victim_slot(self, prio: int) -> Optional[int]:
+        """Preemption victim: the live row with the *largest* priority
+        number strictly above ``prio`` (never a same-or-higher tier), ties
+        broken toward the most decode budget left (evicting it frees
+        capacity longest).  None when nobody is preemptable."""
+        eng = self._ceng
+        best = None
+        for c, s in enumerate(eng._slots):
+            if s is None or s.priority <= prio:
+                continue
+            key = (-s.priority, -(s.target - len(s.tokens)), c)
+            if best is None or key < best[0]:
+                best = (key, c)
+        return None if best is None else best[1]
+
+    def _preempt_for(self, reqs: List[Request]
+                     ) -> Tuple[int, List[Request]]:
+        """Admit failed picks by swapping strictly-lower-priority victims
+        out to the host tier (the engine is quiesced by the caller).
+        Returns (newly admitted, still-failed)."""
+        eng = self._ceng
+        admitted, remaining = 0, []
+        for req in sorted(reqs, key=self._prio):
+            ok = False
+            while not ok:
+                victim = self._victim_slot(self._prio(req))
+                if victim is None:
+                    break
+                self.stats[eng._slots[victim].req.tenant]["preempted"] += 1
+                self._restore_q.append(eng.preempt(victim))
+                try:
+                    ok = eng.try_admit_batch([req])[0]
+                except InjectedFault:
+                    self.faults_survived += 1
+                    break
             if ok:
                 admitted += 1
-                slot = self._slot_of[req.tenant]
-                self.admission_timeline.append(TenantTimeline(
-                    vdev=slot, pdev=0, slot=slot, transfer_start=t0,
-                    transfer_end=t1, compute_start=t1, compute_end=t1))
-        for req, ok in reversed(list(zip(picked, flags))):
-            if not ok:
+                self._attempts.pop(id(req), None)
+                self._backoff.pop(id(req), None)
+            else:
+                remaining.append(req)
+        return admitted, remaining
+
+    def _drain_restores(self, allow_preempt: bool) -> int:
+        """Re-admit swapped-out requests, highest tier first.  Restores
+        beat fresh picks of their own or lower tiers, but a lower-tier
+        restore never consumes a free slot a strictly-higher-priority
+        queued arrival is waiting for — otherwise every such arrival pays
+        a full preempt/swap cycle to reclaim the slot the restore just
+        re-took.  A restore blocked on pool pressure with an
+        otherwise-idle engine, or a poisoned swap read past the retry
+        budget, fails terminally — the drain can never hang on an
+        unrestorable ticket.  The queue head is prefetched (async
+        host->device staging) ahead of its re-admission."""
+        eng = self._ceng
+        if not self._restore_q or eng.swap_store is None:
+            return 0
+        pending = sorted(self._restore_q,
+                         key=lambda t: eng.swap_store.record(t).priority)
+        self._restore_q = []
+        done = 0
+        for ticket in pending:
+            if self._adm_clock < self._ticket_backoff.get(ticket, 0):
+                self._restore_q.append(ticket)
+                continue
+            rec = eng.swap_store.record(ticket)
+            hi_wait = sum(1 for q in self.queues.values() for r in q
+                          if self._prio(r) < rec.priority)
+            if hi_wait and eng.free_slot_count() <= hi_wait:
+                self._restore_q.append(ticket)
+                continue
+            try:
+                ok = eng.try_restore(ticket)
+                if not ok and allow_preempt and self.preemption:
+                    victim = self._victim_slot(rec.priority)
+                    if victim is not None:
+                        self.stats[eng._slots[victim].req.tenant][
+                            "preempted"] += 1
+                        self._restore_q.append(eng.preempt(victim))
+                        ok = eng.try_restore(ticket)
+            except InjectedFault:
+                self.faults_survived += 1
+                n = self._ticket_attempts.get(ticket, 0) + 1
+                if n > self.round_fault_limit:
+                    rec = eng.drop_swapped(ticket)
+                    self._ticket_attempts.pop(ticket, None)
+                    self._ticket_backoff.pop(ticket, None)
+                    self._fail(rec.req, preemptions=rec.preemptions)
+                    continue
+                self._ticket_attempts[ticket] = n
+                self._ticket_backoff[ticket] = self._adm_clock + min(
+                    1 << (n - 1), 16)
+                self._restore_q.append(ticket)
+                continue
+            if ok:
+                done += 1
+                self._ticket_attempts.pop(ticket, None)
+                self._ticket_backoff.pop(ticket, None)
+            else:
+                if (eng.active_count() == 0
+                        and self._cont_inflight is None):
+                    # nothing live can ever free more pages: bound the spin
+                    n = self._ticket_attempts.get(ticket, 0) + 1
+                    self._ticket_attempts[ticket] = n
+                    if n > self.admission_retry_limit:
+                        rec = eng.drop_swapped(ticket)
+                        self._fail(rec.req, preemptions=rec.preemptions)
+                        continue
+                self._restore_q.append(ticket)
+        for ticket in self._restore_q[:1]:
+            eng.swap_store.prefetch(ticket)
+        return done
+
+    def _admit_continuous(self, allow_preempt: bool = False) -> int:
+        """Admit queued requests into free slots: restores of preempted
+        work first, then one queue head per pick (legacy rotation or the
+        priority/fair-share order — see :meth:`_pick_continuous`), the
+        whole pick list admitted as one batch — same-bucket picks share a
+        single batched prefill call and prefix-share pages.  Rejected
+        picks are requeued at the front of their tenant's queue; when
+        nothing is in flight and nothing was admitted (so no retirement
+        can ever free pages), failed picks count against the bounded
+        retry budget and reject terminally past it."""
+        eng = self._ceng
+        self._adm_clock += 1
+        self._shed_backlog()
+        admitted = self._drain_restores(allow_preempt)
+        picked = self._pick_continuous(eng.free_slot_count())
+        failures: List[Request] = []
+        if picked:
+            t0 = time.perf_counter() - self._t0
+            try:
+                flags = eng.try_admit_batch(picked)
+            except InjectedFault:
+                self.faults_survived += 1
+                flags = [False] * len(picked)
+            t1 = time.perf_counter() - self._t0
+            for req, ok in zip(picked, flags):
+                if ok:
+                    admitted += 1
+                    self._attempts.pop(id(req), None)
+                    self._backoff.pop(id(req), None)
+                    slot = self._slot_of[req.tenant]
+                    self.admission_timeline.append(TenantTimeline(
+                        vdev=slot, pdev=0, slot=slot, transfer_start=t0,
+                        transfer_end=t1, compute_start=t1, compute_end=t1))
+                else:
+                    failures.append(req)
+            if (failures and allow_preempt and self.preemption
+                    and eng.can_preempt):
+                extra, failures = self._preempt_for(failures)
+                admitted += extra
+            # ordinary pool pressure (anything live or just admitted) will
+            # free pages: plain requeue, exactly the pre-overload path.
+            # A hopeless failure — nothing in flight, nothing admitted,
+            # nothing restorable — is the old unrecoverable-raise
+            # condition: count it against the bounded retry budget instead
+            hopeless = (admitted == 0 and eng.active_count() == 0
+                        and self._cont_inflight is None
+                        and not self._restore_q)
+            still: List[Request] = []
+            for req in failures:
+                if not hopeless:
+                    still.append(req)
+                    continue
+                n = self._attempts.get(id(req), 0) + 1
+                if n > self.admission_retry_limit:
+                    self._reject(req)
+                    continue
+                self._attempts[id(req)] = n
+                self._backoff[id(req)] = self._adm_clock + min(
+                    1 << (n - 1), 16)
+                still.append(req)
+            for req in reversed(still):
                 self.queues[req.tenant].appendleft(req)
                 # the pick didn't result in service: un-mark the tenant so
                 # a straggler whose admission failed keeps its priority for
                 # the rest of the round instead of being demoted
                 self._round_served.discard(req.tenant)
+        elif (allow_preempt and self.preemption and eng.can_preempt
+                and eng.free_slot_count() == 0):
+            # slot exhaustion (nothing pickable): a waiting request of a
+            # strictly higher tier than some live row still preempts —
+            # swapping the victim frees its slot and its private pages
+            heads = [q[0] for q in self.queues.values() if q]
+            if heads:
+                best = min(heads, key=lambda r: (
+                    self._prio(r), self._deadline(r), r.arrival_s))
+                if self._victim_slot(self._prio(best)) is not None:
+                    self.queues[best.tenant].popleft()
+                    extra, remaining = self._preempt_for([best])
+                    admitted += extra
+                    for req in remaining:
+                        self.queues[req.tenant].appendleft(req)
+        starved = (eng.free_slot_count() == 0
+                   and any(self.queues.values()))
+        self._admission_blocked = bool(failures or self._restore_q
+                                       or starved)
         return admitted
 
     def _dispatch_round(self, asm_start: float) -> _InflightRound:
@@ -432,21 +814,60 @@ class MultiTenantScheduler:
         stamped = self._get_waiter().submit(handle.emitted, entry)
         return _InflightRound(handle, entry, stamped)
 
+    def _try_dispatch_round(self, asm0: float) -> Optional[_InflightRound]:
+        """Dispatch with the round-fault retry/limit policy: a dropped round
+        raises before any state mutation, so the slot table is untouched and
+        the round is simply re-dispatched next step; a streak past
+        ``round_fault_limit`` fails every live row terminally so the drain
+        always finishes."""
+        try:
+            fl = self._dispatch_round(asm0)
+        except InjectedFault:
+            self.faults_survived += 1
+            self._round_fault_streak += 1
+            if self._round_fault_streak > self.round_fault_limit:
+                for req in self._ceng.fail_live():
+                    self._fail(req)
+                self._round_fault_streak = 0
+            return None
+        self._round_fault_streak = 0
+        return fl
+
+    def _preemption_pressure(self) -> bool:
+        """True when the in-flight round should be force-collected so a
+        preemption can run under a quiesced engine: admission is blocked, a
+        strictly higher-priority request is waiting (queued or swapped), and
+        a lower-priority victim is live."""
+        eng = self._ceng
+        if not (self.preemption and eng.can_preempt
+                and self._admission_blocked):
+            return False
+        prios = [self._prio(q[0]) for q in self.queues.values() if q]
+        if eng.swap_store is not None:
+            prios += [eng.swap_store.record(t).priority
+                      for t in self._restore_q]
+        if not prios:
+            return False
+        p = min(prios)
+        return any(s is not None and s.priority > p for s in eng._slots)
+
     def _step_continuous(self) -> Optional[List[Response]]:
         eng = self._ceng
+        if self.heartbeat.suspect():
+            self.heartbeat_suspects += 1
         if self._cont_inflight is None:
             asm0 = time.perf_counter() - self._t0
-            if self._admit_continuous() == 0 and eng.active_count() == 0:
-                if any(self.queues.values()):
-                    # nothing in flight, so no retirement can ever free
-                    # pages: admission failure is permanent — surface it
-                    # instead of letting drain() spin on pending() forever
-                    # (run_all has the same guard)
-                    raise RuntimeError(
-                        "paged pool cannot admit any queued request (pool "
-                        "too small for the head request)")
-                return None
-            self._cont_inflight = self._dispatch_round(asm0)
+            admitted = self._admit_continuous(
+                allow_preempt=self.preemption)
+            if admitted == 0 and eng.active_count() == 0:
+                # nothing in flight and nothing admitted: queued heads are
+                # in bounded retry/backoff (terminally REJECTED past the
+                # budget — never the PR-5 unrecoverable raise), so drain()
+                # always makes progress; surface any terminal outcomes
+                return self._pop_terminal() or None
+            self._cont_inflight = self._try_dispatch_round(asm0)
+            if self._cont_inflight is None:      # injected round drop
+                return self._pop_terminal() or None
         cur = self._cont_inflight
         # retire-before-dispatch fast path: when round k's emissions have
         # already landed there is nothing to pipeline under — harvest and
@@ -454,12 +875,18 @@ class MultiTenantScheduler:
         # to this step's admissions and round k+1 never carries them as
         # masked lanes (the PR-3 one-round retirement lag)
         res = eng.collect(cur.handle) if cur.handle.ready() else None
+        if res is None and self._preemption_pressure():
+            # preemption must run against a quiesced engine: force-collect
+            # round k now, trading one round of pipelining for the
+            # high-priority admission
+            res = eng.collect(cur.handle)
         # overlap point: the next round's admissions (host assembly, prefill
         # + KV-scatter enqueue) and its dispatch land here, while round k
         # still occupies the device — rows that finish in round k ride as
         # masked lanes in round k+1 only when round k is still in flight
         asm0 = time.perf_counter() - self._t0
-        admitted = self._admit_continuous()
+        admitted = self._admit_continuous(
+            allow_preempt=self.preemption and res is not None)
         # pipeline round k+1 only if it will have live rows: fresh
         # admissions, or a current row whose budget outlasts round k (when
         # round k was already collected above, live_after(0) is exactly
@@ -468,10 +895,11 @@ class MultiTenantScheduler:
         # the drain would end on a dispatched-but-never-collected all-masked
         # round, wasting a device round and skewing the occupancy counters
         live = eng.live_after(0 if res is not None else eng.inner_steps)
-        self._cont_inflight = (self._dispatch_round(asm0)
+        self._cont_inflight = (self._try_dispatch_round(asm0)
                                if admitted or live else None)
         if res is None:
             res = eng.collect(cur.handle)
+        self.heartbeat.beat()                    # round k landed
         cur.stamped.wait()
         cur.entry.compute_start = max(cur.entry.compute_start,
                                       min(self._last_ready,
@@ -479,7 +907,8 @@ class MultiTenantScheduler:
         self._last_ready = cur.entry.compute_end
         self.timeline.append(cur.entry)
         # busy attribution: the round's device window split across tenants
-        # by live row-steps (masked lanes bill nobody)
+        # by live row-steps (masked lanes bill nobody); the same row-steps
+        # feed the fair-share admission order
         busy = cur.entry.compute_end - cur.entry.compute_start
         total_steps = int(res.active_steps.sum())
         if total_steps > 0:
@@ -489,18 +918,23 @@ class MultiTenantScheduler:
                 share = busy * float(res.active_steps[c]) / total_steps
                 self.stats[req.tenant]["busy_s"] += share
                 self._row_busy[c] += share
+                self._tenant_steps[req.tenant] += int(res.active_steps[c])
         done_abs = self._t0 + cur.entry.compute_end
         responses: List[Response] = []
-        for req, tokens, c in res.finished:
+        for (req, tokens, c), srec in zip(res.finished, res.retired):
             st = self.stats[req.tenant]
             st["requests"] += 1
             st["tokens"] += tokens.size
             row_busy = self._row_busy.pop(c, 0.0)
             self._note_batch_time(req.tenant, row_busy)
             self.detector.update({self._slot_of[req.tenant]: row_busy})
-            responses.append(Response(req.tenant, tokens,
-                                      done_abs - req.arrival_s, 1))
-        return responses
+            ttft = (None if srec.t_first is None
+                    else srec.t_first - req.arrival_s)
+            responses.append(Response(
+                req.tenant, tokens, done_abs - req.arrival_s, 1,
+                ttft_s=ttft, priority=self._prio(req),
+                preemptions=srec.preemptions))
+        return self._pop_terminal(responses)
 
     # ------------------------------------------------------------------
     # Blocking schedule (A/B baseline): generate() per slot

@@ -1,0 +1,155 @@
+"""Host-tier KV swap store: the preemption data plane (swap-out / swap-in).
+
+When a high-priority request arrives and the paged pool is full, the
+scheduler preempts a low-priority victim: the engine snapshots the victim's
+page blocks (K/V per attention sublayer + the position rows) and its entire
+per-slot decode state to the host, frees the device pages through the
+ordinary allocator accounting, and parks a :class:`SwapRecord` here.  This
+module is the host side of that tiering:
+
+* **pinned host store** — records live in plain numpy buffers (the
+  process-level analogue of pinned host memory: no device residency, ready
+  to stage back at full link bandwidth).  Only the victim's *private*
+  blocks are uniquely held here — shared prefix pages stay device-resident
+  under their other readers (the allocator never evicts a shared page from
+  under a sequence) — but the snapshot covers every block, so restore never
+  depends on what happened to the trie while the victim was out.
+* **staged swap-in** — restoration stages a record's arrays back through
+  :class:`repro.core.transfer.StagingEngine` in **sequential** mode, the
+  paper's winning host->device strategy (§V-D1: one transfer at a time at
+  full bandwidth, overlapping the already-dispatched compute).
+  :meth:`prefetch` enqueues the asynchronous ``device_put`` *ahead of*
+  re-admission, so by the time a slot frees up the pages are typically
+  already device-resident and :meth:`fetch` only has to block on the tail.
+* **fault injection** — a :class:`repro.distributed.fault.FaultPlane` can
+  poison reads: :meth:`fetch` then raises
+  :class:`~repro.distributed.fault.InjectedFault` *before* handing the
+  staged copy to the restore jit and drops the (possibly corrupt) staged
+  buffers.  The host-side record itself is never touched by a poisoned
+  read, so a retry re-stages the intact copy — the scheduler's retry/limit
+  policy decides whether the request survives.
+
+Conservation: :meth:`pages` is the store's total private-block count, which
+:meth:`repro.serving.kvcache.PagedKVCache.assert_conserved` checks against
+the allocator's ``swapped_pages`` ledger (``host_pages=store.pages()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Set
+
+import numpy as np
+
+from repro.core.tenancy import TenancyConfig, TenantTask, VirtualDevicePool
+from repro.core.transfer import StagedChunk, StagingEngine
+
+
+@dataclasses.dataclass
+class SwapRecord:
+    """Everything needed to resume a preempted request token-exactly.
+
+    The decode step reads nothing but (page content, position rows, the
+    slot's page-table row, and the per-slot scalars below), and the PRNG
+    schedule is ``fold_in(key, lstep)`` per emitted token — so restoring
+    these bitwise and re-pointing the page table at pages holding the
+    snapshot content makes the remaining decode indistinguishable from an
+    uninterrupted run.
+    """
+    req: Any                        # the preempted request object
+    priority: int
+    target: int                     # total token budget
+    temp: float
+    top_k: int
+    bucket: int
+    ring: int
+    tokens: List[int]               # collected so far (resume appends)
+    chain_keys: List[bytes]         # prefix-trie keys of the prompt blocks
+    written: Set[int]               # blocks the decode ring already wrote
+    pos: int                        # per-slot scalars, read off the device
+    remaining: int                  # at preemption time (bitwise resume)
+    lstep: int
+    key: np.ndarray                 # (2,) uint32 PRNG key
+    logits: np.ndarray              # (V,) f32 last logits row
+    host_kv: Dict[str, Dict[str, np.ndarray]]  # sub -> k/v, zero-padded to
+    #                                 (S, max_blocks, P, H, D) — fixed width
+    #                                 so the restore jit traces once
+    host_pos: np.ndarray            # (max_blocks, P) int32 position rows
+    n_private: int                  # blocks uniquely held by this record
+    preemptions: int = 1            # times this request has been swapped
+    t_first: Optional[float] = None  # first-token stamp (TTFT survives swap)
+
+
+class HostSwapStore:
+    """Ticketed host-side store of preempted requests' KV + decode state."""
+
+    def __init__(self, staging: Optional[StagingEngine] = None,
+                 fault_plane: Optional[Any] = None):
+        if staging is None:
+            # sequential mode: the paper's winner for host->device staging
+            staging = StagingEngine(
+                VirtualDevicePool(TenancyConfig(1, 1, "sequential")))
+        self.staging = staging
+        self.fault_plane = fault_plane
+        self._records: Dict[int, SwapRecord] = {}
+        self._staged: Dict[int, StagedChunk] = {}
+        self._next_ticket = 0
+        self.puts = 0
+        self.fetches = 0
+        self.poisoned_reads = 0
+
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def pages(self) -> int:
+        """Total private page blocks currently held by the host tier (the
+        store half of the two-tier conservation audit)."""
+        return sum(r.n_private for r in self._records.values())
+
+    def tickets(self) -> List[int]:
+        return sorted(self._records)
+
+    def record(self, ticket: int) -> SwapRecord:
+        return self._records[ticket]
+
+    # ------------------------------------------------------------------
+    def put(self, rec: SwapRecord) -> int:
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._records[ticket] = rec
+        self.puts += 1
+        return ticket
+
+    def prefetch(self, ticket: int) -> None:
+        """Enqueue the record's host->device transfer (asynchronous: returns
+        immediately).  Idempotent; called ahead of re-admission so the
+        staged copy overlaps whatever round is on the device."""
+        if ticket in self._staged:
+            return
+        rec = self._records[ticket]
+        task = TenantTask(vdev=0, pdev=0, slot=0, start=0, stop=1)
+        self._staged[ticket] = self.staging.put(
+            task, {"kv": rec.host_kv, "pos": rec.host_pos})
+
+    def fetch(self, ticket: int) -> Any:
+        """Block until the record's arrays are device-resident and return
+        the device pytree ``{"kv": ..., "pos": ...}``.  A poisoned read
+        (fault plane) raises before the copy is handed out and discards the
+        staged buffers — the host record stays intact for the retry."""
+        if self.fault_plane is not None:
+            try:
+                self.fault_plane.swap_read_fault()
+            except Exception:
+                self.poisoned_reads += 1
+                self._staged.pop(ticket, None)
+                raise
+        self.prefetch(ticket)
+        chunk = self.staging.wait(self._staged.pop(ticket))
+        self.fetches += 1
+        return chunk.arrays
+
+    def pop(self, ticket: int) -> SwapRecord:
+        """Remove a record (successful restore, or terminal drop after a
+        poisoned-read retry budget is exhausted)."""
+        self._staged.pop(ticket, None)
+        return self._records.pop(ticket)

@@ -421,13 +421,14 @@ def test_exact_fit_pool_admits_under_refined_reserve(engine, rng):
     assert ceng.kv.free_pages() + ceng.kv.cached_pages() == 2
 
 
-def test_unadmittable_request_raises_not_spins(engine, rng, monkeypatch):
-    """Persistent admission failure with nothing in flight must raise from
-    both drain paths instead of busy-looping on pending() forever.  Since
-    the sharer-count reserve, a legal request against an idle pool always
+def test_unadmittable_request_rejects_not_spins(engine, rng, monkeypatch):
+    """Persistent admission failure with nothing in flight must terminate in
+    an explicit REJECTED outcome from both drain paths — never an exception
+    (the PR-5 contract) and never a busy-loop on pending().  Since the
+    sharer-count reserve, a legal request against an idle pool always
     admits (and the constructor rejects pools smaller than one full
-    sequence), so the guard is exercised by a simulated page-pressure
-    failure."""
+    sequence), so the bounded retry is exercised by a simulated
+    page-pressure failure."""
     cfg = engine.cfg
     with pytest.raises(ValueError, match="cannot hold"):
         ContinuousBatchingEngine(engine, capacity=2, page_size=8,
@@ -438,15 +439,17 @@ def test_unadmittable_request_raises_not_spins(engine, rng, monkeypatch):
                         lambda reqs: [False] * len(reqs))
     req = Request("a", rng.integers(1, cfg.vocab_size, 16).astype(np.int32),
                   max_new_tokens=4)
-    with pytest.raises(RuntimeError, match="cannot admit"):
-        ceng.run_all([req])
+    assert ceng.run_all([req]) == []
+    assert ceng.rejected == [req]
     sched = MultiTenantScheduler(engine, mode="continuous",
                                  continuous=dict(kwargs))
     monkeypatch.setattr(sched.continuous_engine, "try_admit_batch",
                         lambda reqs: [False] * len(reqs))
     sched.submit(Request("a", req.prompt.copy(), 4))
-    with pytest.raises(RuntimeError, match="cannot admit"):
-        sched.drain()
+    out = sched.drain()
+    assert [r.outcome for r in out] == ["rejected"]
+    assert out[0].tokens.size == 0
+    assert sched.stats["a"]["rejected"] == 1
 
 
 def test_enc_dec_rejected():

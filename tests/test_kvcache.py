@@ -9,11 +9,15 @@ the copy-on-write reserve, so its invariants are checked exhaustively here:
 * conservation under unshared admit/retire fuzz — the literal PR-3 contract
   ``free_pages() + sum(owned) == num_pages - RESERVED``;
 * a Hypothesis property suite over random interleavings of shared/unshared
-  admission, decode writes (CoW forks / pristine preserves / in-place) and
-  retirement: pages are never leaked or double-freed, every page's refcount
-  equals the number of page-table references to it, the trie stays
-  consistent, and the fork reserve never exceeds the available pool (so a
-  mandatory copy-on-write fork can never fail).
+  admission, decode writes (CoW forks / pristine preserves / in-place),
+  retirement and preemption swap cycles (swap-out to the host tier,
+  restore, terminal drop): pages are never leaked or double-freed, every
+  page's refcount equals the number of page-table references to it, the
+  trie stays consistent, the fork reserve never exceeds the available pool
+  (so a mandatory copy-on-write fork can never fail), and the two-tier
+  ledger balances after every operation — ``assert_conserved(host_pages=
+  ...)`` checks the allocator's ``swapped_pages`` against the model's own
+  host-record tally after each swap cycle.
 """
 import numpy as np
 import pytest
@@ -117,6 +121,12 @@ class _Model:
         self.capacity = capacity
         # slot -> (keys, set of not-yet-written will_write blocks)
         self.live = {}
+        # host-tier swap records: private-block counts, mirroring what the
+        # engine's preempt() parks in the HostSwapStore
+        self.host = []
+
+    def host_pages(self):
+        return sum(self.host)
 
     def admit(self, slot, prompt, max_new, share):
         kv = self.kv
@@ -185,43 +195,71 @@ class _Model:
             self.kv.free(slot)
             del self.live[slot]
 
+    def swap_out(self, slot):
+        """Preempt a live slot: only its private suffix (ref-1, unshared,
+        unregistered pages) moves to the host tier; shared/pristine pages
+        go through the ordinary free() cache/refcount paths."""
+        if slot not in self.live:
+            return
+        n = len(self.kv.private_blocks(slot))
+        self.kv.swap_out(slot, n)
+        del self.live[slot]
+        self.host.append(n)
+
+    def swap_back(self, restored):
+        """Close one host record: restored (the engine re-admitted it via
+        alloc_shared, exercised by the admit ops) or terminally dropped
+        after a poisoned-read retry budget."""
+        if self.host:
+            self.kv.swap_in(self.host.pop(), restored=restored)
+
 
 def _walk(m: _Model, ops) -> None:
     """Drive a model through (op, slot, *params) tuples, auditing the
-    allocator after every step, then drain and check the terminal state:
-    every non-reserved page free or cached, zero outstanding reserve."""
+    allocator — both tiers — after every step, then drain and check the
+    terminal state: every non-reserved page free or cached, zero
+    outstanding reserve, empty host tier."""
     for op, slot, *params in ops:
         if op == "admit":
             prompt_idx, max_new, share = params
             m.admit(slot, PROMPTS[prompt_idx], max_new=max_new, share=share)
         elif op == "write":
             m.write(slot, preserve_mode=params[0])
+        elif op == "swap":
+            m.swap_out(slot)
+        elif op == "swapback":
+            m.swap_back(restored=params[0])
         else:
             m.retire(slot)
-        m.kv.assert_conserved()
+        m.kv.assert_conserved(host_pages=m.host_pages())
     for slot in sorted(m.live):
         m.retire(slot)
-    m.kv.assert_conserved()
+    while m.host:
+        m.swap_back(restored=False)
+    m.kv.assert_conserved(host_pages=0)
     kv = m.kv
     assert kv.free_pages() + kv.cached_pages() == usable(kv)
     assert kv.cow_reserve == 0
+    assert kv.swapped_pages == 0
 
 
 def test_sharing_allocator_fuzz():
     """Seeded-random interleavings of shared/unshared admission,
     pending-block writes (mandatory CoW forks, pristine preserves under
-    all three policies, in-place) and retirement: never leak, never
+    all three policies, in-place), retirement and preemption swap cycles
+    (out to the host tier, restored or dropped back): never leak, never
     double-free, refcounts always equal the page-table references, the
-    sharer-count reserve always covered and admission decisions exactly
+    sharer-count reserve always covered, admission decisions exactly
     matching the refined criterion (the _Model re-derives it
-    independently)."""
+    independently) and the two-tier ledger balanced after every op."""
     rng = np.random.default_rng(7)
+    ops_menu = ("admit", "write", "retire", "swap", "swapback")
     for _ in range(150):
         m = _Model(PagedKVCache.RESERVED + int(rng.integers(6, 21)),
                    capacity=int(rng.integers(2, 7)))
         ops = []
         for _ in range(int(rng.integers(5, 41))):
-            op = ("admit", "write", "retire")[int(rng.integers(0, 3))]
+            op = ops_menu[int(rng.integers(0, len(ops_menu)))]
             slot = int(rng.integers(0, m.capacity))
             if op == "admit":
                 ops.append((op, slot, int(rng.integers(0, len(PROMPTS))),
@@ -229,6 +267,8 @@ def test_sharing_allocator_fuzz():
                             bool(rng.integers(0, 2))))
             elif op == "write":
                 ops.append((op, slot, int(rng.integers(0, 3))))
+            elif op == "swapback":
+                ops.append((op, slot, bool(rng.integers(0, 2))))
             else:
                 ops.append((op, slot))
         _walk(m, ops)
@@ -246,7 +286,8 @@ def test_sharing_allocator_property():
                    capacity=data.draw(st.integers(2, 6)))
         ops = []
         for _ in range(data.draw(st.integers(5, 40))):
-            op = data.draw(st.sampled_from(("admit", "write", "retire")))
+            op = data.draw(st.sampled_from(
+                ("admit", "write", "retire", "swap", "swapback")))
             slot = data.draw(st.integers(0, m.capacity - 1))
             if op == "admit":
                 ops.append((op, slot,
@@ -255,6 +296,8 @@ def test_sharing_allocator_property():
                             data.draw(st.booleans())))
             elif op == "write":
                 ops.append((op, slot, data.draw(st.integers(0, 2))))
+            elif op == "swapback":
+                ops.append((op, slot, data.draw(st.booleans())))
             else:
                 ops.append((op, slot))
         _walk(m, ops)

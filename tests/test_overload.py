@@ -1,0 +1,374 @@
+"""Overload survival: priority admission, preemption/swap, faults, shedding.
+
+The PR-6 robustness contracts on top of the continuous-batching stack:
+
+* **token-exact preemption** — a request swapped out to the host tier and
+  restored later decodes bitwise identically to an uninterrupted run:
+  greedy and seeded sampling, pure attention and sliding-window attention,
+  including a victim holding trie-shared (CoW) prefix pages;
+* **SSM rows are never victims** — slot-table SSM state has no paged
+  representation to swap, so ``can_preempt`` is off for those families and
+  priority traffic still completes without preemption;
+* **every request terminates** — a 2x-oversubscribed burst, load shedding
+  past ``max_backlog``, and injected faults (dropped rounds, stalled
+  admissions, poisoned swap reads) all end in exactly one explicit
+  terminal outcome per request — completed, rejected or failed — never an
+  exception out of ``drain()`` and never a hang;
+* **two-tier conservation** — ``assert_conserved(host_pages=...)`` holds
+  at every drain, including after terminal drops of poisoned records;
+* the trace harness (``benchmarks/overload.py``) is deterministic and
+  drives the scheduler to full termination.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.distributed.fault import FaultPlane
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.multitenant import MultiTenantScheduler, Request
+
+
+def _make_engine(arch: str) -> ServingEngine:
+    cfg = get_config(arch).reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    return ServingEngine(cfg, params)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    return _make_engine("internlm2-1.8b")
+
+
+@pytest.fixture(scope="module")
+def pceng(engine):
+    # capacity 2 with ample pages: the *slot table* is the contended
+    # resource, so a tier-0 arrival against a full table exercises the
+    # slot-exhaustion preemption path (not ordinary page-pressure waits)
+    return ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    num_pages=24, inner_steps=4,
+                                    max_prompt_len=16)
+
+
+def _oracle(engine, ceng, req):
+    b = ceng.bucket_len(req.prompt.size)
+    padded = np.zeros((1, b), np.int32)
+    padded[0, b - req.prompt.size:] = req.prompt
+    return engine.generate(padded, max_new_tokens=req.max_new_tokens,
+                           seed=req.seed).tokens[0]
+
+
+def _sched(engine, ceng, **kw):
+    kw.setdefault("preemption", True)
+    return MultiTenantScheduler(engine, mode="continuous",
+                                continuous_engine=ceng, **kw)
+
+
+def _clone(req: Request) -> Request:
+    return Request(req.tenant, req.prompt.copy(), req.max_new_tokens,
+                   temperature=req.temperature, top_k=req.top_k,
+                   seed=req.seed, priority=req.priority)
+
+
+def _preempt_mix(engine, ceng, reqs_lo, req_hi, **sched_kw):
+    """Fill every slot with long tier-1 rows, dispatch a round, then land a
+    tier-0 arrival against the full slot table.  Asserts a preemption and a
+    restore actually happened plus two-tier conservation at drain; returns
+    responses keyed by tenant."""
+    sched = _sched(engine, ceng, **sched_kw)
+    pre0, res0 = ceng.preemptions, ceng.restores
+    for r in reqs_lo:
+        sched.submit(r)
+    sched.step()
+    sched.submit(req_hi)
+    out = sched.drain()
+    assert ceng.preemptions > pre0
+    assert ceng.restores > res0
+    assert len(ceng.swap_store) == 0
+    ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages())
+    assert len(out) == len(reqs_lo) + 1
+    return sched, {r.tenant: r for r in out}
+
+
+def test_preempt_restore_token_exact_greedy(engine, pceng, rng):
+    """The tentpole exactness contract: the swapped-out victim's restored
+    decode is bitwise identical to blocking generate on the same prompt —
+    indistinguishable from never having been preempted."""
+    cfg = engine.cfg
+    los = [Request(f"lo{i}", rng.integers(1, cfg.vocab_size,
+                                          12).astype(np.int32),
+                   max_new_tokens=40, priority=1) for i in range(2)]
+    hi = Request("hi", rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=4, priority=0)
+    sched, by_tenant = _preempt_mix(engine, pceng, los, hi)
+    for req in [*los, hi]:
+        resp = by_tenant[req.tenant]
+        assert resp.outcome == "completed"
+        assert resp.ttft_s is not None and resp.ttft_s >= 0.0
+        np.testing.assert_array_equal(_oracle(engine, pceng, req),
+                                      resp.tokens)
+    # the victim's Response records its swap count; somebody was swapped
+    assert sum(r.preemptions for r in by_tenant.values()) >= 1
+    assert sum(s["preempted"] for s in sched.stats.values()) >= 1
+    # fixed-width snapshots: the restore jit traces once, ever
+    assert pceng.restore_traces == 1
+
+
+def test_preempt_restore_token_exact_seeded_sampling(engine, pceng, rng):
+    """Seeded temperature sampling across a swap cycle: the PRNG schedule
+    is fold_in(key, lstep) per emitted token and lstep is restored bitwise,
+    so the sampled continuation must match an uninterrupted run of the
+    same request on the same engine."""
+    cfg = engine.cfg
+    los = [Request(f"slo{i}", rng.integers(1, cfg.vocab_size,
+                                           12).astype(np.int32),
+                   max_new_tokens=36, priority=1, temperature=1.1,
+                   top_k=20, seed=5 + i) for i in range(2)]
+    hi = Request("shi", rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=4, priority=0, temperature=0.9, seed=11)
+    # uninterrupted reference first (one request at a time: no contention,
+    # no preemption possible), on the same engine + jit caches
+    want = {r.tenant: t for c in [*los, hi]
+            for r, t in pceng.run_all([_clone(c)])}
+    _, by_tenant = _preempt_mix(engine, pceng, los, hi)
+    for req in [*los, hi]:
+        resp = by_tenant[req.tenant]
+        assert resp.outcome == "completed"
+        np.testing.assert_array_equal(want[req.tenant], resp.tokens)
+
+
+def test_preempt_victim_with_shared_prefix_token_exact(engine, pceng, rng):
+    """Preempting a row whose prompt blocks are trie-shared with a live
+    neighbour: only the private suffix moves to the host tier (the shared
+    pages stay device-resident under the other reader), and both rows —
+    victim and survivor — stay token-exact."""
+    cfg = engine.cfg
+    sys_prompt = rng.integers(1, cfg.vocab_size, 8).astype(np.int32)
+    mk = lambda t: Request(t, np.concatenate(
+        [sys_prompt, rng.integers(1, cfg.vocab_size, 4).astype(np.int32)]),
+        max_new_tokens=40, priority=1)
+    los = [mk("cow0"), mk("cow1")]
+    hi = Request("cowhi", rng.integers(1, cfg.vocab_size,
+                                       8).astype(np.int32),
+                 max_new_tokens=4, priority=0)
+    shared0 = pceng.kv.pages_shared
+    _, by_tenant = _preempt_mix(engine, pceng, los, hi)
+    assert pceng.kv.pages_shared > shared0        # the prefix actually shared
+    for req in [*los, hi]:
+        resp = by_tenant[req.tenant]
+        assert resp.outcome == "completed"
+        np.testing.assert_array_equal(_oracle(engine, pceng, req),
+                                      resp.tokens)
+
+
+def test_sliding_window_preempt_restore_token_exact(rng):
+    """Sliding-window attention family: the decode ring wraps inside the
+    window, so the swap snapshot must carry ring-wrapped block contents and
+    positions exactly.  Same contract, different cache geometry."""
+    engine = _make_engine("h2o-danube-1.8b")
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    num_pages=24, inner_steps=4,
+                                    max_prompt_len=16)
+    assert ceng.can_preempt
+    cfg = engine.cfg
+    los = [Request(f"wlo{i}", rng.integers(1, cfg.vocab_size,
+                                           12).astype(np.int32),
+                   max_new_tokens=28, priority=1) for i in range(2)]
+    hi = Request("whi", rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=3, priority=0)
+    _, by_tenant = _preempt_mix(engine, ceng, los, hi)
+    for req in [*los, hi]:
+        resp = by_tenant[req.tenant]
+        assert resp.outcome == "completed"
+        np.testing.assert_array_equal(_oracle(engine, ceng, req),
+                                      resp.tokens)
+
+
+def test_ssm_rows_never_victims(rng):
+    """Pure-SSM family: slot-table SSM state has no paged representation,
+    so preemption is structurally off — a priority arrival waits for a slot
+    instead of evicting one, and everything still completes exactly."""
+    engine = _make_engine("mamba2-2.7b")
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=3, max_prompt_len=16)
+    assert not ceng.can_preempt
+    cfg = engine.cfg
+    sched = _sched(engine, ceng)
+    los = [Request(f"mlo{i}", rng.integers(1, cfg.vocab_size,
+                                           9).astype(np.int32),
+                   max_new_tokens=12, priority=1) for i in range(2)]
+    hi = Request("mhi", rng.integers(1, cfg.vocab_size, 6).astype(np.int32),
+                 max_new_tokens=3, priority=0)
+    for r in los:
+        sched.submit(r)
+    sched.step()
+    sched.submit(hi)
+    out = sched.drain()
+    assert ceng.preemptions == 0
+    assert sum(s["preempted"] for s in sched.stats.values()) == 0
+    assert len(out) == 3
+    for resp in out:
+        assert resp.outcome == "completed"
+    by_tenant = {r.tenant: r for r in out}
+    for req in [*los, hi]:
+        np.testing.assert_array_equal(_oracle(engine, ceng, req),
+                                      by_tenant[req.tenant].tokens)
+
+
+def test_burst_2x_oversubscribed_terminates(engine, pceng, rng):
+    """The pool-exhaustion regression: a burst demanding ~2x the page pool
+    (and 4x the slot table) drains without an exception, every request in
+    exactly one terminal state and the two-tier ledger balanced."""
+    cfg = engine.cfg
+    reqs = [Request(f"b{i}", rng.integers(1, cfg.vocab_size,
+                                          12).astype(np.int32),
+                    max_new_tokens=10, priority=0 if i % 4 == 3 else 1)
+            for i in range(24)]
+    # 2x oversubscribed by pages (24 rings x 2 blocks vs a 24-page pool),
+    # 12x by slots
+    demand = sum(pceng.kv.blocks_for(pceng._ring_len(
+        pceng.bucket_len(r.prompt.size))) for r in reqs)
+    assert demand >= 2 * pceng.kv.num_pages
+    sched = _sched(engine, pceng)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.drain()
+    assert len(out) == len(reqs)
+    assert {r.outcome for r in out} <= {"completed", "rejected", "failed"}
+    assert all(r.outcome == "completed" for r in out)   # pool cycles fine
+    assert sum(r.tokens.size for r in out) == \
+        sum(r.max_new_tokens for r in reqs)
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_load_shed_past_max_backlog(engine, pceng, rng):
+    """Backlog beyond the SLO bound sheds the lowest-priority queued work
+    with an explicit REJECTED outcome (never silently dropped), keeping
+    tier-0 requests; shed counts land in per-tenant stats."""
+    cfg = engine.cfg
+    reqs = [Request(f"s{i}", rng.integers(1, cfg.vocab_size,
+                                          8).astype(np.int32),
+                    max_new_tokens=4, priority=0 if i == 2 else 1)
+            for i in range(6)]
+    sched = _sched(engine, pceng, max_backlog=2)
+    for r in reqs:
+        sched.submit(r)
+    out = sched.drain()
+    assert len(out) == 6
+    shed = sum(s["shed"] for s in sched.stats.values())
+    assert shed == 4
+    by_tenant = {r.tenant: r for r in out}
+    assert by_tenant["s2"].outcome == "completed"      # tier 0 never shed
+    assert sum(r.outcome == "rejected" for r in out) == 4
+    for resp in out:
+        if resp.outcome == "rejected":
+            assert resp.tokens.size == 0
+            assert resp.priority == 1
+
+
+def test_fault_injection_survives_to_completion(engine, pceng, rng):
+    """Dropped rounds and stalled admissions below the failure limits are
+    retried transparently: every request still completes token-exactly and
+    the survived-fault count matches the injector's ledger."""
+    cfg = engine.cfg
+    plane = FaultPlane(drop_round_every=4, stall_admission_every=3)
+    pceng.fault_plane = plane
+    try:
+        sched = _sched(engine, pceng)
+        reqs = [Request(f"f{i}", rng.integers(1, cfg.vocab_size,
+                                              10).astype(np.int32),
+                        max_new_tokens=9, priority=i % 2)
+                for i in range(4)]
+        for r in reqs:
+            sched.submit(r)
+        out = sched.drain()
+    finally:
+        pceng.fault_plane = None
+    assert len(out) == 4
+    assert all(r.outcome == "completed" for r in out)
+    assert plane.total_injected() > 0
+    assert sched.faults_survived == plane.total_injected()
+    by_tenant = {r.tenant: r for r in out}
+    for req in reqs:
+        np.testing.assert_array_equal(_oracle(engine, pceng, req),
+                                      by_tenant[req.tenant].tokens)
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_poisoned_swap_read_fails_terminally(engine, pceng, rng):
+    """A swap record whose every read is poisoned exhausts the bounded
+    retry budget and fails *that request only* — explicit FAILED outcome,
+    host record dropped, everyone else completes, ledger balanced."""
+    cfg = engine.cfg
+    plane = FaultPlane(poison_swap_every=1)       # every fetch poisoned
+    pceng.swap_store.fault_plane = plane
+    drops0 = pceng.kv.swap_drops
+    try:
+        los = [Request(f"p{i}", rng.integers(1, cfg.vocab_size,
+                                             12).astype(np.int32),
+                       max_new_tokens=28, priority=1) for i in range(2)]
+        hi = Request("phi", rng.integers(1, cfg.vocab_size,
+                                         8).astype(np.int32),
+                     max_new_tokens=4, priority=0)
+        sched = _sched(engine, pceng)
+        for r in los:
+            sched.submit(r)
+        sched.step()
+        sched.submit(hi)
+        out = sched.drain()
+    finally:
+        pceng.swap_store.fault_plane = None
+    assert len(out) == 3
+    outcomes = sorted(r.outcome for r in out)
+    assert outcomes == ["completed", "completed", "failed"]
+    failed, = [r for r in out if r.outcome == "failed"]
+    assert failed.tokens.size == 0
+    assert failed.preemptions >= 1
+    assert pceng.kv.swap_drops > drops0
+    assert len(pceng.swap_store) == 0
+    assert sched.faults_survived > 0
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_heartbeat_suspects_counted(engine, pceng, rng):
+    """A zero-timeout heartbeat flags every scheduler step: the monitor is
+    actually wired into the continuous round loop (suspects counted), and
+    progress continues regardless — suspicion is observability, not a
+    kill switch."""
+    sched = _sched(engine, pceng, heartbeat_timeout_s=0.0)
+    sched.submit(Request("h", rng.integers(1, engine.cfg.vocab_size,
+                                           8).astype(np.int32),
+                         max_new_tokens=4))
+    out = sched.drain()
+    assert [r.outcome for r in out] == ["completed"]
+    assert sched.heartbeat_suspects > 0
+    assert sched.heartbeat.missed == sched.heartbeat_suspects
+
+
+def test_harness_trace_deterministic_and_drives(engine, pceng):
+    """benchmarks/overload.py: identical seeds give identical traces, and
+    the closed-loop driver runs a mixed-priority trace to full termination
+    through the real scheduler."""
+    from benchmarks.overload import drive, make_trace
+
+    a = make_trace(6, seed=3, mean_gap_s=0.01, vocab=engine.cfg.vocab_size,
+                   hi_every=3, lo_steps=(6, 12))
+    b = make_trace(6, seed=3, mean_gap_s=0.01, vocab=engine.cfg.vocab_size,
+                   hi_every=3, lo_steps=(6, 12))
+    assert len(a) == 6
+    for sa, sb in zip(a, b):
+        assert sa["arrival"] == sb["arrival"]
+        assert sa["priority"] == sb["priority"]
+        np.testing.assert_array_equal(sa["prompt"], sb["prompt"])
+    assert {s["priority"] for s in a} == {0, 1}
+    assert all(s["prompt"].size <= 16 for s in a)
+
+    sched = _sched(engine, pceng, max_backlog=12)
+    out = drive(sched, a, open_loop=False)
+    assert len(out) == 6
+    assert {r.outcome for r in out} <= {"completed", "rejected", "failed"}
+    assert sched.pending() == 0
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
