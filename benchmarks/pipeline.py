@@ -617,6 +617,111 @@ def bench_kernel_variants() -> List[Row]:
     return out
 
 
+_MESH_CHILD = r'''
+import dataclasses, json, os, sys, time
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8"
+                           ).strip()
+import numpy as np
+import jax
+from repro.configs import get_config
+from repro.distributed.sharding import parse_mesh, serving_sharder
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import ServingEngine
+
+# reduced() clamps to 2 KV heads; re-widen so 8 ways divide the pools
+cfg = dataclasses.replace(get_config("internlm2-1.8b").reduced(),
+                          num_heads=16, num_kv_heads=8)
+params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+rng = np.random.default_rng(0)
+
+
+class R:
+    def __init__(self, rid, prompt, n):
+        self.rid = rid
+        self.prompt = prompt
+        self.max_new_tokens = n
+        self.temperature = 0.0
+        self.top_k = 0
+        self.seed = 0
+
+
+prompts = [rng.integers(1, cfg.vocab_size, 8 + 4 * (i % 3)).astype(np.int32)
+           for i in range(8)]
+
+
+def run(sh, capacity, num_pages):
+    eng = ServingEngine(cfg, params, sh=sh)
+    ceng = ContinuousBatchingEngine(eng, capacity=capacity, page_size=8,
+                                    num_pages=num_pages, inner_steps=2,
+                                    max_prompt_len=32)
+    ceng.run_all([R(-1, prompts[0], 2)])           # warm the jit caches
+    t0 = time.perf_counter()
+    out = ceng.run_all([R(i, p, 8) for i, p in enumerate(prompts)])
+    dt = time.perf_counter() - t0
+    # completion order depends on capacity; key by request id
+    return dt, {req.rid: toks for req, toks in out}, ceng
+
+
+base_dt, base_toks, bceng = run(None, 4, 48)
+# one sharded engine instance at 2x the slots: per-device KV stays flat
+# because the pool splits 8 ways along KV heads
+mesh_dt, mesh_toks, mceng = run(serving_sharder(parse_mesh("1x8")), 8, 96)
+exact = all(np.array_equal(base_toks[i], mesh_toks[i])
+            for i in range(len(prompts)))
+name = mceng.kv.attn_subs[0]
+pool = mceng.state["caches"][name]["k"]
+shard_bytes = next(iter(pool.addressable_shards)).data.nbytes
+print(json.dumps({
+    "base_s": base_dt, "mesh_s": mesh_dt, "token_exact": bool(exact),
+    "base_capacity": 4, "mesh_capacity": 8,
+    "n_shards": len(pool.sharding.device_set),
+    "pool_bytes_full": int(pool.nbytes), "pool_bytes_shard": int(shard_bytes),
+    "decode_traces": mceng.decode_traces}))
+'''
+
+
+def bench_serving_mesh() -> List[Row]:
+    """One mesh-sharded engine instance against the single-device baseline:
+    same eight-request greedy workload, but the 1x8 engine runs 2x the slot
+    capacity while each device holds 1/8 of the KV pool.  Spawned as a
+    subprocess because the mesh needs 8 host devices and XLA_FLAGS is fixed
+    at interpreter start (the bench parent may be running on one device)."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", _MESH_CHILD], env=env,
+                          capture_output=True, text=True, timeout=900)
+    if proc.returncode != 0:
+        return [("pipeline/serving_mesh_error", float("nan"),
+                 proc.stderr.strip().splitlines()[-1][:120]
+                 if proc.stderr.strip() else "child failed")]
+    rep = json.loads(proc.stdout.strip().splitlines()[-1])
+    cap_ratio = rep["mesh_capacity"] / rep["base_capacity"]
+    shard_frac = rep["pool_bytes_shard"] / rep["pool_bytes_full"]
+    tag = (f"token_exact={rep['token_exact']};mesh=1x8;"
+           f"decode_traces={rep['decode_traces']}")
+    return [
+        ("pipeline/serving_mesh_base_cap4_drain", rep["base_s"] * 1e6,
+         f"{tag};capacity={rep['base_capacity']}"),
+        ("pipeline/serving_mesh_1x8_cap8_drain", rep["mesh_s"] * 1e6,
+         f"{tag};capacity={rep['mesh_capacity']}"),
+        ("pipeline/serving_mesh_capacity_per_engine_x", cap_ratio,
+         f"derived;slots_per_instance_vs_single_device;{tag}"),
+        ("pipeline/serving_mesh_pool_shard_fraction", shard_frac,
+         f"derived;per_device_kv_bytes/full={rep['pool_bytes_shard']}"
+         f"/{rep['pool_bytes_full']};n_shards={rep['n_shards']}"),
+    ]
+
+
 ALL = [bench_pipeline_overlap, bench_serving_overlap,
        bench_serving_continuous, bench_serving_prefix_sharing,
-       bench_paged_attention, bench_kernel_variants]
+       bench_paged_attention, bench_kernel_variants, bench_serving_mesh]

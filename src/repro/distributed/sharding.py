@@ -106,8 +106,58 @@ class Sharder:
         )
 
 
+    def extent(self, logical: Optional[str], dim: int) -> int:
+        """Number of shards the rules would split a ``dim``-sized axis into."""
+        axes = self._axes_for(logical, dim)
+        if axes is None:
+            return 1
+        return math.prod(self.mesh.shape[a] for a in axes)
+
+    def place(self, x: jax.Array, logical: Sequence[Optional[str]]) -> jax.Array:
+        """device_put onto the mesh with the resolved sharding (identity off-mesh)."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, self.spec(logical, x.shape)))
+
+
 def null_sharder() -> Sharder:
     return Sharder(None)
+
+
+# Serving shards only head-like axes.  Everything else stays replicated so the
+# only cross-shard merges are all-gathers (pure data movement) — never a psum
+# whose float reassociation would break the bitwise token-exactness contract
+# with the single-device engine.
+SERVING_RULES = {
+    "heads": ("model",),
+    "kv": ("model",),
+}
+
+
+def parse_mesh(spec: Optional[str]) -> Optional[Mesh]:
+    """Build a mesh from an ``AxB`` spec string ("1x8", "2x4", "1x1").
+
+    Two extents map to ("data", "model"); three to ("pod", "data", "model");
+    a bare integer to a 1×N ("data", "model") mesh.  ``None``/empty returns
+    None (single-device path, no mesh).
+    """
+    if not spec:
+        return None
+    extents = tuple(int(p) for p in str(spec).lower().split("x"))
+    names = {1: ("data", "model"), 2: ("data", "model"),
+             3: ("pod", "data", "model")}[len(extents)]
+    if len(extents) == 1:
+        extents = (1,) + extents
+    n_dev = math.prod(extents)
+    if n_dev > len(jax.devices()):
+        raise ValueError(
+            f"mesh {spec} needs {n_dev} devices, have {len(jax.devices())}")
+    return jax.make_mesh(extents, names)
+
+
+def serving_sharder(mesh: Optional[Mesh]) -> Sharder:
+    """Sharder for the serving stack: KV-head partitioning only."""
+    return Sharder(mesh, rules=SERVING_RULES)
 
 
 def param_shardings(sharder: Sharder, axes_tree, shapes_tree):

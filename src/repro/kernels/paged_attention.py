@@ -192,3 +192,72 @@ def paged_prefill_scatter_pallas(pool, pages, values, *,
         input_output_aliases={2: 0},     # pool (after the scalar operand)
         interpret=interpret,
     )(pages, values, pool)
+
+
+# ---------------------------------------------------------------------------
+# mesh dispatch: per-shard kernel invocations along the KV-head axis
+# ---------------------------------------------------------------------------
+# pallas_call has no GSPMD partitioning rules, so under a mesh the kernels run
+# inside shard_map.  Three shapes cover every arch in configs/:
+#   * GQA/MHA with Hkv % model-extent == 0 — pools and q both head-sharded;
+#     contiguous query-head blocks (H/n = rep·Hkv/n) land exactly on their
+#     kv-head group, so each shard is a self-contained decode and the merge
+#     is the out-spec all-gather.  No psum: bitwise with the unsharded call.
+#   * MQA (Hkv == 1) — pools replicated, q sharded on H; same all-gather.
+#   * otherwise — fully replicated specs (every device runs the whole grid).
+
+def _model_axis(sh) -> int:
+    """Extent of the "model" mesh axis under ``sh``, 1 when off-mesh."""
+    if sh is None or sh.mesh is None or "model" not in sh.mesh.axis_names:
+        return 1
+    return sh.mesh.shape["model"]
+
+
+def paged_attention_decode_sharded(q, k_pool, v_pool, pos_pool, page_table,
+                                   positions, sh, *,
+                                   window: Optional[int] = None,
+                                   interpret: bool = True):
+    """:func:`paged_attention_decode_pallas` partitioned along KV heads."""
+    if _model_axis(sh) == 1:
+        return paged_attention_decode_pallas(
+            q, k_pool, v_pool, pos_pool, page_table, positions,
+            window=window, interpret=interpret)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    H, Hkv = q.shape[1], k_pool.shape[2]
+    if sh.extent("kv", Hkv) > 1:
+        q_spec, pool_spec = P(None, "model", None), P(None, None, "model", None)
+        out_spec = P(None, "model", None)
+    elif Hkv == 1 and sh.extent("heads", H) > 1:
+        q_spec, pool_spec = P(None, "model", None), P()
+        out_spec = P(None, "model", None)
+    else:
+        q_spec = pool_spec = out_spec = P()
+    fn = shard_map(
+        functools.partial(paged_attention_decode_pallas,
+                          window=window, interpret=interpret),
+        mesh=sh.mesh,
+        in_specs=(q_spec, pool_spec, pool_spec, P(), P(), P()),
+        out_specs=out_spec, check_rep=False)
+    return fn(q, k_pool, v_pool, pos_pool, page_table, positions)
+
+
+def paged_prefill_scatter_sharded(pool, pages, values, sh, *,
+                                  interpret: bool = True):
+    """:func:`paged_prefill_scatter_pallas` partitioned along KV heads."""
+    if _model_axis(sh) == 1:
+        return paged_prefill_scatter_pallas(pool, pages, values,
+                                            interpret=interpret)
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    Hkv = pool.shape[3]
+    if sh.extent("kv", Hkv) > 1:
+        kv_spec = P(None, None, None, "model", None)
+    else:
+        kv_spec = P()
+    fn = shard_map(
+        functools.partial(paged_prefill_scatter_pallas, interpret=interpret),
+        mesh=sh.mesh,
+        in_specs=(kv_spec, P(), kv_spec),
+        out_specs=kv_spec, check_rep=False)
+    return fn(pool, pages, values)

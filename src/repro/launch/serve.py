@@ -112,6 +112,18 @@ def main(argv=None) -> int:
                          "(then latest-deadline) queued work is shed with "
                          "an explicit REJECTED outcome instead of growing "
                          "the queue (default: unbounded)")
+    ap.add_argument("--mesh", default=None, metavar="AxB",
+                    help="device mesh spec, e.g. '1x8': shard the paged KV "
+                         "pool and the fused decode along KV heads across "
+                         "the 'model' axis (B devices); page tables, "
+                         "free-list, prefix trie and refcounts stay "
+                         "host-global, so admission/prefix-sharing/CoW/"
+                         "preemption behave identically.  '1x1' is bitwise "
+                         "token-exact with the default single-device path; "
+                         "wider meshes are greedy token-exact.  Requires "
+                         "A*B visible devices (e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8).  "
+                         "Default: no mesh (single device)")
     args = ap.parse_args(argv)
     mode = args.mode or ("blocking" if args.blocking else "overlapped")
 
@@ -119,7 +131,10 @@ def main(argv=None) -> int:
     if args.reduced:
         cfg = cfg.reduced()
     params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
-    engine = ServingEngine(cfg, params, kernel_backend=args.kernel_backend)
+    from repro.distributed.sharding import parse_mesh, serving_sharder
+    sh = serving_sharder(parse_mesh(args.mesh)) if args.mesh else None
+    engine = ServingEngine(cfg, params, sh=sh,
+                           kernel_backend=args.kernel_backend)
     preserve = {"never": False, "reuse": True,
                 "always": "always"}[args.preserve_pristine]
     sched = MultiTenantScheduler(
@@ -171,7 +186,7 @@ def main(argv=None) -> int:
         print(f"micro-rounds={eng.rounds} x {eng.inner_steps} steps, "
               f"slot occupancy={eng.occupancy()*100:.1f}%, "
               f"pages reused={eng.kv.pages_reused}/{eng.kv.pages_allocated}, "
-              f"backend={eng.backend}")
+              f"backend={eng.backend}, mesh={args.mesh or 'none'}")
         print(f"prefix sharing={'on' if eng.prefix_sharing else 'off'}: "
               f"pages allocated={eng.kv.pages_allocated} "
               f"shared={eng.kv.pages_shared} cow_forks={eng.kv.cow_forks} "

@@ -254,8 +254,13 @@ class ContinuousBatchingEngine:
         self.fault_plane = fault_plane
         self.can_preempt = bool(swap) and self._pure_attn
         self.swap_store = (swap_store if swap_store is not None
-                           else (HostSwapStore(fault_plane=fault_plane)
+                           else (HostSwapStore(fault_plane=fault_plane,
+                                               sharder=self.sh)
                                  if self.can_preempt else None))
+        # lane/shard ordinal for telemetry: the mesh slice this engine's
+        # slot table is committed to (0 on the single-device path)
+        self.pdev = (min(d.id for d in self.sh.mesh.devices.reshape(-1))
+                     if self.sh.mesh is not None else 0)
         self.admission_retry_limit = int(admission_retry_limit)
         self.rejected: List[Any] = []   # run_all's terminal REJECTED requests
         # trace counters: python side effects run only while jit traces
@@ -298,6 +303,12 @@ class ContinuousBatchingEngine:
     def free_slot_count(self) -> int:
         return len(self._free_slots)
 
+    def live_priorities(self) -> List[int]:
+        """Priorities of every live row, in no particular order.  Public
+        accessor so schedulers never depend on the slot-table layout (which
+        the mesh-sharded engine is free to rearrange)."""
+        return [s.priority for s in self._slots if s is not None]
+
     def occupancy(self) -> float:
         total = self.rounds * self.inner_steps * self.capacity
         return self.row_steps / total if total else 0.0
@@ -312,7 +323,7 @@ class ContinuousBatchingEngine:
                 caches[f"sub{i}"] = jax.tree.map(
                     lambda a: jnp.broadcast_to(
                         a[None], (self.n_stages,) + a.shape), st)
-        return {
+        st = {
             "caches": caches,
             "page_table": self.kv.make_page_table(),
             "pos_pool": self.kv.make_pos_pool(),
@@ -325,6 +336,19 @@ class ContinuousBatchingEngine:
             "keys": jnp.zeros((c, 2), jnp.uint32),
             "lstep": jnp.zeros((c,), jnp.int32),
         }
+        if self.sh.mesh is not None:
+            # commit the slot-table pytree onto the mesh up front: the KV
+            # pools partition along KV heads, everything else replicates.
+            # Donation then keeps every round's output on the same layout,
+            # so nothing reshards mid-serve and jit never sees mixed-device
+            # committed inputs.
+            st = jax.tree.map(
+                lambda a: self.sh.place(a, (None,) * a.ndim), st)
+            for name in self.kv.attn_subs:
+                st["caches"][name] = {
+                    k: self.sh.place(v, (None, None, None, "kv", None))
+                    for k, v in st["caches"][name].items()}
+        return st
 
     # ------------------------------------------------------------------
     def _build_jits(self) -> None:
@@ -518,7 +542,7 @@ class ContinuousBatchingEngine:
                                       *leaf.shape[3:])
                         return paged_scatter(pool_leaf, pages, v,
                                              backend=backend,
-                                             interpret=interp)
+                                             interpret=interp, sh=sh)
                     nc[sname] = {"k": to_pages(caches_p[sname]["k"],
                                                cur["k"]),
                                  "v": to_pages(caches_p[sname]["v"],

@@ -122,8 +122,14 @@ class ServingEngine:
                  kernel_backend: str = "jnp"):
         self.cfg = cfg
         self.bundle: ModelBundle = build_model(cfg)
-        self.params = params
         self.sh = sh or null_sharder()
+        if self.sh.mesh is not None:
+            # commit the weights onto the mesh replicated (serving shards
+            # activations/KV along heads, never the weights) so every jit
+            # sees consistently-placed inputs
+            params = jax.tree.map(
+                lambda a: self.sh.place(a, (None,) * jnp.ndim(a)), params)
+        self.params = params
         self.temperature = temperature
         # default paged-attention backend for serving layers built on this
         # engine ("jnp" dense gather | "pallas" fused page-streaming

@@ -544,7 +544,8 @@ def paged_attend(q: jax.Array, pool: Dict[str, jax.Array],
                  page_table: jax.Array, positions: jax.Array,
                  cfg: ArchConfig, *, kpos: Optional[jax.Array] = None,
                  pos_pool: Optional[jax.Array] = None,
-                 backend: str = "jnp", interpret: bool = True) -> jax.Array:
+                 backend: str = "jnp", interpret: bool = True,
+                 sh: Optional[Sharder] = None) -> jax.Array:
     """Paged attention read, backend-switched.
 
     q: (C, H, D) already-roped queries; pool: {"k","v"} (NP, P, Hkv, D);
@@ -561,11 +562,15 @@ def paged_attend(q: jax.Array, pool: Dict[str, jax.Array],
       Needs ``pos_pool`` (positions are read per page, in place, so the
       dense kpos gather is skipped too).  Token-exact with jnp for greedy
       decode; logits agree to f32 rounding (see the kernel module).
+
+    ``sh`` routes the pallas backend through the shard_map dispatch when a
+    mesh is active (pallas_call has no GSPMD partitioning rules); the jnp
+    backend partitions under plain GSPMD and ignores it.
     """
     if backend == "pallas":
-        from repro.kernels.paged_attention import paged_attention_decode_pallas
-        return paged_attention_decode_pallas(
-            q, pool["k"], pool["v"], pos_pool, page_table, positions,
+        from repro.kernels.paged_attention import paged_attention_decode_sharded
+        return paged_attention_decode_sharded(
+            q, pool["k"], pool["v"], pos_pool, page_table, positions, sh,
             window=cfg.sliding_window, interpret=interpret)
     if backend != "jnp":
         raise ValueError(f"backend {backend!r}: must be one of {BACKENDS}")
@@ -576,7 +581,8 @@ def paged_attend(q: jax.Array, pool: Dict[str, jax.Array],
 
 
 def paged_scatter(pool: jax.Array, pages: jax.Array, values: jax.Array, *,
-                  backend: str = "jnp", interpret: bool = True) -> jax.Array:
+                  backend: str = "jnp", interpret: bool = True,
+                  sh: Optional[Sharder] = None) -> jax.Array:
     """Admission-time KV scatter, backend-switched: write ``values``
     (S, nb, P, Hkv, D) into ``pool`` (S, NP, P, Hkv, D) at ``pages`` (nb,).
 
@@ -586,9 +592,9 @@ def paged_scatter(pool: jax.Array, pages: jax.Array, values: jax.Array, *,
     paged_prefill_scatter_pallas`).  Both cast to the pool dtype and are
     bit-exact with each other."""
     if backend == "pallas":
-        from repro.kernels.paged_attention import paged_prefill_scatter_pallas
-        return paged_prefill_scatter_pallas(pool, pages, values,
-                                            interpret=interpret)
+        from repro.kernels.paged_attention import paged_prefill_scatter_sharded
+        return paged_prefill_scatter_sharded(pool, pages, values, sh,
+                                             interpret=interpret)
     if backend != "jnp":
         raise ValueError(f"backend {backend!r}: must be one of {BACKENDS}")
     from repro.kernels.ref import paged_scatter_ref
@@ -632,7 +638,10 @@ def paged_attention_decode(p, x, pool: Dict[str, jax.Array],
                          v_new[:, 0].astype(pool["v"].dtype))
     o = paged_attend(q[:, 0], {"k": k_pool, "v": v_pool}, page_table,
                      positions, cfg, kpos=kpos, pos_pool=pos_pool,
-                     backend=backend, interpret=interpret)
+                     backend=backend, interpret=interpret, sh=sh)
+    # merge the head-sharded attention output with an all-gather (pure data
+    # movement, bitwise-safe) before the replicated wo contraction
+    o = sh.constrain(o, (None, None, None))
     o = o.reshape(C, 1, H * D).astype(cdt_x)
     from repro.models.layers import dtype_of
     out = jnp.einsum("bsh,hd->bsd", o, p["wo"].astype(dtype_of(

@@ -197,7 +197,8 @@ class MultiTenantScheduler:
                  admission_retry_limit: int = 8,
                  round_fault_limit: int = 3,
                  fault_plane: Optional[Any] = None,
-                 heartbeat_timeout_s: float = 300.0):
+                 heartbeat_timeout_s: float = 300.0,
+                 restore_prefetch: int = 4):
         self.engine = engine
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
@@ -252,6 +253,7 @@ class MultiTenantScheduler:
         self.max_backlog = max_backlog
         self.admission_retry_limit = int(admission_retry_limit)
         self.round_fault_limit = int(round_fault_limit)
+        self.restore_prefetch = max(int(restore_prefetch), 1)
         self.fault_plane = fault_plane or getattr(self._ceng, "fault_plane",
                                                   None)
         self.heartbeat = HeartbeatMonitor(timeout_s=heartbeat_timeout_s)
@@ -577,6 +579,15 @@ class MultiTenantScheduler:
         Otherwise candidates are ordered by (priority tier, page
         over-share, deadline, row-steps consumed, tenant order): the
         priority-aware fair-share admission of the overload layer."""
+        # deadline-miss shedding: a queued request already past its absolute
+        # deadline can never meet it — admitting it would only burn pool
+        # pages and decode steps under overload.  Shed it terminally
+        # (REJECTED, counted as shed) before picking.
+        now = time.perf_counter()
+        for q in self.queues.values():
+            for req in [r for r in q if self._deadline(r) < now]:
+                q.remove(req)
+                self._reject(req, shed=True)
         picked: List[Request] = []
         while len(picked) < budget:
             heads = [(t, q[0]) for t, q in self.queues.items()
@@ -712,7 +723,11 @@ class MultiTenantScheduler:
                         self._fail(rec.req, preemptions=rec.preemptions)
                         continue
                 self._restore_q.append(ticket)
-        for ticket in self._restore_q[:1]:
+        # prefetch a bounded window (not just the head): the second and
+        # later restores overlap their host->device staging with the
+        # in-flight round instead of eating the full transfer latency at
+        # re-admission time
+        for ticket in self._restore_q[:self.restore_prefetch]:
             eng.swap_store.prefetch(ticket)
         return done
 
@@ -747,8 +762,9 @@ class MultiTenantScheduler:
                     self._backoff.pop(id(req), None)
                     slot = self._slot_of[req.tenant]
                     self.admission_timeline.append(TenantTimeline(
-                        vdev=slot, pdev=0, slot=slot, transfer_start=t0,
-                        transfer_end=t1, compute_start=t1, compute_end=t1))
+                        vdev=slot, pdev=eng.pdev, slot=slot,
+                        transfer_start=t0, transfer_end=t1,
+                        compute_start=t1, compute_end=t1))
                 else:
                     failures.append(req)
             if (failures and allow_preempt and self.preemption
@@ -808,7 +824,7 @@ class MultiTenantScheduler:
         te = time.perf_counter() - self._t0
         idx = self._cont_rounds
         self._cont_rounds += 1
-        entry = TenantTimeline(vdev=idx, pdev=0, slot=idx,
+        entry = TenantTimeline(vdev=idx, pdev=self._ceng.pdev, slot=idx,
                                transfer_start=asm_start, transfer_end=te,
                                compute_start=te, compute_end=0.0)
         stamped = self._get_waiter().submit(handle.emitted, entry)
@@ -849,7 +865,7 @@ class MultiTenantScheduler:
         if not prios:
             return False
         p = min(prios)
-        return any(s is not None and s.priority > p for s in eng._slots)
+        return any(lp > p for lp in eng.live_priorities())
 
     def _step_continuous(self) -> Optional[List[Response]]:
         eng = self._ceng

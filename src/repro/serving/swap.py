@@ -83,13 +83,22 @@ class HostSwapStore:
     """Ticketed host-side store of preempted requests' KV + decode state."""
 
     def __init__(self, staging: Optional[StagingEngine] = None,
-                 fault_plane: Optional[Any] = None):
+                 fault_plane: Optional[Any] = None,
+                 sharder: Optional[Any] = None):
         if staging is None:
             # sequential mode: the paper's winner for host->device staging
             staging = StagingEngine(
                 VirtualDevicePool(TenancyConfig(1, 1, "sequential")))
         self.staging = staging
         self.fault_plane = fault_plane
+        # per-mesh-slice staging lanes: swap-ins split along the KV-head
+        # sharding and each shard stages on its own lane, landing already
+        # committed to the pool's mesh layout (no post-restore reshard)
+        self.sharder = sharder
+        self.lanes = None
+        if sharder is not None and sharder.mesh is not None:
+            from repro.core.transfer import MeshStagingLanes
+            self.lanes = MeshStagingLanes(sharder.mesh)
         self._records: Dict[int, SwapRecord] = {}
         self._staged: Dict[int, StagedChunk] = {}
         self._next_ticket = 0
@@ -127,9 +136,22 @@ class HostSwapStore:
         if ticket in self._staged:
             return
         rec = self._records[ticket]
+        tree = {"kv": rec.host_kv, "pos": rec.host_pos}
+        if self.lanes is not None:
+            # KV blocks (S, max_blocks, P, Hkv, D) shard along Hkv; the
+            # position rows replicate.  Each shard stages on its own lane.
+            sh = self.sharder
+
+            def sharding_of(a):
+                axes = ((None, None, None, "kv", None) if a.ndim == 5
+                        else (None,) * a.ndim)
+                return sh.named(axes, a.shape)
+
+            self._staged[ticket] = self.lanes.put(tree, sharding_of,
+                                                  slot=ticket)
+            return
         task = TenantTask(vdev=0, pdev=0, slot=0, start=0, stop=1)
-        self._staged[ticket] = self.staging.put(
-            task, {"kv": rec.host_kv, "pos": rec.host_pos})
+        self._staged[ticket] = self.staging.put(task, tree)
 
     def fetch(self, ticket: int) -> Any:
         """Block until the record's arrays are device-resident and return
@@ -144,9 +166,13 @@ class HostSwapStore:
                 self._staged.pop(ticket, None)
                 raise
         self.prefetch(ticket)
-        chunk = self.staging.wait(self._staged.pop(ticket))
+        staged = self._staged.pop(ticket)
+        if self.lanes is not None:
+            arrays = self.lanes.wait(staged)
+        else:
+            arrays = self.staging.wait(staged).arrays
         self.fetches += 1
-        return chunk.arrays
+        return arrays
 
     def pop(self, ticket: int) -> SwapRecord:
         """Remove a record (successful restore, or terminal drop after a

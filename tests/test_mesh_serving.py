@@ -1,0 +1,261 @@
+"""Mesh-sharded serving: parity, conservation, and staging-lane contracts.
+
+The tentpole contracts of the mesh-sharded `ContinuousBatchingEngine`:
+
+* **1×1 bitwise identity** — an engine built on a 1×1 mesh emits the same
+  tokens AND the same final logits bits as the meshless single-device path;
+* **1×8 greedy token-exactness** — KV pools and the decode partition along
+  KV heads over 8 devices; tokens match the single-device run through
+  admission (batched + prefix-shared), free-list eviction, CoW forks, and
+  preempt/restore through the per-slice staging lanes;
+* **host-global accounting survives sharding** — page tables, free list,
+  trie, refcounts and the two-tier conservation audit
+  (``assert_conserved(host_pages=...)``) are unchanged by the mesh;
+* **compile-count contracts** — one decode trace per (capacity, tier) and
+  one restore trace, identical to the single-device engine;
+* the fused pallas kernels run per-shard under ``shard_map`` and stay
+  bitwise with their unsharded invocations.
+
+8 host devices need XLA_FLAGS before jax initialisation, which this test
+process has already done — so everything mesh-wide runs in a subprocess,
+like tests/test_pipeline.py.  Head counts: ``reduced()`` clamps KV heads to
+2, which a 8-way "model" axis cannot divide, so the children re-widen to
+16 query / 8 KV heads.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.distributed.sharding import (DEFAULT_RULES, SERVING_RULES,
+                                        parse_mesh, serving_sharder)
+
+
+def _run_child(script: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    # append (not prepend): the last repetition of a flag wins, and earlier
+    # suite imports may have left a device-count in XLA_FLAGS
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", script],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+
+
+# ---------------------------------------------------------------------------
+# in-process: mesh parsing + serving rules (no multi-device requirement)
+# ---------------------------------------------------------------------------
+def test_parse_mesh_specs():
+    assert parse_mesh(None) is None
+    assert parse_mesh("") is None
+    m = parse_mesh("1x1")
+    assert m.axis_names == ("data", "model") and m.shape["model"] == 1
+    assert parse_mesh("1").shape == {"data": 1, "model": 1}
+    with pytest.raises(ValueError):
+        parse_mesh(f"1x{len(jax.devices()) + 1}")
+
+
+def test_serving_rules_shard_only_heads():
+    """The serving sharder must never partition a contraction axis: only
+    head-like axes shard, so cross-shard merges are all-gathers (bitwise),
+    never a psum whose float reassociation breaks token-exactness."""
+    assert set(SERVING_RULES) == {"heads", "kv"}
+    sh = serving_sharder(parse_mesh("1x1"))
+    # replicated logical names fall through to None even when they exist
+    # in the training rules
+    for name in ("ff", "vocab", "expert", "inner", "seq", "batch"):
+        assert DEFAULT_RULES[name] is not None  # guard: rule exists upstream
+        assert sh._axes_for(name, 64) is None
+    assert sh.extent("kv", 8) == 1              # 1x1: everything degenerate
+
+
+SHARDED_ENGINE_SCRIPT = textwrap.dedent("""
+    import dataclasses
+    import numpy as np
+    import jax
+
+    from repro.configs import get_config
+    from repro.distributed.sharding import parse_mesh, serving_sharder
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    assert len(jax.devices()) == 8, jax.devices()
+    # reduced() clamps to 2 KV heads; re-widen so 8 ways divide the pools
+    cfg = dataclasses.replace(get_config("internlm2-1.8b").reduced(),
+                              num_heads=16, num_kv_heads=8)
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+
+    rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab_size, 16).astype(np.int32)
+    reqs = []
+    for i in range(8):
+        tail = rng.integers(1, cfg.vocab_size,
+                            8 + 4 * (i % 3)).astype(np.int32)
+        # half the mix shares a system prefix -> trie hits + CoW forks
+        prompt = np.concatenate([shared, tail]) if i % 2 == 0 else tail
+        reqs.append(Request(f"t{i % 3}", prompt, 6 + i, seed=i))
+
+    def clone(rs):
+        return [Request(r.tenant, r.prompt.copy(), r.max_new_tokens,
+                        seed=r.seed, priority=r.priority) for r in rs]
+
+    def build(sh, backend="jnp"):
+        eng = ServingEngine(cfg, params, sh=sh, kernel_backend=backend)
+        # tight pool: forces free-list eviction of registered cache pages
+        return ContinuousBatchingEngine(eng, capacity=4, page_size=8,
+                                        num_pages=40, inner_steps=2,
+                                        max_prompt_len=32)
+
+    def run(ceng):
+        out = ceng.run_all(clone(reqs))
+        host = ceng.swap_store.pages() if ceng.swap_store else None
+        ceng.kv.assert_conserved(host_pages=host)
+        return [t for _, t in out]
+
+    base_eng = build(None)
+    base = run(base_eng)
+    assert base_eng.kv.cow_forks + base_eng.kv.pristine_forks > 0
+    assert base_eng.kv.pages_reused > 0  # the tight pool really recycled
+
+    # ---- 1x1 mesh: bitwise identity with the meshless path ----
+    one = build(serving_sharder(parse_mesh("1x1")))
+    toks1 = run(one)
+    for a, b in zip(base, toks1):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(np.asarray(base_eng.state["logits"]),
+                                  np.asarray(one.state["logits"]))
+
+    # ---- 1x8 mesh: greedy token-exact, pools really sharded ----
+    for backend in ("jnp", "pallas"):
+        m8 = build(serving_sharder(parse_mesh("1x8")), backend=backend)
+        name = m8.kv.attn_subs[0]
+        pool = m8.state["caches"][name]["k"]
+        assert len(pool.sharding.device_set) == 8, pool.sharding
+        shard_shapes = {s.data.shape for s in pool.addressable_shards}
+        assert shard_shapes == {pool.shape[:3] + (1, pool.shape[4])}, \
+            shard_shapes                       # 8 KV heads / 8 devices
+        toks8 = run(m8)
+        for a, b in zip(base, toks8):
+            np.testing.assert_array_equal(a, b)
+        # compile-count contract: one decode trace per (capacity, tier)
+        assert m8.decode_traces == base_eng.decode_traces
+        assert m8.admit_traces == base_eng.admit_traces
+    print("MESH_PARITY_OK")
+
+    # ---- preempt/restore across the mesh staging lanes ----
+    def swap_cycle(sh):
+        eng = ServingEngine(cfg, params, sh=sh)
+        sched = MultiTenantScheduler(
+            eng, mode="continuous", preemption=True,
+            continuous=dict(capacity=2, page_size=8, num_pages=14,
+                            inner_steps=2, max_prompt_len=16))
+        prompts = [rng2.integers(1, cfg.vocab_size,
+                                 8 + 8 * (i % 2)).astype(np.int32)
+                   for i in range(3)]
+        for i in range(2):
+            sched.submit(Request(f"lo{i}", prompts[i], 30, priority=1,
+                                 seed=i))
+        sched.step()
+        sched.submit(Request("hi", prompts[2], 4, priority=0))
+        res = sched.drain()
+        ceng = sched.continuous_engine
+        ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages())
+        assert ceng.preemptions > 0 and ceng.restores > 0
+        assert ceng.restore_traces == 1
+        assert all(r.outcome == "completed" for r in res)
+        return {(r.tenant, tuple(r.tokens.tolist())) for r in res}, ceng
+
+    rng2 = np.random.default_rng(1); ref, _ = swap_cycle(None)
+    rng2 = np.random.default_rng(1)
+    got, ceng8 = swap_cycle(serving_sharder(parse_mesh("1x8")))
+    assert ref == got, (sorted(ref - got), sorted(got - ref))
+    # swap-ins really rode the per-slice lanes: one sequential engine per
+    # mesh device, each with staged transfers in its log
+    lanes = ceng8.swap_store.lanes
+    assert lanes is not None and lanes.n_lanes == 8
+    assert all(len(e.log) > 0 for e in lanes.engines.values())
+    print("MESH_SWAP_OK")
+""")
+
+
+def test_mesh_sharded_engine_subprocess():
+    """1×1 bitwise + 1×8 token-exact (both backends, incl. eviction/CoW and
+    preempt-restore through the staging lanes) with conservation audited on
+    the sharded pool."""
+    proc = _run_child(SHARDED_ENGINE_SCRIPT)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_PARITY_OK" in proc.stdout
+    assert "MESH_SWAP_OK" in proc.stdout
+
+
+SHARDED_KERNEL_SCRIPT = textwrap.dedent("""
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    from repro.distributed.sharding import parse_mesh, serving_sharder
+    from repro.kernels.paged_attention import (
+        paged_attention_decode_pallas, paged_attention_decode_sharded,
+        paged_prefill_scatter_pallas, paged_prefill_scatter_sharded)
+
+    assert len(jax.devices()) == 8
+    sh = serving_sharder(parse_mesh("1x8"))
+    rng = np.random.default_rng(0)
+    C, H, Hkv, D, NP, P, NB = 4, 16, 8, 16, 10, 4, 3
+    q = jnp.asarray(rng.normal(size=(C, H, D)).astype(np.float32))
+    kp = jnp.asarray(rng.normal(size=(NP, P, Hkv, D))).astype(jnp.bfloat16)
+    vp = jnp.asarray(rng.normal(size=(NP, P, Hkv, D))).astype(jnp.bfloat16)
+    pos_pool = jnp.asarray(rng.integers(0, 8, (NP, P)).astype(np.int32))
+    pt = jnp.asarray(rng.integers(2, NP, (C, NB)).astype(np.int32))
+    pos = jnp.asarray(rng.integers(4, 12, (C,)).astype(np.int32))
+
+    ref = paged_attention_decode_pallas(q, kp, vp, pos_pool, pt, pos)
+    out = jax.jit(lambda *a: paged_attention_decode_sharded(*a, sh))(
+        q, kp, vp, pos_pool, pt, pos)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+    # MQA: pools replicated, q sharded on H.  Heads stay independent, but
+    # the per-shard dot shapes (rep=H/8 vs rep=H) let XLA tile the in-dot
+    # d-contraction differently -> f32-rounding-level agreement, not
+    # bitwise (the engine contract for wide meshes is greedy token-exact)
+    kp1, vp1 = kp[:, :, :1], vp[:, :, :1]
+    ref1 = paged_attention_decode_pallas(q, kp1, vp1, pos_pool, pt, pos)
+    out1 = jax.jit(lambda *a: paged_attention_decode_sharded(*a, sh))(
+        q, kp1, vp1, pos_pool, pt, pos)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref1),
+                               rtol=0, atol=1e-5)
+
+    # indivisible head counts fall back to fully replicated specs
+    q3, kp3, vp3 = q[:, :12], kp[:, :, :3], vp[:, :, :3]
+    ref3 = paged_attention_decode_pallas(q3, kp3, vp3, pos_pool, pt, pos)
+    out3 = jax.jit(lambda *a: paged_attention_decode_sharded(*a, sh))(
+        q3, kp3, vp3, pos_pool, pt, pos)
+    np.testing.assert_array_equal(np.asarray(out3), np.asarray(ref3))
+
+    S, nb = 2, 3
+    pool = jnp.zeros((S, NP, P, Hkv, D), jnp.bfloat16)
+    pages = jnp.asarray([3, 5, 7], jnp.int32)
+    vals = jnp.asarray(rng.normal(size=(S, nb, P, Hkv, D)).astype(np.float32))
+    ref_sc = paged_prefill_scatter_pallas(pool, pages, vals)
+    out_sc = jax.jit(
+        lambda *a: paged_prefill_scatter_sharded(*a, sh),
+        donate_argnums=(0,))(pool, pages, vals)
+    np.testing.assert_array_equal(np.asarray(out_sc), np.asarray(ref_sc))
+    print("MESH_KERNELS_OK")
+""")
+
+
+def test_mesh_sharded_kernels_subprocess():
+    """shard_map-wrapped pallas kernels are bitwise with their unsharded
+    invocations across the GQA / MQA / replicated-fallback dispatch cases."""
+    proc = _run_child(SHARDED_KERNEL_SCRIPT)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_KERNELS_OK" in proc.stdout

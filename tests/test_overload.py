@@ -372,3 +372,85 @@ def test_harness_trace_deterministic_and_drives(engine, pceng):
     assert {r.outcome for r in out} <= {"completed", "rejected", "failed"}
     assert sched.pending() == 0
     pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_deadline_miss_shed_at_pick(engine, pceng, rng):
+    """A queued request whose absolute deadline already passed is shed
+    terminally at pick time (REJECTED, counted in the shed stat) instead
+    of burning slots and pages on work that can no longer meet its SLO;
+    fresh work behind it is untouched."""
+    import time
+
+    cfg = engine.cfg
+    sched = _sched(engine, pceng)
+    late = Request("late", rng.integers(1, cfg.vocab_size,
+                                        8).astype(np.int32),
+                   max_new_tokens=4, deadline_s=time.perf_counter() - 1.0)
+    ok = Request("ok", rng.integers(1, cfg.vocab_size, 8).astype(np.int32),
+                 max_new_tokens=4)
+    sched.submit(late)
+    sched.submit(ok)
+    by_tenant = {r.tenant: r for r in sched.drain()}
+    assert by_tenant["late"].outcome == "rejected"
+    assert by_tenant["late"].tokens.size == 0
+    assert sched.stats["late"]["shed"] == 1
+    assert by_tenant["ok"].outcome == "completed"
+    np.testing.assert_array_equal(_oracle(engine, pceng, ok),
+                                  by_tenant["ok"].tokens)
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_live_priorities_accessor(engine, pceng, rng):
+    """``live_priorities()`` reports the priority of every occupied slot —
+    the public surface ``_preemption_pressure`` consults instead of
+    reaching into the engine's private slot table."""
+    cfg = engine.cfg
+    assert pceng.live_priorities() == []
+    sched = _sched(engine, pceng)
+    sched.submit(Request("a", rng.integers(1, cfg.vocab_size,
+                                           8).astype(np.int32),
+                         max_new_tokens=12, priority=1))
+    sched.submit(Request("b", rng.integers(1, cfg.vocab_size,
+                                           8).astype(np.int32),
+                         max_new_tokens=12, priority=0))
+    sched.step()
+    assert sorted(pceng.live_priorities()) == [0, 1]
+    out = sched.drain()
+    assert {r.outcome for r in out} == {"completed"}
+    assert pceng.live_priorities() == []
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
+
+
+def test_restore_prefetch_window(engine, pceng):
+    """``_drain_restores`` prefetches a bounded *window* of the restore
+    queue (``restore_prefetch``), not just its head, so later restores
+    overlap their host->device staging with the in-flight round."""
+    from repro.serving.swap import SwapRecord
+
+    store = pceng.swap_store
+
+    def fake_record():
+        return SwapRecord(
+            req=None, priority=1, target=0, temp=0.0, top_k=0, bucket=8,
+            ring=0, tokens=[], chain_keys=[], written=set(), pos=0,
+            remaining=0, lstep=0, key=np.zeros(2, np.uint32),
+            logits=np.zeros(4, np.float32),
+            host_kv={"sub": {"k": np.zeros((1, 1, 1, 1, 1), np.float32),
+                             "v": np.zeros((1, 1, 1, 1, 1), np.float32)}},
+            host_pos=np.zeros((1, 1), np.int32), n_private=0)
+
+    tickets = [store.put(fake_record()) for _ in range(3)]
+    try:
+        sched = _sched(engine, pceng, restore_prefetch=2)
+        # park every ticket behind a far-future backoff so the drain only
+        # requeues (no try_restore) and then stages its prefetch window
+        sched._restore_q = list(tickets)
+        sched._ticket_backoff = {t: 10 ** 9 for t in tickets}
+        assert sched._drain_restores(False) == 0
+        assert sorted(sched._restore_q) == tickets
+        assert len(store._staged) == 2      # was 1 before the window fix
+    finally:
+        for t in tickets:
+            store.pop(t)
+    assert len(store) == 0
+    pceng.kv.assert_conserved(host_pages=pceng.swap_store.pages())
