@@ -11,7 +11,12 @@
 trajectory — e.g. blocking vs overlapped wall time for both the risk
 pipeline (``pipeline/*``) and the multi-tenant serving scheduler
 (``serving/*``), with per-tenant transfer/compute windows and realised
-overlap-pair counts — can be tracked across PRs.
+overlap-pair counts — can be tracked across PRs.  With ``--json`` the
+global telemetry plane is enabled for the run and each row carries the
+counter *delta* its bench produced (``telemetry``: pages allocated/shared,
+bytes moved through staging lanes, preemptions/restores, fault
+injections...), plus a final full snapshot in the record metadata — the
+perf trajectory and the resource trajectory travel in one artifact.
 """
 import argparse
 import json
@@ -39,21 +44,38 @@ def main() -> None:
     benches = (list(paper_figures.ALL) + list(pipeline.ALL)
                + list(overload.ALL) + [roofline.run])
 
+    tel = None
+    if args.json is not None:
+        from repro.obs import TELEMETRY
+        tel = TELEMETRY.enable()
+
     print("name,us_per_call,derived")
     rows, errors = [], []
     for bench in benches:
         bname = bench.__module__ + "." + bench.__name__
         if filters and not any(f in bname for f in filters):
             continue
+        before = tel.counter_snapshot() if tel is not None else {}
+        bench_rows = []
         try:
             for name, us, derived in bench():
                 print(f"{name},{us:.2f},{derived}")
-                rows.append({"name": name, "us_per_call": us,
-                             "derived": derived, "bench": bname})
+                row = {"name": name, "us_per_call": us,
+                       "derived": derived, "bench": bname}
+                rows.append(row)
+                bench_rows.append(row)
         except Exception as e:
             errors.append({"bench": bname, "error": repr(e)})
             print(f"{bname},0.0,ERROR", file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
+        if tel is not None and bench_rows:
+            # per-bench counter delta (pages, bytes moved, preemptions...)
+            # attached to each of the bench's rows
+            after = tel.counter_snapshot()
+            delta = {k: v - before.get(k, 0) for k, v in after.items()
+                     if v != before.get(k, 0)}
+            for row in bench_rows:
+                row["telemetry"] = delta
 
     if args.json is not None:
         import jax
@@ -66,6 +88,7 @@ def main() -> None:
             "failures": len(errors),
             "errors": errors,
             "rows": rows,
+            "telemetry": tel.metric_snapshot(),
         }
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)

@@ -92,6 +92,30 @@ bitwise what an uninterrupted run produces.  A ``max_backlog`` bound sheds
 the lowest-priority queued work with an explicit REJECTED outcome instead
 of letting the queue grow past the SLO; every submitted request always
 reaches exactly one terminal outcome (completed / rejected / failed).
+
+Observability
+-------------
+Every layer this example exercises is instrumented against the telemetry
+plane in ``repro.obs`` (disabled by default — the runs here cost nothing
+extra).  Enabling it *before* building the stack lights up everything:
+
+    from repro.obs import TELEMETRY
+    TELEMETRY.enable()
+    ... build engine/scheduler, run a workload ...
+    from repro.obs.export import write_chrome_trace, prometheus_text
+    write_chrome_trace(TELEMETRY, "trace.json")   # open in ui.perfetto.dev
+    print(prometheus_text(TELEMETRY))             # counters/gauges/summaries
+
+The span tree nests ``sched.step`` > ``round.dispatch`` > ``round.jit``
+with retrospective ``round.device`` windows, ``kv.*`` counters for page
+alloc/share/CoW-fork/evict, ``swap.*`` spans for preemption tiering and
+``transfer.stage`` spans per staging lane (see ``repro/obs/__init__.py``
+for the full naming scheme).  The same spans drive capacity planning:
+``repro.core.planner.plan_from_telemetry`` least-squares-fits the paper's
+perf/energy model from them and re-plans (#pdev, tenancy, transfer mode)
+— ``examples/deployment_planner.py`` closes with that loop.  On the
+launch driver the equivalent knobs are ``--trace-out`` /
+``--metrics-out`` / ``--stats-every N``.
 """
 import jax
 import numpy as np

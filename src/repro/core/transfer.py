@@ -27,6 +27,12 @@ import jax
 import numpy as np
 
 from repro.core.tenancy import TenantTask, TenancyConfig, VirtualDevicePool
+from repro.obs.telemetry import Telemetry, get_telemetry
+
+
+def _tree_bytes(tree: Any) -> int:
+    """Total payload bytes of a pytree (host or device leaves)."""
+    return sum(getattr(a, "nbytes", 0) for a in jax.tree.leaves(tree))
 
 
 @dataclasses.dataclass
@@ -39,11 +45,13 @@ class StagedChunk:
 
 
 class StagingEngine:
-    def __init__(self, pool: VirtualDevicePool, mode: Optional[str] = None):
+    def __init__(self, pool: VirtualDevicePool, mode: Optional[str] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.pool = pool
         self.mode = mode or pool.cfg.transfer_mode
         assert self.mode in ("sequential", "concurrent")
         self.log: List[Dict[str, float]] = []
+        self.tel = get_telemetry(telemetry)
 
     # ------------------------------------------------------------------
     def _put(self, host_tree, device) -> Any:
@@ -72,6 +80,16 @@ class StagingEngine:
         chunk.ready_s = time.perf_counter() - base
         self.log.append({"vdev": chunk.task.vdev, "ready_s": chunk.ready_s,
                          "mode": self.mode})
+        if self.tel.enabled:
+            # the staging-lane span: enqueue -> device-resident, stamped
+            # against the same origin the chunk's log times use
+            nbytes = _tree_bytes(chunk.arrays)
+            self.tel.record_span("transfer.stage", base + chunk.enqueue_s,
+                                 base + chunk.ready_s, vdev=chunk.task.vdev,
+                                 pdev=chunk.task.pdev, slot=chunk.task.slot,
+                                 mode=self.mode, bytes=nbytes)
+            self.tel.count("transfer.bytes", nbytes)
+            self.tel.count("transfer.chunks")
         return chunk
 
     def stage(self, tasks: Sequence[TenantTask],
@@ -126,12 +144,16 @@ class MeshStagingLanes:
     degenerate to one full copy per lane).
     """
 
-    def __init__(self, mesh):
+    def __init__(self, mesh, telemetry: Optional[Telemetry] = None):
         self.mesh = mesh
+        self.tel = get_telemetry(telemetry)
         devs = [d for d in mesh.devices.reshape(-1)]
+        # each lane reports its own ``transfer.stage`` spans (pdev = lane
+        # ordinal) onto the same plane
         self.engines = {
             d: StagingEngine(VirtualDevicePool(
-                TenancyConfig(1, 1, "sequential"), devices=[d]))
+                TenancyConfig(1, 1, "sequential"), devices=[d]),
+                telemetry=self.tel)
             for d in devs}
 
     @property
@@ -151,8 +173,9 @@ class MeshStagingLanes:
 
     def wait(self, staged: MeshStagedChunk) -> Any:
         """Block every lane, then assemble the global sharded arrays."""
-        for dev, chunk in staged.chunks.items():
-            self.engines[dev].wait(chunk)
+        with self.tel.span("transfer.assemble", lanes=len(staged.chunks)):
+            for dev, chunk in staged.chunks.items():
+                self.engines[dev].wait(chunk)
         devs = list(staged.chunks)
 
         def assemble(path_leaves):

@@ -33,6 +33,7 @@ import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.distributed import checkpoint as ckpt
+from repro.obs.telemetry import get_telemetry
 
 
 @dataclasses.dataclass
@@ -45,8 +46,16 @@ class HeartbeatMonitor:
         self.last_beat = time.monotonic()
 
     def suspect(self) -> bool:
+        """One watchdog verdict; True marks the worker suspect.  Verdicts
+        are mirrored onto the telemetry plane (``heartbeat.verdicts`` /
+        ``heartbeat.suspect`` — the serving scheduler additionally keeps
+        the ``heartbeat.suspects`` gauge)."""
+        tel = get_telemetry(None)
+        tel.count("heartbeat.verdicts")
         if time.monotonic() - self.last_beat > self.timeout_s:
             self.missed += 1
+            if tel.enabled:
+                tel.event("heartbeat.suspect", missed=self.missed)
             return True
         return False
 
@@ -91,22 +100,32 @@ class FaultPlane:
     def _fire(self, every: int, count: int) -> bool:
         return every > 0 and count % every == 0
 
+    def _record(self, kind: str) -> None:
+        tel = get_telemetry(None)
+        if tel.enabled:
+            tel.count(f"fault.{kind}")
+            tel.event("fault.injected", kind=kind,
+                      n=self.injected[kind])
+
     def round_fault(self) -> None:
         self.rounds += 1
         if self._fire(self.drop_round_every, self.rounds):
             self.injected["round"] += 1
+            self._record("round")
             raise InjectedFault("injected fault: decode round dropped")
 
     def admission_fault(self) -> None:
         self.admissions += 1
         if self._fire(self.stall_admission_every, self.admissions):
             self.injected["admission"] += 1
+            self._record("admission")
             raise InjectedFault("injected fault: admission stalled")
 
     def swap_read_fault(self) -> None:
         self.swap_reads += 1
         if self._fire(self.poison_swap_every, self.swap_reads):
             self.injected["swap"] += 1
+            self._record("swap")
             raise InjectedFault("injected fault: swap read poisoned")
 
     def total_injected(self) -> int:

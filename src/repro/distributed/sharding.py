@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.obs.telemetry import get_telemetry
+
 # logical name -> candidate mesh axes (in priority order; tuples mean "use all
 # that exist, jointly")
 DEFAULT_RULES = {
@@ -117,7 +119,15 @@ class Sharder:
         """device_put onto the mesh with the resolved sharding (identity off-mesh)."""
         if self.mesh is None:
             return x
-        return jax.device_put(x, NamedSharding(self.mesh, self.spec(logical, x.shape)))
+        spec = self.spec(logical, x.shape)
+        tel = get_telemetry(None)
+        if tel.enabled:
+            tel.count("shard.placements")
+            tel.count("shard.placed_bytes", getattr(x, "nbytes", 0))
+            tel.event("shard.place", spec=str(spec),
+                      shape=tuple(int(d) for d in x.shape),
+                      mesh=dict(self.mesh.shape))
+        return jax.device_put(x, NamedSharding(self.mesh, spec))
 
 
 def null_sharder() -> Sharder:

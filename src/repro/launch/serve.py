@@ -25,6 +25,15 @@ overlap pairs.  ``--mode`` selects the schedule:
 * ``overlapped`` (default) — tenant-slot batching with up to
   ``--stage-depth`` batches staged under the running decode;
 * ``blocking`` — the legacy host-blocking schedule (A/B baseline).
+
+Observability: ``--trace-out trace.json`` enables the telemetry plane and
+writes a Chrome-trace/Perfetto JSON of every span the run recorded
+(scheduler steps > round dispatch > kernel windows, KV pool activity, swap
+lanes); ``--metrics-out metrics.prom`` writes the Prometheus text
+exposition of the counters/gauges; ``--stats-every N`` prints a compact
+``obs: k=v`` line every N scheduling steps (including the heartbeat
+suspect gauge).  Any of the three lights up the global plane before the
+stack is built; without them telemetry stays disabled and costs nothing.
 """
 from __future__ import annotations
 
@@ -124,8 +133,26 @@ def main(argv=None) -> int:
                          "A*B visible devices (e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8).  "
                          "Default: no mesh (single device)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the run's "
+                         "telemetry spans to PATH (enables the telemetry "
+                         "plane)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write Prometheus text-format metrics to PATH "
+                         "(enables the telemetry plane)")
+    ap.add_argument("--stats-every", type=int, default=0, metavar="N",
+                    help="print a one-line telemetry summary every N "
+                         "scheduling steps (enables the telemetry plane; "
+                         "0 = never)")
     args = ap.parse_args(argv)
     mode = args.mode or ("blocking" if args.blocking else "overlapped")
+
+    from repro.obs import TELEMETRY
+    obs_on = bool(args.trace_out or args.metrics_out or args.stats_every)
+    if obs_on:
+        # light the global plane before the stack is built so every layer
+        # (engine, scheduler, pool, swap store, staging lanes) records
+        TELEMETRY.enable()
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -153,6 +180,7 @@ def main(argv=None) -> int:
     rng = np.random.default_rng(0)
     shared_prefix = rng.integers(1, cfg.vocab_size,
                                  args.shared_prefix_len).astype(np.int32)
+    late: list = []         # tier-0 arrivals held back to land mid-flight
     for i in range(args.requests):
         tenant = f"tenant-{i % args.tenants}"
         prompt = rng.integers(1, cfg.vocab_size,
@@ -160,10 +188,50 @@ def main(argv=None) -> int:
         if args.shared_prefix_len:
             prompt = np.concatenate([shared_prefix, prompt])
         tier0 = args.priority > 0 and i % args.priority == args.priority - 1
-        sched.submit(Request(tenant, prompt, args.new_tokens,
-                             priority=0 if tier0 else 1))
+        # per-tenant queues are FIFO within a tenant, so the high tier
+        # rides its own interactive lane — otherwise a tier-0 arrival
+        # queued behind its tenant's earlier tier-1 work is invisible to
+        # the priority-aware admission (which only compares queue heads)
+        if tier0:
+            tenant += "-hi"
+        req = Request(tenant, prompt,
+                      max(4, args.new_tokens // 4) if tier0
+                      else args.new_tokens,
+                      priority=0 if tier0 else 1)
+        # tier-0 requests arrive *after* the tier-1 work has filled the
+        # slot table, so the demo exercises the preemption path instead of
+        # just admitting the high tier first
+        if tier0 and mode == "continuous":
+            late.append(req)
+        else:
+            sched.submit(req)
+    if not sched.pending():                   # all-tier-0 traffic: no hold
+        for req in late:
+            sched.submit(req)
+        late = []
 
-    responses = sched.drain()
+    # manual drain loop (same semantics as sched.drain()) so the periodic
+    # stats line can fire between scheduling steps
+    responses = []
+    steps = 0
+    while sched.pending() or late:
+        r = sched.step()
+        if r:
+            responses.extend(r)
+        steps += 1
+        if late:                 # tier-0 burst lands against full slots
+            for req in late:
+                sched.submit(req)
+            late = []
+        if args.stats_every and steps % args.stats_every == 0:
+            from repro.obs.export import stats_line
+            print(stats_line(
+                TELEMETRY,
+                keys=("heartbeat.beats", "kv.pages_allocated",
+                      "kv.free_pages", "swap.preemptions", "swap.restores",
+                      "heartbeat.suspects"),
+                step=steps, pending=sched.pending()))
+    sched.close()
     n_done = sum(r.outcome == "completed" for r in responses)
     print(f"served {len(responses)} requests "
           f"(completed={n_done} "
@@ -198,6 +266,16 @@ def main(argv=None) -> int:
         print(f"overload: preemption={'on' if args.swap else 'off'} "
               f"preemptions={eng.preemptions} restores={eng.restores} "
               f"shed={shed} heartbeat_suspects={sched.heartbeat_suspects}")
+    if args.trace_out:
+        from repro.obs.export import write_chrome_trace
+        write_chrome_trace(TELEMETRY, args.trace_out)
+        print(f"trace: {len(TELEMETRY.spans())} spans "
+              f"({TELEMETRY.spans_opened} opened, "
+              f"{TELEMETRY.spans_dropped} dropped) -> {args.trace_out}")
+    if args.metrics_out:
+        from repro.obs.export import write_metrics
+        write_metrics(TELEMETRY, args.metrics_out)
+        print(f"metrics -> {args.metrics_out}")
     return 0
 
 

@@ -1,0 +1,206 @@
+"""Fit the paper's perf/energy models from recorded telemetry.
+
+The plane records per-tenant transfer and compute windows as spans
+(``replay.*`` from simulator/bench replays, ``timeline.*`` from the
+live scheduler — see `record_timeline`), each carrying an ``nv`` attr
+(total virtual devices in the deployment the sample came from).  The
+paper's model is linear in the observables:
+
+* per-tenant transfer  ``t = a/nv + b`` with ``a = t_4gb * yet_mb/4000``
+  (bandwidth-bound YET slice) and ``b = per_vdev_overhead`` (Eq 6);
+* per-tenant compute  ``t = compute_time_1pdev / nv``       (Eq 5);
+* mean device power  ``P = f*p_busy + (1-f)*p_idle_assigned`` for busy
+  fraction ``f`` (the 4-state model of Eq 10 with assigned devices).
+
+so least squares over the spans recovers ``PerfModelInputs`` and
+``PowerParams`` directly.  ``power.sample`` events carry
+``(busy_frac, watts)`` pairs — in a replay the watts column is
+synthesised from the model (it stands in for an NVML/DCGM-style power
+gauge on real hardware).
+
+`plan_from_telemetry` in `core.planner` drives this end to end:
+extract samples -> fit -> plan, picking the transfer mode by simulating
+both under the fitted inputs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import energymodel as em
+from repro.core import perfmodel as pm
+from repro.core.simulator import SimInputs, SimResult, simulate
+from repro.obs.telemetry import Telemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseSample:
+    """One tenant's observed (transfer, compute) at total-vdev count nv."""
+    nv: int
+    transfer_s: float
+    compute_s: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfFit:
+    """A fitted `PerfModelInputs` plus residuals of the least squares."""
+    m: pm.PerfModelInputs
+    transfer_rms_s: float
+    compute_rms_s: float
+    n_samples: int
+
+
+# -- recording ---------------------------------------------------------
+def replay_sim_run(tel: Telemetry, si: SimInputs,
+                   pw: Optional[em.PowerParams] = None,
+                   base: Optional[float] = None,
+                   power_bins: int = 32) -> SimResult:
+    """Simulate ``si`` and re-express its schedule as spans on the plane.
+
+    Each `TenantEvent` becomes a ``replay.transfer`` span with a child
+    ``replay.compute`` span, tagged with the deployment's ``nv``.  When
+    ``pw`` is given, ``power.sample`` events with (busy_frac, watts)
+    are recorded too (watts synthesised from the 4-state model — the
+    replay stand-in for a hardware power gauge).
+    """
+    res = simulate(si)
+    nv = si.tenancy.n_vdev
+    base = tel.now() if base is None else base
+    for ev in res.events:
+        common = dict(nv=nv, pdev=ev.pdev, vdev=ev.vdev, slot=ev.slot)
+        pid = tel.record_span("replay.transfer", base + ev.transfer_start,
+                              base + ev.transfer_end, **common)
+        tel.record_span("replay.compute", base + ev.compute_start,
+                        base + ev.compute_end, parent_id=pid, **common)
+    if pw is not None:
+        for frac, watts in power_samples(res, si.tenancy.n_pdev, pw,
+                                         bins=power_bins):
+            tel.event("power.sample", busy_frac=frac, watts=watts)
+    return res
+
+
+def power_samples(res: SimResult, n_pdev: int, pw: em.PowerParams,
+                  bins: int = 32) -> List[Tuple[float, float]]:
+    """(busy_frac, mean per-device watts) per time bin of a sim run."""
+    out: List[Tuple[float, float]] = []
+    edges = np.linspace(0.0, res.makespan, bins + 1)
+    for lo, hi in zip(edges[:-1], edges[1:]):
+        if hi <= lo:
+            continue
+        busy = sum(max(0.0, min(e.compute_end, hi) - max(e.compute_start, lo))
+                   for e in res.events)
+        frac = min(1.0, busy / (n_pdev * (hi - lo)))
+        watts = frac * pw.p_busy + (1.0 - frac) * pw.p_idle_assigned
+        out.append((frac, watts))
+    return out
+
+
+# -- extraction --------------------------------------------------------
+def samples_from_telemetry(tel: Telemetry,
+                           prefixes: Sequence[str] = ("replay", "timeline"),
+                           ) -> List[PhaseSample]:
+    """Pair ``<prefix>.transfer``/``.compute`` spans into `PhaseSample`s.
+
+    Spans are grouped by (nv, pdev, vdev) and paired in start order, so
+    a tenant that ran k rounds yields k samples.  Spans without an
+    ``nv`` attr (live spans from a layer that doesn't know the
+    deployment) are skipped.
+    """
+    samples: List[PhaseSample] = []
+    for prefix in prefixes:
+        tr: dict = {}
+        cp: dict = {}
+        for s in tel.spans(prefix=prefix + "."):
+            nv = s.attrs.get("nv")
+            if nv is None:
+                continue
+            key = (nv, s.attrs.get("pdev"), s.attrs.get("vdev"))
+            if s.name.endswith(".transfer"):
+                tr.setdefault(key, []).append(s)
+            elif s.name.endswith(".compute"):
+                cp.setdefault(key, []).append(s)
+        for key, ts in tr.items():
+            cs = cp.get(key, [])
+            ts.sort(key=lambda s: (s.t_start, s.span_id))
+            cs.sort(key=lambda s: (s.t_start, s.span_id))
+            for a, b in zip(ts, cs):
+                samples.append(PhaseSample(int(key[0]), a.duration,
+                                           b.duration))
+    return samples
+
+
+def power_samples_from_telemetry(tel: Telemetry) -> List[Tuple[float, float]]:
+    return [(float(s.attrs["busy_frac"]), float(s.attrs["watts"]))
+            for s in tel.spans(name="power.sample")
+            if "busy_frac" in s.attrs and "watts" in s.attrs]
+
+
+# -- fitting -----------------------------------------------------------
+def fit_perf_inputs(samples: Iterable[PhaseSample], *,
+                    name: str = "fitted",
+                    yet_mb: float = pm.YET_MB,
+                    elt_mb: float = pm.ELT_MB,
+                    pf_mb: float = pm.PF_MB,
+                    context_mb: float = pm.CONTEXT_MB,
+                    device_memory_mb: float = pm.K20_MEMORY_MB) -> PerfFit:
+    """Least-squares fit of `PerfModelInputs` from phase samples.
+
+    Transfer regresses on ``[1/nv, 1]`` giving the bandwidth-bound YET
+    coefficient and the per-vdev overhead; compute regresses through
+    the origin on ``1/nv``.  The recovered overhead cannot be split
+    back into Table II's malloc/small/PF/ELT components, so it is
+    carried whole in ``t_small`` (``per_vdev_overhead`` is what the
+    model consumes).  Needs samples from >= 2 distinct nv.
+    """
+    samples = list(samples)
+    nv = np.asarray([s.nv for s in samples], dtype=float)
+    if len(np.unique(nv)) < 2:
+        raise ValueError("fit_perf_inputs needs samples from >= 2 distinct"
+                         f" deployments (got nv={sorted(set(nv))})")
+    tr = np.asarray([s.transfer_s for s in samples], dtype=float)
+    cp = np.asarray([s.compute_s for s in samples], dtype=float)
+
+    a_tr = np.stack([1.0 / nv, np.ones_like(nv)], axis=1)
+    (slope, intercept), *_ = np.linalg.lstsq(a_tr, tr, rcond=None)
+    slope, intercept = max(float(slope), 0.0), max(float(intercept), 0.0)
+    t_4gb = slope / (yet_mb / pm.YET_MB)
+    tr_rms = float(np.sqrt(np.mean(
+        (a_tr @ np.array([slope, intercept]) - tr) ** 2)))
+
+    a_cp = (1.0 / nv)[:, None]
+    (c1,), *_ = np.linalg.lstsq(a_cp, cp, rcond=None)
+    c1 = max(float(c1), 0.0)
+    cp_rms = float(np.sqrt(np.mean((c1 / nv - cp) ** 2)))
+
+    net = pm.NetworkParams(name, t_malloc=0.0, t_small=intercept,
+                           t_4mb=0.0, t_120mb=0.0, t_4gb=t_4gb)
+    m = pm.PerfModelInputs(net, compute_time_1pdev=c1, yet_mb=yet_mb,
+                           elt_mb=elt_mb, pf_mb=pf_mb,
+                           context_mb=context_mb,
+                           device_memory_mb=device_memory_mb)
+    return PerfFit(m, tr_rms, cp_rms, len(samples))
+
+
+def fit_power_params(samples: Sequence[Tuple[float, float]], *,
+                     name: str = "fitted",
+                     p_unassigned: float = 0.0) -> em.PowerParams:
+    """Least-squares fit of the 2-free-state power model.
+
+    ``watts = f*p_busy + (1-f)*p_idle_assigned`` — needs busy-fraction
+    variation across samples.  ``p_unassigned`` is unobservable from an
+    assigned device's samples and passes through.
+    """
+    if len(samples) < 2:
+        raise ValueError("fit_power_params needs >= 2 samples")
+    f = np.asarray([s[0] for s in samples], dtype=float)
+    w = np.asarray([s[1] for s in samples], dtype=float)
+    a = np.stack([f, 1.0 - f], axis=1)
+    coef, _, rank, _ = np.linalg.lstsq(a, w, rcond=None)
+    if rank < 2:
+        raise ValueError("power samples have no busy-fraction variation;"
+                         " cannot separate p_busy from p_idle_assigned")
+    p_busy, p_idle = (float(coef[0]), float(coef[1]))
+    return em.PowerParams(name, p_busy=p_busy, p_idle_assigned=p_idle,
+                          p_unassigned=p_unassigned)

@@ -123,6 +123,7 @@ from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
 from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
                                  apply_unembed, pad_vocab)
+from repro.obs.telemetry import Telemetry, get_telemetry
 from repro.serving.engine import ServingEngine, sample_rows
 from repro.serving.kvcache import (BACKENDS, POS_SENTINEL, PagedKVCache,
                                    paged_attention_decode, paged_scatter)
@@ -155,6 +156,7 @@ class RoundHandle:
     steps: int
     t_start: float
     t_dispatched: float
+    rnd: int = -1                  # round ordinal, for the round-span event
 
     def ready(self) -> bool:
         """Non-blocking probe: has the round's device work finished?
@@ -195,7 +197,8 @@ class ContinuousBatchingEngine:
                  swap: bool = True,
                  swap_store: Optional[HostSwapStore] = None,
                  fault_plane: Optional[Any] = None,
-                 admission_retry_limit: int = 8):
+                 admission_retry_limit: int = 8,
+                 telemetry: Optional[Telemetry] = None):
         cfg = engine.cfg
         if cfg.enc_dec:
             raise ValueError(
@@ -275,6 +278,16 @@ class ContinuousBatchingEngine:
         self.row_steps = 0         # sum over rounds of live rows per step
         self.preemptions = 0
         self.restores = 0
+        # telemetry plane (the global one unless injected); the per-round
+        # (steps, capacity, live_steps) log mirrors the ``round.device``
+        # span events and is what occupancy() is derived from — it is
+        # engine accounting, kept even when the plane is disabled
+        self.tel = get_telemetry(telemetry)
+        self._round_log: List[Tuple[int, int, int]] = []
+        # pool + swap store report onto the same plane
+        self.kv.tel = self.tel
+        if self.swap_store is not None and swap_store is None:
+            self.swap_store.retarget_telemetry(self.tel)
         self._build_jits()
 
     # ------------------------------------------------------------------
@@ -310,8 +323,24 @@ class ContinuousBatchingEngine:
         return [s.priority for s in self._slots if s is not None]
 
     def occupancy(self) -> float:
-        total = self.rounds * self.inner_steps * self.capacity
-        return self.row_steps / total if total else 0.0
+        """Fraction of row-steps that decoded a live row, over *collected*
+        micro-rounds.
+
+        Derived from the per-round span events recorded at collect time
+        (``round.device``: steps, capacity, live row-steps), not from the
+        ``rounds`` counter — ``rounds`` increments at dispatch while
+        ``row_steps`` lags until collect, so the old
+        ``row_steps / (rounds * inner_steps * capacity)`` quotient counted
+        a dispatched-but-uncollected round's masked rows in the
+        denominator and deflated occupancy whenever it was read with a
+        round in flight (exactly the retire-before-dispatch fast path's
+        steady state, and any periodic stats line).  On a drained engine
+        the two agree (tests/test_obs.py pins old == new on an all-live
+        round)."""
+        total = sum(steps * cap for steps, cap, _ in self._round_log)
+        if not total:
+            return 0.0
+        return sum(live for _, _, live in self._round_log) / total
 
     # ------------------------------------------------------------------
     def _init_state(self) -> Dict[str, Any]:
@@ -451,6 +480,7 @@ class ContinuousBatchingEngine:
         def round_fn(params, st, *, steps: int, all_greedy: bool,
                      any_topk: bool):
             self.decode_traces += 1          # incremented at trace time only
+            self.tel.count("trace.decode")
             st, (emitted, act) = jax.lax.scan(
                 lambda c, _: decode_step(params, c, all_greedy, any_topk),
                 st, None, length=steps)
@@ -466,6 +496,7 @@ class ContinuousBatchingEngine:
 
         def prefill_fn(params, batch):
             self.prefill_traces += 1
+            self.tel.count("trace.prefill")
             return self.bundle.prefill_fn(params, batch, sh)
 
         self._prefill_jit = jax.jit(prefill_fn)
@@ -495,6 +526,7 @@ class ContinuousBatchingEngine:
             sampling state are written.  bucket/ring are dynamic: one trace
             per page-row width."""
             self.admit_skip_traces += 1
+            self.tel.count("trace.admit_skip")
             new = dict(st)
             row = jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
                            jnp.int32).at[:pages.shape[0]].set(pages)
@@ -514,6 +546,7 @@ class ContinuousBatchingEngine:
         def admit_fn(st, caches_p, logits0, slot, pages, remaining, temp,
                      topk, key, *, bucket: int, ring: int):
             self.admit_traces += 1
+            self.tel.count("trace.admit")
             new = dict(st)
             nb = pages.shape[0] if pages is not None else 0
             if nb:
@@ -594,6 +627,7 @@ class ContinuousBatchingEngine:
             content, and TRASH is never read as valid, exactly like
             masked-row writes."""
             self.restore_traces += 1
+            self.tel.count("trace.restore")
             new = dict(st)
             new["page_table"] = st["page_table"].at[slot].set(pages)
             new["pos_pool"] = st["pos_pool"].at[scatter_pages].set(pos_rows)
@@ -651,6 +685,12 @@ class ContinuousBatchingEngine:
         """
         if self.fault_plane is not None and reqs:
             self.fault_plane.admission_fault()
+        with self.tel.span("admit.batch", n=len(reqs)) as admit_span:
+            flags = self._try_admit_batch_inner(reqs)
+            admit_span.note(admitted=sum(flags))
+        return flags
+
+    def _try_admit_batch_inner(self, reqs: List[Any]) -> List[bool]:
         flags = [False] * len(reqs)
         plans: List[Dict[str, Any]] = []
         for i, req in enumerate(reqs):
@@ -688,9 +728,12 @@ class ContinuousBatchingEngine:
                 tokens = np.zeros((width, bucket), np.int32)
                 for j, pl in enumerate(chunk):
                     tokens[j] = pl["padded"]
-                logits, caches, _ = self._prefill_jit(
-                    self.params, {"tokens": jnp.asarray(tokens)})
+                with self.tel.span("admit.prefill", bucket=bucket,
+                                   width=width, n=len(chunk)):
+                    logits, caches, _ = self._prefill_jit(
+                        self.params, {"tokens": jnp.asarray(tokens)})
                 self.prefill_calls += 1
+                self.tel.count("admit.prefill_calls")
                 for j, pl in enumerate(chunk):
                     pl["logits"] = logits[j:j + 1]
                     pl["caches"] = jax.tree.map(lambda a, j=j: a[:, j:j + 1],
@@ -741,6 +784,7 @@ class ContinuousBatchingEngine:
                 jnp.asarray(pages), np.int32(target), np.float32(temp),
                 np.int32(topk), key, np.int32(bucket), np.int32(ring))
             self.prefill_skips += 1
+            self.tel.count("admit.prefill_skips")
         else:
             self.state = self._admit_jit(
                 self.state, pl["caches"], pl["logits"], slot,
@@ -802,19 +846,24 @@ class ContinuousBatchingEngine:
         slot table is untouched, so a bare re-dispatch is sound."""
         if self.fault_plane is not None:
             self.fault_plane.round_fault()
-        t0 = time.perf_counter()
-        self._resolve_round_writes()
-        # static sampling tier from the live rows (an all-greedy round is a
-        # bare argmax; at most 3 round variants ever compile)
-        live = [s for s in self._slots if s is not None]
-        all_greedy = all(s.temp <= 0 for s in live)
-        any_topk = any(s.top_k > 0 for s in live)
-        self.state, emitted, act = self._round_jit(
-            self.params, self.state, steps=self.inner_steps,
-            all_greedy=all_greedy, any_topk=any_topk)
-        self.rounds += 1
+        rnd = self.rounds
+        with self.tel.span("round.dispatch", round=rnd, pdev=self.pdev):
+            t0 = time.perf_counter()
+            with self.tel.span("round.cow"):
+                self._resolve_round_writes()
+            # static sampling tier from the live rows (an all-greedy round
+            # is a bare argmax; at most 3 round variants ever compile)
+            live = [s for s in self._slots if s is not None]
+            all_greedy = all(s.temp <= 0 for s in live)
+            any_topk = any(s.top_k > 0 for s in live)
+            with self.tel.span("round.jit", steps=self.inner_steps,
+                               all_greedy=all_greedy):
+                self.state, emitted, act = self._round_jit(
+                    self.params, self.state, steps=self.inner_steps,
+                    all_greedy=all_greedy, any_topk=any_topk)
+            self.rounds += 1
         return RoundHandle(emitted, act, self.inner_steps, t0,
-                           time.perf_counter())
+                           time.perf_counter(), rnd=rnd)
 
     def collect(self, handle: RoundHandle) -> CollectResult:
         """Materialise a round's emissions, append tokens to their rows and
@@ -823,7 +872,17 @@ class ContinuousBatchingEngine:
         act = np.asarray(handle.act)
         slot_reqs = [s.req if s is not None else None for s in self._slots]
         active_steps = act.sum(axis=0).astype(np.int64)
-        self.row_steps += int(active_steps.sum())
+        live_steps = int(active_steps.sum())
+        self.row_steps += live_steps
+        # the round-span event: the dispatch->materialised device window
+        # with its live/total row-step split.  occupancy() and the
+        # scheduler's busy split derive from this log, not from the
+        # dispatch-time ``rounds`` counter
+        self._round_log.append((handle.steps, self.capacity, live_steps))
+        self.tel.record_span("round.device", handle.t_start,
+                             time.perf_counter(), round=handle.rnd,
+                             steps=handle.steps, capacity=self.capacity,
+                             live_steps=live_steps, pdev=self.pdev)
         finished: List[Tuple[Any, np.ndarray, int]] = []
         retired: List[_Slot] = []
         for c, s in enumerate(self._slots):
@@ -909,12 +968,15 @@ class ContinuousBatchingEngine:
             logits=np.asarray(st["logits"][slot]), host_kv=host_kv,
             host_pos=host_pos, n_private=len(private),
             preemptions=s.preemptions + 1, t_first=s.t_first)
-        ticket = self.swap_store.put(rec)
-        kv.swap_out(slot, len(private))
-        self.state = self._evict_jit(self.state, np.int32(slot))
+        with self.tel.span("swap.out", slot=slot, pages=nb,
+                           private=len(private), pdev=self.pdev):
+            ticket = self.swap_store.put(rec)
+            kv.swap_out(slot, len(private))
+            self.state = self._evict_jit(self.state, np.int32(slot))
         self._slots[slot] = None
         self._free_slots.append(slot)
         self.preemptions += 1
+        self.tel.count("swap.preemptions")
         return ticket
 
     def try_restore(self, ticket: int) -> bool:
@@ -964,14 +1026,16 @@ class ContinuousBatchingEngine:
         row[:nb] = pages
         scatter = np.full((mb,), PagedKVCache.TRASH, np.int32)
         scatter[len(shared):nb] = np.asarray(pages)[len(shared):nb]
-        self.state = self._restore_jit(
-            self.state, arrays["kv"], arrays["pos"],
-            jnp.asarray(rec.logits), np.int32(slot), jnp.asarray(row),
-            jnp.asarray(scatter), np.int32(rec.pos),
-            np.int32(rec.remaining), np.float32(rec.temp),
-            np.int32(rec.top_k), jnp.asarray(rec.key),
-            np.int32(rec.lstep), np.int32(rec.ring))
-        kv.swap_in(rec.n_private)
+        with self.tel.span("swap.restore", slot=slot, pages=nb,
+                           reshared=len(shared), pdev=self.pdev):
+            self.state = self._restore_jit(
+                self.state, arrays["kv"], arrays["pos"],
+                jnp.asarray(rec.logits), np.int32(slot), jnp.asarray(row),
+                jnp.asarray(scatter), np.int32(rec.pos),
+                np.int32(rec.remaining), np.float32(rec.temp),
+                np.int32(rec.top_k), jnp.asarray(rec.key),
+                np.int32(rec.lstep), np.int32(rec.ring))
+            kv.swap_in(rec.n_private)
         self.swap_store.pop(ticket)
         if self.prefix_sharing and rec.chain_keys:
             # unwritten restored blocks hold bitwise their chains' prefill
@@ -984,6 +1048,7 @@ class ContinuousBatchingEngine:
             priority=rec.priority, preemptions=rec.preemptions,
             chain_keys=list(rec.chain_keys), t_first=rec.t_first)
         self.restores += 1
+        self.tel.count("swap.restores")
         return True
 
     def drop_swapped(self, ticket: int) -> SwapRecord:

@@ -39,6 +39,7 @@ import numpy as np
 from repro.configs import ArchConfig
 from repro.distributed.sharding import Sharder, null_sharder
 from repro.models.model import ModelBundle, build_model
+from repro.obs.telemetry import Telemetry, get_telemetry
 
 
 def sample_rows(logits: jax.Array, temps: jax.Array, topks: jax.Array,
@@ -119,8 +120,10 @@ class PendingGeneration:
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params: Any,
                  sh: Optional[Sharder] = None, temperature: float = 0.0,
-                 kernel_backend: str = "jnp"):
+                 kernel_backend: str = "jnp",
+                 telemetry: Optional[Telemetry] = None):
         self.cfg = cfg
+        self.tel = get_telemetry(telemetry)
         self.bundle: ModelBundle = build_model(cfg)
         self.sh = sh or null_sharder()
         if self.sh.mesh is not None:
@@ -141,6 +144,7 @@ class ServingEngine:
 
         def prefill_fn(p, b):
             self.prefill_traces += 1     # python side effect: trace time only
+            self.tel.count("trace.engine_prefill")
             return self.bundle.prefill_fn(p, b, self.sh)
 
         self._prefill = jax.jit(prefill_fn)
@@ -149,6 +153,7 @@ class ServingEngine:
 
         def decode_loop(params, logits0, caches, idx, temp, key,
                         *, steps: int, greedy: bool):
+            self.tel.count("trace.engine_decode")   # trace time only
             # sampling folded into the scanned step: token i is sampled from
             # logits i with key i, then decoded to produce logits i+1, and
             # key i+1 = fold_in(key i, i) — the exact key/logits schedule of
@@ -178,6 +183,7 @@ class ServingEngine:
         def decode_loop_rows(params, logits0, caches, idx, temps, topks,
                              keys, *, steps: int, all_greedy: bool,
                              any_topk: bool):
+            self.tel.count("trace.engine_decode_rows")   # trace time only
             # per-request sampling params ride the scan carry: each row keeps
             # its own (temperature, top_k, key), same key/logits schedule as
             # the scalar path so greedy rows stay token-exact with generate()
@@ -216,7 +222,14 @@ class ServingEngine:
         (no dense intermediate hop), which is the compute side of the fused
         prefill-scatter pipeline."""
         self.prefill_calls += 1
-        return self._prefill(self.params, batch)
+        if not self.tel.enabled:
+            return self._prefill(self.params, batch)
+        with self.tel.span("engine.prefill",
+                           batch=int(batch["tokens"].shape[0]),
+                           seq=int(batch["tokens"].shape[1])):
+            out = self._prefill(self.params, batch)
+        self.tel.count("engine.prefill_calls")
+        return out
 
     # ------------------------------------------------------------------
     def _sample(self, logits: jax.Array, key) -> jax.Array:
@@ -257,7 +270,14 @@ class ServingEngine:
             key = jax.random.fold_in(key, step)
             tok = self._sample(logits, key)
         jax.block_until_ready(logits)
-        decode_s = time.perf_counter() - t0
+        t_done = time.perf_counter()
+        decode_s = t_done - t0
+        if self.tel.enabled:
+            self.tel.record_span("engine.generate",
+                                 t_done - prefill_s - decode_s, t_done,
+                                 batch=int(prompts.shape[0]),
+                                 steps=int(max_new_tokens))
+            self.tel.count("engine.decode_steps", int(max_new_tokens))
         return GenerationResult(np.stack(out, axis=1), prefill_s, decode_s,
                                 max_new_tokens)
 
@@ -278,10 +298,23 @@ class ServingEngine:
         scan carry via :func:`sample_rows`; left as None, the engine-level
         scalar path runs (token-exact with ``generate``, same key schedule).
         """
+        if not self.tel.enabled:
+            return self._dispatch_inner(prompts, max_new_tokens,
+                                        extra_inputs, seed, temperatures,
+                                        top_ks, seeds)
+        with self.tel.span("engine.dispatch", batch=int(prompts.shape[0]),
+                           steps=int(max_new_tokens)):
+            return self._dispatch_inner(prompts, max_new_tokens,
+                                        extra_inputs, seed, temperatures,
+                                        top_ks, seeds)
+
+    def _dispatch_inner(self, prompts, max_new_tokens, extra_inputs, seed,
+                        temperatures, top_ks, seeds) -> PendingGeneration:
         batch = self._make_batch(prompts, extra_inputs)
         t_start = time.perf_counter()
         logits, caches, idx = self.prefill(batch)
         self.decode_steps += int(max_new_tokens)
+        self.tel.count("engine.decode_steps", int(max_new_tokens))
         if temperatures is not None or top_ks is not None or seeds is not None:
             b = prompts.shape[0]
             temps = np.full(b, self.temperature, np.float32) \
@@ -314,9 +347,10 @@ class ServingEngine:
         dispatch and await they measure pipeline latency, not exclusive
         device occupancy (the scheduler's timeline carries the honest
         per-window stamps)."""
-        jax.block_until_ready(handle.prefill_logits)
-        t_prefill = time.perf_counter()
-        tokens = np.asarray(handle.tokens)     # blocks on the scanned decode
-        t_done = time.perf_counter()
+        with self.tel.span("engine.await", steps=handle.steps):
+            jax.block_until_ready(handle.prefill_logits)
+            t_prefill = time.perf_counter()
+            tokens = np.asarray(handle.tokens)  # blocks on the scanned decode
+            t_done = time.perf_counter()
         return GenerationResult(tokens, t_prefill - handle.t_start,
                                 t_done - t_prefill, handle.steps)

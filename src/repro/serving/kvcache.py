@@ -111,6 +111,7 @@ import numpy as np
 from repro.configs import ATTN, ArchConfig
 from repro.distributed.sharding import Sharder
 from repro.models.layers import _project_qkv, apply_rope
+from repro.obs.telemetry import get_telemetry
 
 POS_SENTINEL = 2 ** 30     # matches init_kv_cache's "empty slot" position
 
@@ -181,6 +182,10 @@ class PagedKVCache:
         self.swap_outs = 0
         self.swap_ins = 0
         self.swap_drops = 0
+        # telemetry plane: every host counter above is mirrored as a
+        # ``kv.*`` metric.  The owning engine re-points this at its own
+        # plane; standalone pools report to the global one.
+        self.tel = get_telemetry(None)
 
     # ------------------------------------------------------------------
     # host-side allocator
@@ -288,6 +293,7 @@ class PagedKVCache:
             if b < len(shared) and self._ref.get(shared[b], 0) + 1 > 1:
                 reserve += 1
         if self.available() - n_fresh - revived < reserve:
+            self.tel.count("kv.alloc_blocked")
             return None
         for p in shared:
             if self._ref.get(p, 0) == 0:        # revive a cached page
@@ -301,6 +307,17 @@ class PagedKVCache:
         self._pending[slot] = will_write
         self.pages_allocated += n_fresh
         self.pages_shared += len(shared)
+        tel = self.tel
+        if tel.enabled:
+            tel.count("kv.pages_allocated", n_fresh)
+            if shared:
+                tel.count("kv.pages_shared", len(shared))
+                tel.count("kv.prefix_hits")
+            tel.gauge("kv.free_pages", len(self._free))
+            # zero-length span so the pool's activity lands on the trace
+            # timeline (parents under the enclosing admission span)
+            tel.event("kv.alloc", slot=slot, fresh=n_fresh,
+                      shared=len(shared))
         return np.asarray(self._owned[slot], np.int32)
 
     def register(self, slot: int, keys: List[bytes]) -> None:
@@ -356,6 +373,7 @@ class PagedKVCache:
             pages[blk] = dst
             self.cow_forks += 1
             self.pages_allocated += 1
+            self.tel.count("kv.cow_forks")
             return page, dst
         if page in self._page_key:
             if (preserve and self._free
@@ -373,6 +391,7 @@ class PagedKVCache:
                 self._cache_seq += 1
                 self.pristine_forks += 1
                 self.pages_allocated += 1
+                self.tel.count("kv.pristine_forks")
                 return page, dst
             self._unregister(page)
         return None
@@ -403,6 +422,8 @@ class PagedKVCache:
         released = self.free(slot)
         self.swapped_pages += host_blocks
         self.swap_outs += 1
+        self.tel.count("kv.swap_out_blocks", host_blocks)
+        self.tel.gauge("kv.swapped_pages", self.swapped_pages)
         return released
 
     def swap_in(self, host_blocks: int, restored: bool = True) -> None:
@@ -414,8 +435,11 @@ class PagedKVCache:
         self.swapped_pages -= host_blocks
         if restored:
             self.swap_ins += 1
+            self.tel.count("kv.swap_in_blocks", host_blocks)
         else:
             self.swap_drops += 1
+            self.tel.count("kv.swap_drop_blocks", host_blocks)
+        self.tel.gauge("kv.swapped_pages", self.swapped_pages)
 
     def free(self, slot: int) -> int:
         """Retire a slot: decrement its pages' refcounts.  Pages reaching
@@ -434,6 +458,9 @@ class PagedKVCache:
                 else:
                     self._free.append(page)
         self._pending.pop(slot, None)
+        if self.tel.enabled and released:
+            self.tel.count("kv.pages_freed", released)
+            self.tel.gauge("kv.free_pages", len(self._free))
         return released
 
     # ------------------------------------------------------------------
@@ -455,6 +482,7 @@ class PagedKVCache:
                        key=lambda q: (self._cached[q][0],
                                       -self._cached[q][1]))
             self._unregister(page)
+            self.tel.count("kv.evictions")
         self.pages_reused += page in self._ever_used
         self._ever_used.add(page)
         return page
@@ -505,6 +533,7 @@ class PagedKVCache:
         if host_pages is not None:
             assert self.swapped_pages == host_pages, \
                 (self.swapped_pages, host_pages)
+        self.tel.count("kv.conservation_checks")
 
     # ------------------------------------------------------------------
     # device-state constructors (engine holds the results in its pytree)

@@ -116,6 +116,7 @@ from repro.core.pipeline import CompletionWaiter, TenantTimeline
 from repro.core.tenancy import TenancyConfig
 from repro.distributed.fault import (HeartbeatMonitor, InjectedFault,
                                      StragglerDetector)
+from repro.obs.telemetry import Telemetry, get_telemetry, record_timeline
 from repro.serving.engine import (GenerationResult, PendingGeneration,
                                   ServingEngine)
 
@@ -198,8 +199,10 @@ class MultiTenantScheduler:
                  round_fault_limit: int = 3,
                  fault_plane: Optional[Any] = None,
                  heartbeat_timeout_s: float = 300.0,
-                 restore_prefetch: int = 4):
+                 restore_prefetch: int = 4,
+                 telemetry: Optional[Telemetry] = None):
         self.engine = engine
+        self.tel = get_telemetry(telemetry)
         self.max_batch = max_batch
         self.tenancy = tenancy or TenancyConfig(1, 2)
         self.straggler_priority = straggler_priority
@@ -244,6 +247,7 @@ class MultiTenantScheduler:
                 ckw = dict(continuous or {})
                 if fault_plane is not None:
                     ckw.setdefault("fault_plane", fault_plane)
+                ckw.setdefault("telemetry", telemetry)
                 self._ceng = ContinuousBatchingEngine(engine, **ckw)
         self._cont_inflight: Optional[_InflightRound] = None
         self._cont_rounds = 0
@@ -480,6 +484,8 @@ class MultiTenantScheduler:
             self._finalise_windows(cur)
         self.stats[cur.tenant]["tokens"] += result.tokens.size
         self.timeline.append(cur.entry)
+        record_timeline(self.tel, cur.entry, base=self._t0,
+                        tenant=cur.tenant, nv=self.tenancy.n_vdev)
         done_abs = self._t0 + cur.entry.compute_end
         return [Response(cur.tenant, result.tokens[i],
                          done_abs - r.arrival_s, len(cur.reqs))
@@ -503,8 +509,10 @@ class MultiTenantScheduler:
         self.rejected.append(req)
         st = self.stats[req.tenant]
         st["rejected"] += 1
+        self.tel.count("sched.rejected")
         if shed:
             st["shed"] += 1
+            self.tel.count("sched.shed")
         self._attempts.pop(id(req), None)
         self._backoff.pop(id(req), None)
         self._terminal.append(Response(
@@ -517,6 +525,7 @@ class MultiTenantScheduler:
         exceeded for this request)."""
         self.failed.append(req)
         self.stats[req.tenant]["failed"] += 1
+        self.tel.count("sched.failed")
         self._attempts.pop(id(req), None)
         self._backoff.pop(id(req), None)
         self._terminal.append(Response(
@@ -643,6 +652,9 @@ class MultiTenantScheduler:
                 if victim is None:
                     break
                 self.stats[eng._slots[victim].req.tenant]["preempted"] += 1
+                # the victim's accumulated busy share must not leak onto
+                # whatever request next occupies this slot
+                self._row_busy.pop(victim, None)
                 self._restore_q.append(eng.preempt(victim))
                 try:
                     ok = eng.try_admit_batch([req])[0]
@@ -692,6 +704,7 @@ class MultiTenantScheduler:
                     if victim is not None:
                         self.stats[eng._slots[victim].req.tenant][
                             "preempted"] += 1
+                        self._row_busy.pop(victim, None)
                         self._restore_q.append(eng.preempt(victim))
                         ok = eng.try_restore(ticket)
             except InjectedFault:
@@ -741,6 +754,16 @@ class MultiTenantScheduler:
         nothing is in flight and nothing was admitted (so no retirement
         can ever free pages), failed picks count against the bounded
         retry budget and reject terminally past it."""
+        if not self.tel.enabled:
+            return self._admit_continuous_inner(allow_preempt)
+        with self.tel.span("sched.admit",
+                           backlog=sum(len(q) for q in
+                                       self.queues.values())) as sp:
+            n = self._admit_continuous_inner(allow_preempt)
+            sp.note(admitted=n)
+            return n
+
+    def _admit_continuous_inner(self, allow_preempt: bool) -> int:
         eng = self._ceng
         self._adm_clock += 1
         self._shed_backlog()
@@ -761,10 +784,15 @@ class MultiTenantScheduler:
                     self._attempts.pop(id(req), None)
                     self._backoff.pop(id(req), None)
                     slot = self._slot_of[req.tenant]
-                    self.admission_timeline.append(TenantTimeline(
+                    entry = TenantTimeline(
                         vdev=slot, pdev=eng.pdev, slot=slot,
                         transfer_start=t0, transfer_end=t1,
-                        compute_start=t1, compute_end=t1))
+                        compute_start=t1, compute_end=t1)
+                    self.admission_timeline.append(entry)
+                    record_timeline(self.tel, entry, base=self._t0,
+                                    prefix="admission",
+                                    tenant=req.tenant,
+                                    nv=self.tenancy.n_vdev)
                 else:
                     failures.append(req)
             if (failures and allow_preempt and self.preemption
@@ -871,6 +899,10 @@ class MultiTenantScheduler:
         eng = self._ceng
         if self.heartbeat.suspect():
             self.heartbeat_suspects += 1
+            if self.tel.enabled:
+                self.tel.count("heartbeat.missed")
+                self.tel.gauge("heartbeat.suspects",
+                               self.heartbeat_suspects)
         if self._cont_inflight is None:
             asm0 = time.perf_counter() - self._t0
             admitted = self._admit_continuous(
@@ -916,12 +948,15 @@ class MultiTenantScheduler:
         if res is None:
             res = eng.collect(cur.handle)
         self.heartbeat.beat()                    # round k landed
+        self.tel.count("heartbeat.beats")
         cur.stamped.wait()
         cur.entry.compute_start = max(cur.entry.compute_start,
                                       min(self._last_ready,
                                           cur.entry.compute_end))
         self._last_ready = cur.entry.compute_end
         self.timeline.append(cur.entry)
+        record_timeline(self.tel, cur.entry, base=self._t0,
+                        nv=self.tenancy.n_vdev)
         # busy attribution: the round's device window split across tenants
         # by live row-steps (masked lanes bill nobody); the same row-steps
         # feed the fair-share admission order
@@ -984,10 +1019,13 @@ class MultiTenantScheduler:
         # stage-ahead: assemble the next slot's batch before finalising this
         # slot's responses (host-side analogue of stage(k+1) under compute(k))
         self._stage_next()
-        self.timeline.append(TenantTimeline(
+        entry = TenantTimeline(
             vdev=self._slot_of[tenant], pdev=0, slot=self._slot_of[tenant],
             transfer_start=asm_start, transfer_end=asm_end,
-            compute_start=t0 - self._t0, compute_end=done - self._t0))
+            compute_start=t0 - self._t0, compute_end=done - self._t0)
+        self.timeline.append(entry)
+        record_timeline(self.tel, entry, base=self._t0, tenant=tenant,
+                        nv=self.tenancy.n_vdev)
         return [Response(tenant, result.tokens[i], done - r.arrival_s,
                          len(reqs)) for i, r in enumerate(reqs)]
 
@@ -996,6 +1034,14 @@ class MultiTenantScheduler:
         """Serve one scheduling step; returns responses (None if idle).
         Overlapped/blocking: one tenant slot.  Continuous: one decode
         micro-round (responses are the rows that retired in it)."""
+        if not self.tel.enabled:
+            return self._step_inner()
+        with self.tel.span("sched.step", mode=self.mode) as sp:
+            r = self._step_inner()
+            sp.note(responses=0 if r is None else len(r))
+            return r
+
+    def _step_inner(self) -> Optional[List[Response]]:
         if self.mode == "continuous":
             return self._step_continuous()
         if self.mode == "overlapped":

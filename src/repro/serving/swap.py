@@ -41,7 +41,8 @@ from typing import Any, Dict, List, Optional, Set
 import numpy as np
 
 from repro.core.tenancy import TenancyConfig, TenantTask, VirtualDevicePool
-from repro.core.transfer import StagedChunk, StagingEngine
+from repro.core.transfer import StagedChunk, StagingEngine, _tree_bytes
+from repro.obs.telemetry import get_telemetry
 
 
 @dataclasses.dataclass
@@ -105,6 +106,19 @@ class HostSwapStore:
         self.puts = 0
         self.fetches = 0
         self.poisoned_reads = 0
+        # telemetry plane (owning engine re-points this at its own one)
+        self.tel = get_telemetry(None)
+
+    def retarget_telemetry(self, tel: Any) -> None:
+        """Re-point the store *and its staging lanes* at ``tel`` — the
+        lane engines record the ``transfer.stage`` spans, so an owning
+        engine with an instance plane must redirect them too."""
+        self.tel = tel
+        self.staging.tel = tel
+        if self.lanes is not None:
+            self.lanes.tel = tel
+            for eng in self.lanes.engines.values():
+                eng.tel = tel
 
     # ------------------------------------------------------------------
     def __len__(self) -> int:
@@ -127,6 +141,11 @@ class HostSwapStore:
         self._next_ticket += 1
         self._records[ticket] = rec
         self.puts += 1
+        if self.tel.enabled:
+            self.tel.count("swap.puts")
+            self.tel.count("swap.bytes_out",
+                           _tree_bytes(rec.host_kv) + rec.host_pos.nbytes)
+            self.tel.gauge("swap.host_pages", self.pages())
         return ticket
 
     def prefetch(self, ticket: int) -> None:
@@ -137,6 +156,9 @@ class HostSwapStore:
             return
         rec = self._records[ticket]
         tree = {"kv": rec.host_kv, "pos": rec.host_pos}
+        self.tel.event("swap.prefetch", ticket=ticket,
+                       lanes=(self.lanes.n_lanes if self.lanes is not None
+                              else 1))
         if self.lanes is not None:
             # KV blocks (S, max_blocks, P, Hkv, D) shard along Hkv; the
             # position rows replicate.  Each shard stages on its own lane.
@@ -163,19 +185,26 @@ class HostSwapStore:
                 self.fault_plane.swap_read_fault()
             except Exception:
                 self.poisoned_reads += 1
+                self.tel.count("swap.poisoned_reads")
                 self._staged.pop(ticket, None)
                 raise
-        self.prefetch(ticket)
-        staged = self._staged.pop(ticket)
-        if self.lanes is not None:
-            arrays = self.lanes.wait(staged)
-        else:
-            arrays = self.staging.wait(staged).arrays
+        with self.tel.span("swap.fetch", ticket=ticket):
+            self.prefetch(ticket)
+            staged = self._staged.pop(ticket)
+            if self.lanes is not None:
+                arrays = self.lanes.wait(staged)
+            else:
+                arrays = self.staging.wait(staged).arrays
         self.fetches += 1
+        if self.tel.enabled:
+            self.tel.count("swap.fetches")
+            self.tel.count("swap.bytes_in", _tree_bytes(arrays))
         return arrays
 
     def pop(self, ticket: int) -> SwapRecord:
         """Remove a record (successful restore, or terminal drop after a
         poisoned-read retry budget is exhausted)."""
         self._staged.pop(ticket, None)
-        return self._records.pop(ticket)
+        rec = self._records.pop(ticket)
+        self.tel.gauge("swap.host_pages", self.pages())
+        return rec

@@ -1,0 +1,510 @@
+"""Observability plane: spans/metrics core, instrumentation contracts,
+exporters, and the telemetry-driven capacity planner.
+
+* telemetry core: span nesting/parent links from the per-thread stack,
+  zero-length events, the bounded ring (drops counted, never grown),
+  counters/gauges/histograms and their snapshots;
+* overhead contract: a disabled plane allocates nothing on the decode
+  micro-round path (``spans_opened`` and the counter table stay flat),
+  and an enabled plane changes no compile counts and no tokens;
+* the occupancy regression (PR 8): ``occupancy()`` is derived from the
+  per-round collect log, so a dispatched-but-uncollected round no longer
+  deflates it the way the old ``row_steps / (rounds * inner * capacity)``
+  quotient did;
+* exporters: Chrome-trace JSON round-trips with parent links intact
+  (round.jit > round.dispatch > sched.step) and the Prometheus text
+  exposition parses back to the counter table; a golden-file run pins
+  the engine-level counter/span-name schema;
+* fit + plan: `plan_from_telemetry` on a replayed deployment sweep picks
+  the same (n_pdev, tenancy, transfer-mode) optimum as the static
+  Table II planner, with fitted predictions agreeing with the simulator.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import energymodel as em
+from repro.core import perfmodel as pm
+from repro.core.pipeline import TenantTimeline
+from repro.core.planner import plan, plan_from_telemetry
+from repro.core.simulator import SimInputs, simulate
+from repro.core.tenancy import TenancyConfig
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.obs.export import (chrome_trace, parse_prometheus_text,
+                              prometheus_text, stats_line,
+                              write_chrome_trace)
+from repro.obs.fit import (fit_perf_inputs, fit_power_params, PhaseSample,
+                           replay_sim_run, samples_from_telemetry)
+from repro.obs.telemetry import (NULL_SPAN, record_timeline, Telemetry,
+                                 TELEMETRY)
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.multitenant import MultiTenantScheduler, Request
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "obs_serving_counters.json")
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    return ServingEngine(cfg, params)
+
+
+def _mk_reqs(engine, rng, n, plen=12, steps=8, tenant="a", **kw):
+    return [Request(tenant, rng.integers(1, engine.cfg.vocab_size,
+                                         plen).astype(np.int32),
+                    max_new_tokens=steps, **kw) for _ in range(n)]
+
+
+def _drain_lockstep(ceng, reqs):
+    """Admit/dispatch/collect in lockstep — deterministic by construction
+    (no ``handle.ready()`` timing races)."""
+    queue = list(reqs)
+    done = []
+    while queue or ceng.active_count():
+        free = ceng.free_slot_count()
+        if queue and free:
+            batch, queue = queue[:free], queue[free:]
+            flags = ceng.try_admit_batch(batch)
+            assert all(flags)
+        h = ceng.dispatch_round()
+        done.extend(ceng.collect(h).finished)
+    return done
+
+
+# ---------------------------------------------------------------------
+# telemetry core
+# ---------------------------------------------------------------------
+def test_span_nesting_and_parent_links():
+    tel = Telemetry(enabled=True)
+    with tel.span("sched.step", mode="continuous") as outer:
+        with tel.span("round.dispatch") as inner:
+            tel.event("kv.alloc", slot=3)
+            inner.note(steps=4)
+        outer.note(responses=2)
+    spans = {s.name: s for s in tel.spans()}
+    assert set(spans) == {"sched.step", "round.dispatch", "kv.alloc"}
+    assert spans["sched.step"].parent_id is None
+    assert spans["round.dispatch"].parent_id == spans["sched.step"].span_id
+    assert spans["kv.alloc"].parent_id == spans["round.dispatch"].span_id
+    assert spans["kv.alloc"].duration == 0.0
+    assert spans["round.dispatch"].attrs == {"steps": 4}
+    assert spans["sched.step"].attrs == {"mode": "continuous",
+                                         "responses": 2}
+    # children close inside their parent's window on the same clock
+    assert (spans["sched.step"].t_start <= spans["round.dispatch"].t_start
+            <= spans["round.dispatch"].t_end <= spans["sched.step"].t_end)
+    assert tel.spans_opened == 3 and tel.spans_dropped == 0
+
+
+def test_ring_buffer_drops_oldest_and_reset():
+    tel = Telemetry(enabled=True, max_spans=4)
+    for i in range(6):
+        tel.event("kv.alloc", i=i)
+    spans = tel.spans()
+    assert len(spans) == 4
+    assert [s.attrs["i"] for s in spans] == [2, 3, 4, 5]   # oldest dropped
+    assert tel.spans_dropped == 2
+    assert tel.spans_opened == 6                # opened counts the dropped
+    tel.count("kv.pages_allocated", 3)
+    tel.reset()
+    assert tel.spans() == [] and tel.counter_snapshot() == {}
+    assert tel.spans_dropped == 0 and tel.enabled
+
+
+def test_disabled_plane_is_free():
+    tel = Telemetry()          # disabled by default
+    assert tel.span("sched.step") is NULL_SPAN        # shared singleton
+    with tel.span("sched.step") as sp:
+        sp.note(anything=1)
+    tel.event("kv.alloc")
+    tel.count("c"), tel.gauge("g", 1.0), tel.observe("h", 2.0)
+    assert tel.record_span("round.device", 0.0, 1.0) is None
+    assert tel.spans_opened == 0 and tel.spans() == []
+    assert tel.metric_snapshot() == {"counters": {}, "gauges": {},
+                                     "histograms": {}}
+
+
+def test_metrics_and_snapshots():
+    tel = Telemetry(enabled=True)
+    tel.count("kv.pages_allocated", 4)
+    tel.count("kv.pages_allocated")
+    tel.gauge("kv.free_pages", 7)
+    for v in (0.5, 2.0, 1.0):
+        tel.observe("round.wall_s", v)
+    snap = tel.metric_snapshot()
+    assert snap["counters"] == {"kv.pages_allocated": 5}
+    assert snap["gauges"] == {"kv.free_pages": 7}
+    assert snap["histograms"]["round.wall_s"] == {
+        "count": 3, "sum": 3.5, "min": 0.5, "max": 2.0}
+    line = stats_line(tel, keys=("kv.pages_allocated", "missing"), step=9)
+    assert line == "obs: kv.pages_allocated=5 missing=0 step=9"
+
+
+def test_record_timeline_mirrors_entry_as_spans():
+    tel = Telemetry(enabled=True)
+    entry = TenantTimeline(vdev=1, pdev=0, slot=2, transfer_start=0.1,
+                           transfer_end=0.3, compute_start=0.3,
+                           compute_end=0.9)
+    record_timeline(tel, entry, base=tel.t0, tenant="a", nv=4)
+    tr, = tel.spans(name="timeline.transfer")
+    cp, = tel.spans(name="timeline.compute")
+    assert cp.parent_id == tr.span_id
+    assert tr.attrs["nv"] == 4 and tr.attrs["slot"] == 2
+    assert tr.duration == pytest.approx(0.2)
+    assert cp.duration == pytest.approx(0.6)
+
+
+# ---------------------------------------------------------------------
+# satellite 1: occupancy derived from the round log
+# ---------------------------------------------------------------------
+def test_occupancy_not_deflated_by_inflight_round(engine, rng):
+    """Old formula counted a dispatched round's capacity before its live
+    steps landed; the round-log version only scores collected rounds.
+    On a drained engine the two agree exactly."""
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16)
+    old = lambda: (ceng.row_steps
+                   / (ceng.rounds * ceng.inner_steps * ceng.capacity))
+    assert all(ceng.try_admit_batch(_mk_reqs(engine, rng, 2, steps=8)))
+    h = ceng.dispatch_round()
+    ceng.collect(h)
+    assert ceng.occupancy() == pytest.approx(1.0)      # round 1: all live
+    h = ceng.dispatch_round()                          # round 2 in flight
+    assert old() == pytest.approx(0.5)           # the PR-3..7 deflation bug
+    assert ceng.occupancy() == pytest.approx(1.0)      # unaffected
+    ceng.collect(h)                                    # rows retire here
+    assert ceng.active_count() == 0
+    # drained: the old quotient and the round-log derivation agree
+    assert ceng.occupancy() == pytest.approx(old()) == pytest.approx(1.0)
+
+
+# ---------------------------------------------------------------------
+# satellite 3: overhead contract
+# ---------------------------------------------------------------------
+def test_disabled_plane_allocates_nothing_on_decode_path(engine, rng):
+    """Layers resolve ``telemetry=None`` to the global plane; with it
+    disabled a full admit/decode/collect run must not open a single span
+    or touch a counter (``spans_opened`` counts every allocation ever
+    attempted, including ones a ring would drop)."""
+    assert not TELEMETRY.enabled
+    before = (TELEMETRY.spans_opened, TELEMETRY.counter_snapshot(),
+              TELEMETRY.metric_snapshot())
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16)
+    done = _drain_lockstep(ceng, _mk_reqs(engine, rng, 3, steps=6))
+    assert len(done) == 3
+    assert (TELEMETRY.spans_opened, TELEMETRY.counter_snapshot(),
+            TELEMETRY.metric_snapshot()) == before
+
+
+def test_enabled_plane_changes_no_compile_counts(engine, rng):
+    """The test_continuous compile-count contract, replayed with the
+    plane on: trace-time counters fire exactly once per trace and the
+    engine's trace counts are unchanged by instrumentation."""
+    tel = Telemetry(enabled=True)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=32,
+                                    telemetry=tel)
+    cfg = engine.cfg
+    mk = lambda plen, steps: Request("a", rng.integers(
+        1, cfg.vocab_size, plen).astype(np.int32), max_new_tokens=steps)
+    ceng.run_all([mk(6, 1), mk(8, 5), mk(7, 9)])
+    ceng.run_all([mk(12, 2), mk(16, 7)])
+    ceng.run_all([mk(5, 11), mk(14, 3)])
+    # identical to the uninstrumented contract in test_continuous.py
+    assert ceng.decode_traces == 1
+    assert ceng.admit_traces == 2
+    assert ceng.prefill_traces == 4
+    assert ceng.prefill_calls == 5
+    # and the plane's trace-time counters mirror them exactly
+    c = tel.counter_snapshot()
+    assert c["trace.decode"] == 1
+    assert c["trace.admit"] == 2
+    assert c["trace.prefill"] == 4
+    assert c["admit.prefill_calls"] == 5
+
+
+def test_tokens_identical_enabled_vs_disabled(engine, rng):
+    """Instrumentation changed no numerics: the same request mix decodes
+    to bitwise-identical tokens with the plane on and off."""
+    prompts = [rng.integers(1, engine.cfg.vocab_size, n).astype(np.int32)
+               for n in (12, 8, 15)]
+    outs = []
+    for tel in (Telemetry(), Telemetry(enabled=True)):
+        ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                        inner_steps=4, max_prompt_len=16,
+                                        telemetry=tel)
+        reqs = [Request("a", p.copy(), max_new_tokens=7) for p in prompts]
+        done = {id(r): t for (r, t, _c) in _drain_lockstep(ceng, reqs)}
+        outs.append([done[id(r)] for r in reqs])
+    for off, on in zip(*outs):
+        np.testing.assert_array_equal(off, on)
+
+
+# ---------------------------------------------------------------------
+# scheduler-level run: layer coverage, preemption spans, heartbeat
+# ---------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sched_run(engine):
+    """One preempting 2-tenant scheduler run on an instance plane: tier-1
+    rows fill both slots, a late tier-0 arrival forces swap-out/restore."""
+    tel = Telemetry(enabled=True)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    num_pages=24, inner_steps=4,
+                                    max_prompt_len=16, telemetry=tel)
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous_engine=ceng, preemption=True,
+                                 telemetry=tel)
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        sched.submit(Request(f"t{i}", rng.integers(
+            1, engine.cfg.vocab_size, 12).astype(np.int32),
+            max_new_tokens=40, priority=1))
+    sched.step()
+    sched.submit(Request("hi", rng.integers(
+        1, engine.cfg.vocab_size, 8).astype(np.int32),
+        max_new_tokens=4, priority=0))
+    responses = sched.drain()
+    sched.close()
+    return tel, sched, ceng, responses
+
+
+def test_trace_covers_all_layers(sched_run):
+    """The ISSUE acceptance: one serving run records spans from the
+    scheduler, engine-round, KV-pool, swap and transfer layers."""
+    tel, _sched, ceng, responses = sched_run
+    assert ceng.preemptions >= 1 and ceng.restores >= 1
+    assert {r.tenant: r.outcome for r in responses} == {
+        "t0": "completed", "t1": "completed", "hi": "completed"}
+    layers = {s.name.split(".", 1)[0] for s in tel.spans()}
+    assert {"sched", "round", "admit", "kv", "swap", "transfer",
+            "timeline", "admission"} <= layers
+    for name in ("swap.out", "swap.restore", "swap.fetch",
+                 "transfer.stage", "kv.alloc", "round.device"):
+        assert tel.spans(name=name), f"no {name} spans recorded"
+    c = tel.counter_snapshot()
+    assert c["swap.preemptions"] == ceng.preemptions
+    assert c["swap.restores"] == ceng.restores
+    assert c["heartbeat.beats"] > 0
+
+
+def test_chrome_trace_roundtrip_and_nesting(sched_run, tmp_path):
+    """Chrome-trace JSON survives a dump/load round trip and the span
+    tree reconstructs from args: round.jit > round.dispatch > sched.step."""
+    tel, *_ = sched_run
+    path = tmp_path / "trace.json"
+    write_chrome_trace(tel, str(path))
+    doc = json.loads(path.read_text())
+    events = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert len(events) == len(tel.spans())
+    assert doc["otherData"]["spans_opened"] == tel.spans_opened
+    by_id = {e["args"]["span_id"]: e for e in events}
+    chains = set()
+    for e in events:
+        if e["name"] != "round.jit":
+            continue
+        parent = by_id[e["args"]["parent_id"]]
+        grand = by_id[parent["args"]["parent_id"]]
+        chains.add((e["name"], parent["name"], grand["name"]))
+        # a child's [ts, ts+dur) window lies inside its parent's
+        assert parent["ts"] <= e["ts"]
+        assert e["ts"] + e["dur"] <= parent["ts"] + parent["dur"] + 1e-3
+    assert ("round.jit", "round.dispatch", "sched.step") in chains
+    # counter snapshot rides the same timeline as "C" events
+    cvals = {e["name"]: e["args"]["value"]
+             for e in doc["traceEvents"] if e["ph"] == "C"}
+    assert cvals["swap.preemptions"] == tel.counter_snapshot()[
+        "swap.preemptions"]
+
+
+def test_prometheus_roundtrip(sched_run):
+    tel, *_ = sched_run
+    parsed = parse_prometheus_text(prometheus_text(tel))
+    snap = tel.metric_snapshot()
+    for name, value in snap["counters"].items():
+        key = "repro_" + name.replace(".", "_")
+        assert parsed[key] == pytest.approx(value)
+    for name, value in snap["gauges"].items():
+        assert parsed["repro_" + name.replace(".", "_")] == pytest.approx(
+            value)
+
+
+def test_heartbeat_suspects_surface_as_gauges(engine, rng):
+    """Satellite: a zero-timeout heartbeat marks every scheduler round
+    suspect; the verdicts surface as the plane's counter + gauge and in
+    the periodic stats line."""
+    tel = Telemetry(enabled=True)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16,
+                                    telemetry=tel)
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous_engine=ceng,
+                                 heartbeat_timeout_s=0.0, telemetry=tel)
+    for req in _mk_reqs(engine, rng, 2, steps=6):
+        sched.submit(req)
+    sched.drain()
+    sched.close()
+    assert sched.heartbeat_suspects > 0
+    c = tel.counter_snapshot()
+    assert c["heartbeat.missed"] == sched.heartbeat_suspects
+    assert tel.metric_snapshot()["gauges"]["heartbeat.suspects"] == \
+        sched.heartbeat_suspects
+    line = stats_line(tel, keys=("heartbeat.suspects",))
+    assert f"heartbeat.suspects={sched.heartbeat_suspects}" in line
+
+
+def test_heartbeat_verdicts_on_global_plane():
+    """HeartbeatMonitor itself (no scheduler) mirrors verdicts onto the
+    global plane when enabled — and stays silent when disabled."""
+    from repro.distributed.fault import HeartbeatMonitor
+    hb = HeartbeatMonitor(timeout_s=0.0)
+    assert hb.suspect()                       # disabled global: no record
+    assert not TELEMETRY.enabled
+    assert "heartbeat.verdicts" not in TELEMETRY.counter_snapshot()
+    TELEMETRY.enable()
+    try:
+        assert hb.suspect()
+        assert TELEMETRY.counter_snapshot()["heartbeat.verdicts"] == 1
+        assert TELEMETRY.spans(name="heartbeat.suspect")
+    finally:
+        TELEMETRY.disable()
+        TELEMETRY.reset()
+
+
+# ---------------------------------------------------------------------
+# satellite 4: golden-file schema pin for a deterministic run
+# ---------------------------------------------------------------------
+def test_golden_counters_and_span_names(engine, rng):
+    """Lockstep 2-tenant engine-level run (no ready()-timing races):
+    the counter table and the span-name multiset are pinned by a golden
+    file, so a renamed or silently-dropped metric fails loudly.
+    Regenerate with REPRO_REGEN_GOLDEN=1 after an intentional change."""
+    tel = Telemetry(enabled=True)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16,
+                                    telemetry=tel)
+    reqs = [Request(t, rng.integers(1, engine.cfg.vocab_size,
+                                    12).astype(np.int32), max_new_tokens=6)
+            for t in ("a", "b", "a", "b")]
+    done = _drain_lockstep(ceng, reqs)
+    assert len(done) == 4
+    names: dict = {}
+    for s in tel.spans():
+        names[s.name] = names.get(s.name, 0) + 1
+    got = {"counters": {k: float(v)
+                        for k, v in sorted(tel.counter_snapshot().items())},
+           "span_names": dict(sorted(names.items()))}
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert got == want
+
+
+# ---------------------------------------------------------------------
+# fit + plan acceptance
+# ---------------------------------------------------------------------
+def _fdr_sweep(tel, nvs=(1, 2, 4, 8, 16)):
+    m = pm.PerfModelInputs(net=pm.FDR)
+    for nv in nvs:
+        si = SimInputs(TenancyConfig(1, nv, "sequential"), net=m.net,
+                       compute_time_1pdev=m.compute_time_1pdev,
+                       yet_mb=m.yet_mb, elt_mb=m.elt_mb, pf_mb=m.pf_mb,
+                       power=em.K20)
+        replay_sim_run(tel, si, pw=em.K20)
+    return m
+
+
+def test_plan_from_telemetry_matches_static_planner():
+    """ISSUE acceptance: replay a deployment sweep, fit, re-plan — the
+    telemetry plan picks the paper's FDR optimum (9x2, sequential) and
+    the fitted model's predictions agree with the simulator."""
+    tel = Telemetry(enabled=True)
+    m = _fdr_sweep(tel)
+    tp = plan_from_telemetry(tel)
+    st = plan(m, "time")
+    d = tp.deployment
+    assert (d.n_pdev, d.tenants_per_pdev) == (st.n_pdev,
+                                              st.tenants_per_pdev) == (9, 2)
+    assert tp.transfer_mode == "sequential"          # the paper's winner
+    # the replay is exactly model-generated, so the fit recovers the
+    # Table II constants to fp precision and residuals are numerical dust
+    assert tp.m.net.t_4gb == pytest.approx(pm.FDR.t_4gb, rel=1e-6)
+    assert tp.m.compute_time_1pdev == pytest.approx(
+        pm.COMPUTATION_TIME_1PDEV, rel=1e-6)
+    assert tp.pw.p_busy == pytest.approx(em.K20.p_busy, rel=1e-6)
+    assert tp.pw.p_idle_assigned == pytest.approx(em.K20.p_idle_assigned,
+                                                  rel=1e-6)
+    assert tp.transfer_rms_s < 1e-9 and tp.compute_rms_s < 1e-9
+    # fitted model vs simulator at the chosen deployment: same makespan
+    si = SimInputs(TenancyConfig(d.n_pdev, d.tenants_per_pdev,
+                                 "sequential"), net=tp.m.net,
+                   compute_time_1pdev=tp.m.compute_time_1pdev,
+                   yet_mb=tp.m.yet_mb, elt_mb=tp.m.elt_mb,
+                   pf_mb=tp.m.pf_mb, power=tp.pw)
+    assert pm.exec_time_multitenancy(
+        d.n_pdev, d.tenants_per_pdev, tp.m) == pytest.approx(
+        simulate(si).makespan, rel=1e-6)
+
+
+def test_samples_pair_transfer_with_compute():
+    tel = Telemetry(enabled=True)
+    _fdr_sweep(tel, nvs=(1, 4))
+    samples = samples_from_telemetry(tel)
+    assert len(samples) == 1 + 4            # one sample per tenant event
+    assert {s.nv for s in samples} == {1, 4}
+    for s in samples:
+        assert s.transfer_s > 0 and s.compute_s > 0
+
+
+def test_fit_error_paths():
+    one_nv = [PhaseSample(2, 0.5, 1.0), PhaseSample(2, 0.5, 1.0)]
+    with pytest.raises(ValueError, match="distinct"):
+        fit_perf_inputs(one_nv)
+    with pytest.raises(ValueError, match=">= 2"):
+        fit_power_params([(0.5, 80.0)])
+    with pytest.raises(ValueError, match="variation"):
+        fit_power_params([(0.5, 80.0), (0.5, 80.0)])
+
+
+# ---------------------------------------------------------------------
+# launch driver end to end (the --trace-out acceptance)
+# ---------------------------------------------------------------------
+def test_serve_driver_writes_trace_and_metrics(tmp_path, capsys):
+    """`launch.serve --trace-out/--metrics-out` on the preempting demo
+    mix produces a loadable Chrome trace with spans from the scheduler,
+    round, pool and swap layers plus a parsable Prometheus file."""
+    from repro.launch import serve
+    trace = tmp_path / "trace.json"
+    prom = tmp_path / "metrics.prom"
+    try:
+        rc = serve.main(["--mode", "continuous", "--tenants", "2",
+                         "--requests", "3", "--capacity", "2",
+                         "--priority", "3", "--new-tokens", "24",
+                         "--stats-every", "4",
+                         "--trace-out", str(trace),
+                         "--metrics-out", str(prom)])
+    finally:
+        TELEMETRY.disable()       # the driver enables the global plane
+        TELEMETRY.reset()
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "obs: " in out                       # periodic stats line fired
+    assert "heartbeat.suspects=" in out
+    doc = json.loads(trace.read_text())
+    layers = {e["name"].split(".", 1)[0]
+              for e in doc["traceEvents"] if e["ph"] == "X"}
+    assert {"sched", "round", "admit", "kv", "swap", "transfer"} <= layers
+    parsed = parse_prometheus_text(prom.read_text())
+    assert parsed["repro_swap_preemptions"] >= 1
+    assert parsed["repro_swap_restores"] >= 1
