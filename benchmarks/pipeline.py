@@ -722,6 +722,65 @@ def bench_serving_mesh() -> List[Row]:
     ]
 
 
+def bench_serving_archs() -> List[Row]:
+    """Continuous serving across the state-kind-representative archs the
+    paged-state pool (PR 9) unlocks: whisper-base (attn KV pages plus
+    read-only cross-attention pages written once at admission), mamba2-2.7b
+    (no pages at all — checkpointed SSM slot records) and h2o-danube-1.8b
+    (sliding-window attn with window-phase chain keys).  Each drains a small
+    ragged request mix and reports wall time plus the pool's per-kind
+    counters; every row also replays the same requests through the blocking
+    oracle and asserts token-exactness, so the bench doubles as an
+    end-to-end smoke for every non-attention serving path."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine, resolve_extra_inputs
+    from repro.serving.multitenant import Request
+
+    out: List[Row] = []
+    for arch in ("whisper-base", "mamba2-2.7b", "h2o-danube-1.8b"):
+        cfg = get_config(arch).reduced()
+        params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+        engine = ServingEngine(cfg, params)
+        ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                        inner_steps=4, max_prompt_len=16)
+        rng = np.random.default_rng(0)
+        reqs = [Request(f"t{i}", rng.integers(1, cfg.vocab_size,
+                        int(n)).astype(np.int32), max_new_tokens=8)
+                for i, n in enumerate((5, 9, 13))]
+        # warm: admission + round jits compile outside the timed drain
+        ceng.run_all([Request("warm", reqs[0].prompt.copy(),
+                              max_new_tokens=2)])
+        t0 = time.perf_counter()
+        done = {req.tenant: toks for req, toks in ceng.run_all(list(reqs))}
+        dt = time.perf_counter() - t0
+        exact = True
+        for req in reqs:
+            # blocking replay under the continuous path's conventions: the
+            # prompt left-padded to its admission bucket and the same
+            # resolved per-request extras (e.g. default zero enc-dec frames)
+            b = ceng.bucket_len(req.prompt.size)
+            padded = np.zeros((1, b), np.int32)
+            padded[0, b - req.prompt.size:] = req.prompt
+            extra = {k: np.asarray(v)[None] for k, v in
+                     resolve_extra_inputs(cfg, req).items()}
+            ref = engine.generate(padded, req.max_new_tokens,
+                                  extra_inputs=extra or None,
+                                  seed=req.seed).tokens[0]
+            exact = exact and np.array_equal(done[req.tenant], ref)
+        kinds = "+".join(k.name for k in ceng.kv.state_kinds)
+        out.append((f"serving/archs_{arch}_drain", dt * 1e6,
+                    f"token_exact={exact};kinds={kinds};"
+                    f"rounds={ceng.rounds};"
+                    f"pages_shared={ceng.kv.pages_shared};"
+                    f"cross_pages={ceng.kv.num_cross_pages}"))
+    return out
+
+
 ALL = [bench_pipeline_overlap, bench_serving_overlap,
        bench_serving_continuous, bench_serving_prefix_sharing,
-       bench_paged_attention, bench_kernel_variants, bench_serving_mesh]
+       bench_paged_attention, bench_kernel_variants, bench_serving_mesh,
+       bench_serving_archs]

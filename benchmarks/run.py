@@ -44,6 +44,18 @@ def main() -> None:
     benches = (list(paper_figures.ALL) + list(pipeline.ALL)
                + list(overload.ALL) + [roofline.run])
 
+    if filters:
+        # a filter matching nothing is a typo (e.g. --only sevring), not an
+        # empty run: fail loudly with the matchable names instead of
+        # printing a healthy-looking header and exiting 0
+        names = [b.__module__ + "." + b.__name__ for b in benches]
+        unknown = [f for f in filters
+                   if not any(f in bname for bname in names)]
+        if unknown:
+            print(f"--only: no bench matches {','.join(unknown)!r}; "
+                  f"known benches: {', '.join(names)}", file=sys.stderr)
+            sys.exit(2)
+
     tel = None
     if args.json is not None:
         from repro.obs import TELEMETRY

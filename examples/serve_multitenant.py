@@ -34,6 +34,25 @@ same-bucket prompts share a single prefill call.  The trade-off: lanes are
 masked rather than compacted, so very low occupancy wastes compute on dead
 rows.
 
+One pool, many state kinds
+--------------------------
+The pool behind the slot table is a *paged-state pool*, not just an
+attention KV-cache: every arch config registers the state kinds its slots
+carry (``repro.serving.kvcache.state_kinds``) and ``mode="continuous"``
+serves all of them.  Attention KV pages behave exactly as above;
+encoder-decoder archs (whisper) add per-request read-only cross-attention
+pages, written once at admission and gathered each decode step; SSM and
+hybrid archs (mamba2, jamba) keep their recurrent slot state resident in
+the slot table and checkpoint it as fixed-width host records on
+swap-out, scattering it back bitwise on restore.  Preemption victims are
+chosen regardless of kind — an SSM row swaps out and resumes
+token-exactly just like an attention row — and the page/record ledger is
+audited per kind at drain.  ``ContinuousBatchingEngine.supported_modes(
+cfg)`` (or ``python -m repro.launch.serve --list-archs``) reports each
+arch's state kinds, preemptability and exactness class without building
+the model; per-request non-token inputs (vision patch embeds, encoder
+frames) ride on ``Request.extra_inputs``.
+
 Prefix sharing (refcounts + copy-on-write)
 ------------------------------------------
 Real tenant traffic repeats itself: every pricing-desk query carries the
@@ -48,8 +67,15 @@ request whose entire padded prompt is registered skips its prefill call
 outright, reusing the cached first-token logits.  Greedy decode stays
 bit-identical to the unshared path — blocks are shared only when their
 full token prefix is byte-equal, which makes the page contents bitwise
-interchangeable.  The final section replays a shared-system-prompt
-workload with sharing off and on and prints the pages/prefill saved.
+interchangeable.  Sliding-window archs participate too: their chain keys
+are salted with the window phase (ring length + block offset), so pages
+whose contents depend on which tokens the window has wrapped past only
+match when the whole wrapped prefix matches — a byte-identical refresh
+admitted while the original is in flight shares its ring pages and skips
+prefill (the original's ring writes then CoW-fork), while
+shared-system-prompt mixes with distinct suffixes correctly never share.
+The final section replays a shared-system-prompt workload with sharing
+off and on and prints the pages/prefill saved.
 
 Paged-attention backends (jnp gather vs fused Pallas)
 -----------------------------------------------------
@@ -185,9 +211,10 @@ def main():
     # prompt, and half of each tenant's requests are exact repeats
     # (dashboard refreshes) — the content-shared pool maps the common
     # blocks onto existing pages and skips repeat prefills entirely.
-    # h2o-danube's sliding window wraps the ring inside the bucket, which
-    # (correctly) disables sharing, so this section uses a full-attention
-    # arch instead.
+    # h2o-danube's sliding window would salt its chain keys with the
+    # window phase, so only the byte-identical refreshes would share;
+    # this section uses a full-attention arch so the shared system
+    # prompt itself also maps onto common pages.
     cfg = get_config("internlm2-1.8b").reduced()
     params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
     engine = ServingEngine(cfg, params)

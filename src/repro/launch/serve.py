@@ -26,6 +26,21 @@ overlap pairs.  ``--mode`` selects the schedule:
   ``--stage-depth`` batches staged under the running decode;
 * ``blocking`` — the legacy host-blocking schedule (A/B baseline).
 
+Every arch in ``configs/`` serves under every mode (PR 9): the continuous
+slot table decomposes per-request state into registered kinds — paged
+attention KV, write-once cross-attention pages (encoder-decoder archs) and
+checkpointable SSM slot state (SSM/hybrid archs) — and all of them swap,
+so preemption works for every family.  ``--list-archs`` prints the
+capability table (state kinds, preemptable, prefix sharing, exactness
+class) per arch without building a model.  Encoder-decoder archs prefill
+from synthetic deterministic frames, vision archs from synthetic patch
+embeddings — distinct per request, so their chain keys only share when
+content (prompt *and* extras) is byte-identical.  Sliding-window archs
+prefix-share through window-phase chain keys: the ring layout is part of
+block identity, and a block is shareable only when the *whole* prompt
+content feeding its window is identical.
+
+
 Observability: ``--trace-out trace.json`` enables the telemetry plane and
 writes a Chrome-trace/Perfetto JSON of every span the run recorded
 (scheduler steps > round dispatch > kernel windows, KV pool activity, swap
@@ -51,9 +66,50 @@ from repro.serving.engine import ServingEngine
 from repro.serving.multitenant import MODES, MultiTenantScheduler, Request
 
 
+def list_archs() -> int:
+    """Print the per-arch serving capability table (no model is built:
+    the probe reads the arch config alone)."""
+    from repro.configs import ARCH_IDS
+    from repro.serving.continuous import ContinuousBatchingEngine
+    hdr = (f"{'arch':<28} {'modes':<32} {'state kinds':<16} "
+           f"{'preempt':<8} {'share':<14} {'exactness'}")
+    print(hdr)
+    print("-" * len(hdr))
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        modes = ContinuousBatchingEngine.supported_modes(cfg)
+        cont = modes["continuous"]
+        share = ("window-phase" if cont["window_phase_keys"]
+                 else ("yes" if cont["prefix_sharing"] else "no"))
+        print(f"{arch:<28} "
+              f"{'/'.join(m for m in MODES if modes[m]['supported']):<32} "
+              f"{'+'.join(cont['state_kinds']):<16} "
+              f"{'yes' if cont['preemptable'] else 'no':<8} "
+              f"{share:<14} {cont['exactness']}")
+    return 0
+
+
+def synth_extra_inputs(cfg, rng) -> dict:
+    """Deterministic synthetic non-token prefill inputs for one request:
+    encoder frames for enc-dec archs, patch embeddings for vision archs
+    (distinct per call — distinct extras never share pages)."""
+    extra = {}
+    if cfg.enc_dec:
+        extra["frames"] = rng.normal(
+            size=(cfg.encoder_seq_len, cfg.d_model)).astype(np.float32)
+    if cfg.num_patches:
+        extra["patch_embeds"] = rng.normal(
+            size=(cfg.num_patches, 1024)).astype(np.float32)
+    return extra
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--list-archs", action="store_true",
+                    help="print the per-arch serving capability table "
+                         "(modes, state kinds, preemptable, prefix "
+                         "sharing, exactness class) and exit")
     ap.add_argument("--reduced", action="store_true", default=True)
     ap.add_argument("--tenants", type=int, default=3)
     ap.add_argument("--requests", type=int, default=12)
@@ -112,9 +168,11 @@ def main(argv=None) -> int:
                          "blocked higher-priority arrival swaps a lower-"
                          "priority victim's pages out to the host store "
                          "and restores them token-exactly when capacity "
-                         "frees (--no-swap = admission waits instead; "
-                         "pure-attention archs only, SSM rows are never "
-                         "victims)")
+                         "frees (--no-swap = admission waits instead).  "
+                         "Every state kind swaps: attention and cross-"
+                         "attention pages as blocks, SSM slot state as "
+                         "fixed-width checkpoint records — SSM/hybrid and "
+                         "encoder-decoder rows are ordinary victims")
     ap.add_argument("--max-backlog", type=int, default=None, metavar="N",
                     help="continuous mode: SLO backlog bound — when more "
                          "than N requests are queued, the lowest-priority "
@@ -145,6 +203,8 @@ def main(argv=None) -> int:
                          "scheduling steps (enables the telemetry plane; "
                          "0 = never)")
     args = ap.parse_args(argv)
+    if args.list_archs:
+        return list_archs()
     mode = args.mode or ("blocking" if args.blocking else "overlapped")
 
     from repro.obs import TELEMETRY
@@ -197,7 +257,8 @@ def main(argv=None) -> int:
         req = Request(tenant, prompt,
                       max(4, args.new_tokens // 4) if tier0
                       else args.new_tokens,
-                      priority=0 if tier0 else 1)
+                      priority=0 if tier0 else 1,
+                      extra_inputs=synth_extra_inputs(cfg, rng) or None)
         # tier-0 requests arrive *after* the tier-1 work has filled the
         # slot table, so the demo exercises the preemption path instead of
         # just admitting the high tier first

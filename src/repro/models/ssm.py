@@ -132,6 +132,25 @@ def init_ssm_state(cfg: ArchConfig, batch: int) -> Dict[str, jnp.ndarray]:
     }
 
 
+def checkpoint_slot_state(state, slot: int) -> Dict[str, np.ndarray]:
+    """Snapshot one slot's SSM decode state as fixed-width host records.
+
+    ``state`` is a stage-stacked decode-state pytree (leaves lead with
+    ``(n_stages, capacity, ...)``); the returned numpy tree drops the
+    capacity axis, so its shapes depend only on the arch — the restore jit
+    traces once whatever slot a record came from or goes back to.  Reading
+    a quiesced slot row is bitwise, so checkpoint -> restore round-trips
+    exactly (the swap-preemption contract for SSM/hybrid rows)."""
+    return jax.tree.map(lambda t: np.asarray(t[:, slot]), state)
+
+
+def restore_slot_state(state, slot, record):
+    """Scatter a :func:`checkpoint_slot_state` record back into ``slot``'s
+    row of a stage-stacked decode-state pytree (jit-safe; ``slot`` may be a
+    tracer).  Other rows are untouched."""
+    return jax.tree.map(lambda t, v: t.at[:, slot].set(v), state, record)
+
+
 def apply_ssm_decode(p, x, state: Dict[str, jnp.ndarray], cfg: ArchConfig,
                      sh: Sharder) -> Tuple[jax.Array, Dict[str, jnp.ndarray]]:
     """One-token decode.  x: (B, 1, d_model)."""

@@ -91,25 +91,41 @@ blocks are re-shared straight from the trie, everything else stages back
 through the swap store's sequential :class:`repro.core.transfer.
 StagingEngine` (prefetched ahead of re-admission), and the slot's scalars
 (pos / remaining / lstep / PRNG key / last logits) are rebuilt bitwise — so
-the resumed decode is token-exact with an uninterrupted run.  Only
-pure-attention archs are preemptable (``can_preempt``): SSM slot states are
-not paged and have no host representation, so hybrid rows must never be
-chosen as victims.  Preemption requires a quiesced engine (no round in
-flight) — the scheduler force-collects first.
+the resumed decode is token-exact with an uninterrupted run.  Preemption
+requires a quiesced engine (no round in flight) — the scheduler
+force-collects first.
 
-Encoder-decoder configs are rejected: their cross-attention caches are
-per-request device tensors with no paged representation here (the slot-based
-paths still serve them).  MoE routing couples rows through expert capacity,
-so MoE archs run continuously but are only *statistically* exchangeable with
-the blocking engine, not bitwise — batched admission prefill and prefix
-sharing sit inside the same caveat (expert-capacity routing couples prefill
-rows, so a shared page holds *a* valid prefill of its chain, not
-necessarily the one a solo prefill of this request would produce).
+State kinds (PR 9): every arch in ``configs/`` serves continuously.  The
+slot table's per-request state decomposes into the kinds registered by
+:func:`repro.serving.kvcache.state_kinds` — ``attn`` (the paged KV above,
+bitwise-unchanged for pure-attention archs), ``cross`` (encoder-decoder
+cross-attention KV, paged into the pool's separate per-request cross space:
+written once at admission from the batched prefill, gathered read-only by
+every decode step, snapshot/restored verbatim on preemption) and ``ssm``
+(slot-table SSM state, checkpointed as fixed-width records by
+:func:`repro.models.ssm.checkpoint_slot_state` on swap-out and scattered
+back on restore).  ``can_preempt`` derives from the kinds — every kind is
+swappable, so any arch with swap enabled preempts, SSM/hybrid rows
+included.  Sliding-window archs participate in prefix sharing through
+window-phase chain keys (see :meth:`repro.serving.kvcache.PagedKVCache.
+chain_keys`).  The skip-prefill fast path stays gated to pure-attention
+archs: it is the one admission variant that must rebuild *every* per-slot
+state from pages plus cached logits alone.  :meth:`ContinuousBatchingEngine.
+supported_modes` is the public capability probe per arch
+(``launch/serve.py --list-archs``).
+
+MoE routing couples rows through expert capacity, so MoE archs run
+continuously but are only *statistically* exchangeable with the blocking
+engine, not bitwise — batched admission prefill and prefix sharing sit
+inside the same caveat (expert-capacity routing couples prefill rows, so a
+shared page holds *a* valid prefill of its chain, not necessarily the one a
+solo prefill of this request would produce).
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import hashlib
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -121,12 +137,15 @@ from repro.configs import ATTN, MOE, NONE, ArchConfig
 from repro.distributed.fault import InjectedFault
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
-from repro.models.layers import (apply_embedding, apply_mlp, apply_rmsnorm,
-                                 apply_unembed, pad_vocab)
+from repro.models.layers import (apply_cross_attention, apply_embedding,
+                                 apply_mlp, apply_rmsnorm, apply_unembed,
+                                 pad_vocab)
 from repro.obs.telemetry import Telemetry, get_telemetry
-from repro.serving.engine import ServingEngine, sample_rows
+from repro.serving.engine import (ServingEngine, resolve_extra_inputs,
+                                  sample_rows)
 from repro.serving.kvcache import (BACKENDS, POS_SENTINEL, PagedKVCache,
-                                   paged_attention_decode, paged_scatter)
+                                   paged_attention_decode, paged_scatter,
+                                   ssm_subs, state_kinds)
 from repro.serving.swap import HostSwapStore, SwapRecord
 
 
@@ -200,11 +219,6 @@ class ContinuousBatchingEngine:
                  admission_retry_limit: int = 8,
                  telemetry: Optional[Telemetry] = None):
         cfg = engine.cfg
-        if cfg.enc_dec:
-            raise ValueError(
-                "continuous batching needs a paged self-attention cache; "
-                "encoder-decoder cross-attention is not paged — use the "
-                "slot-based scheduler modes for enc-dec archs")
         self.engine = engine
         self.cfg = cfg
         self.sh = engine.sh
@@ -216,14 +230,22 @@ class ContinuousBatchingEngine:
         self.n_stages = cfg.num_layers // cfg.stage_period
         self.sched = cfg.block_schedule()[:cfg.stage_period]
         self.page_size = page_size
+        # the per-request state kinds this arch's rows carry (attn / cross /
+        # ssm) — capability flags below all derive from this tuple
+        self.state_kinds = state_kinds(cfg)
+        self.ssm_subs = ssm_subs(cfg)
+        # enc-dec: the whole encoder output's cross KV pages per request,
+        # written once at admission into the pool's separate cross space
+        self.cross_blocks = (-(-cfg.encoder_seq_len // page_size)
+                             if cfg.enc_dec else 0)
         max_ring = self._ring_len(self.bucket_len(max_prompt_len))
         self.kv = PagedKVCache(cfg, capacity, page_size,
-                               -(-max_ring // page_size), num_pages)
-        # prefix sharing needs byte-identical (position, token) blocks: the
-        # ring must cover the whole bucket (no sliding-window wrap) and the
-        # arch must have a paged pool at all
-        self.prefix_sharing = bool(prefix_sharing and self.kv.attn_subs
-                                   and cfg.sliding_window is None)
+                               -(-max_ring // page_size), num_pages,
+                               cross_blocks=self.cross_blocks)
+        # prefix sharing needs a refcounted attention page space; sliding-
+        # window archs share through window-phase chain keys (the ring
+        # layout is part of block identity, see PagedKVCache.chain_keys)
+        self.prefix_sharing = bool(prefix_sharing and self.kv.attn_subs)
         # pristine-preserve policy: False = never copy; True (default) =
         # reuse-aware (preserve a sole-owner registered page only once its
         # chain has recorded a sharing hit); "always" = PR-4 behaviour
@@ -240,22 +262,24 @@ class ContinuousBatchingEngine:
                              f"{BACKENDS}")
         self.backend = backend
         self.pallas_interpret = pallas_interpret
-        # skip-prefill full hits also need every per-slot state to be
-        # reconstructable from pages + cached logits: SSM slot states are
-        # neither paged nor cached, so hybrids always prefill
-        self._pure_attn = bool(self.kv.attn_subs) and all(
-            mixer == ATTN for mixer, _ in self.sched)
+        # skip-prefill full hits need every per-slot state to be
+        # reconstructable from shared pages + cached logits alone: cross
+        # pages are per-request and SSM states are neither paged nor
+        # cached, so only pure-attention archs ever skip a prefill
+        self._pure_attn = {k.name for k in self.state_kinds} == {"attn"}
         self.logits_cache_size = int(logits_cache_size)
         self._logits_cache: "collections.OrderedDict[bytes, jax.Array]" = \
             collections.OrderedDict()
         self.state = self._init_state()
         self._slots: List[Optional[_Slot]] = [None] * capacity
         self._free_slots: List[int] = list(range(capacity - 1, -1, -1))
-        # preemption (KV tiering): only pure-attention archs can be swapped
-        # out — SSM slot states are neither paged nor host-representable,
-        # so hybrid rows must never be chosen as victims
+        # preemption (KV tiering): derived from the registered state kinds
+        # — every kind is swappable (attn/cross pages snapshot as blocks,
+        # SSM states as fixed-width records), so any arch preempts when
+        # swap is enabled
         self.fault_plane = fault_plane
-        self.can_preempt = bool(swap) and self._pure_attn
+        self.can_preempt = bool(swap) and all(
+            k.swappable for k in self.state_kinds)
         self.swap_store = (swap_store if swap_store is not None
                            else (HostSwapStore(fault_plane=fault_plane,
                                                sharder=self.sh)
@@ -342,6 +366,35 @@ class ContinuousBatchingEngine:
             return 0.0
         return sum(live for _, _, live in self._round_log) / total
 
+    @classmethod
+    def supported_modes(cls, cfg: ArchConfig) -> Dict[str, Dict[str, Any]]:
+        """Capability probe: what each serving mode offers for ``cfg``.
+
+        Every arch in ``configs/`` serves under every mode (PR 9) — the
+        probe's job is the *qualifiers*: which state kinds the slot table
+        carries, whether rows can be swap-preempted, whether prefix sharing
+        applies (and through window-phase keys on sliding-window archs),
+        and whether continuous decode is bitwise or only statistically
+        exchangeable with the blocking reference (MoE capacity routing
+        couples rows).  ``launch/serve.py --list-archs`` renders this table
+        without instantiating any engine."""
+        kinds = state_kinds(cfg)
+        names = [k.name for k in kinds]
+        moe = any(mlp == MOE for _, mlp in cfg.block_schedule())
+        cont = {
+            "supported": True,
+            "state_kinds": names,
+            "preemptable": all(k.swappable for k in kinds),
+            "prefix_sharing": "attn" in names,
+            "window_phase_keys": ("attn" in names
+                                  and cfg.sliding_window is not None),
+            "exactness": "statistical" if moe else "bitwise",
+        }
+        return {"blocking": {"supported": True, "exactness": "reference"},
+                "overlapped": {"supported": True,
+                               "exactness": cont["exactness"]},
+                "continuous": cont}
+
     # ------------------------------------------------------------------
     def _init_state(self) -> Dict[str, Any]:
         cfg, c = self.cfg, self.capacity
@@ -352,6 +405,8 @@ class ContinuousBatchingEngine:
                 caches[f"sub{i}"] = jax.tree.map(
                     lambda a: jnp.broadcast_to(
                         a[None], (self.n_stages,) + a.shape), st)
+        if self.cross_blocks:
+            caches["cross"] = self.kv.make_cross_pools(self.n_stages)
         st = {
             "caches": caches,
             "page_table": self.kv.make_page_table(),
@@ -365,18 +420,26 @@ class ContinuousBatchingEngine:
             "keys": jnp.zeros((c, 2), jnp.uint32),
             "lstep": jnp.zeros((c,), jnp.int32),
         }
+        if self.cross_blocks:
+            # per-slot cross page rows (the cross space's page table)
+            st["cross_pt"] = jnp.full((c, self.cross_blocks),
+                                      PagedKVCache.SENTINEL, jnp.int32)
         if self.sh.mesh is not None:
             # commit the slot-table pytree onto the mesh up front: the KV
-            # pools partition along KV heads, everything else replicates.
-            # Donation then keeps every round's output on the same layout,
-            # so nothing reshards mid-serve and jit never sees mixed-device
-            # committed inputs.
+            # pools (self- and cross-attention) partition along KV heads,
+            # everything else replicates.  Donation then keeps every
+            # round's output on the same layout, so nothing reshards
+            # mid-serve and jit never sees mixed-device committed inputs.
             st = jax.tree.map(
                 lambda a: self.sh.place(a, (None,) * a.ndim), st)
             for name in self.kv.attn_subs:
                 st["caches"][name] = {
                     k: self.sh.place(v, (None, None, None, "kv", None))
                     for k, v in st["caches"][name].items()}
+            if self.cross_blocks:
+                st["caches"]["cross"] = {
+                    k: self.sh.place(v, (None, None, None, "kv", None))
+                    for k, v in st["caches"]["cross"].items()}
         return st
 
     # ------------------------------------------------------------------
@@ -386,6 +449,7 @@ class ContinuousBatchingEngine:
         p_sz = self.kv.page_size
         trash = PagedKVCache.TRASH
         has_attn = bool(self.kv.attn_subs)
+        enc_dec = bool(self.cross_blocks)
         backend, interp = self.backend, self.pallas_interpret
 
         def decode_step(params, st, all_greedy, any_topk):
@@ -418,43 +482,85 @@ class ContinuousBatchingEngine:
                 x = x + _sinusoid_at(pos[:, None, None],
                                      cfg.d_model).astype(x.dtype)
 
-            def body(h, xs):
-                stage_params, stage_cache = xs
-                nc = {}
-                for i, (mixer, mlp) in enumerate(sched):
-                    sub = stage_params[f"sub{i}"]
-                    hin = apply_rmsnorm(sub["norm1"], h)
-                    if mixer == ATTN:
-                        hout, nci = paged_attention_decode(
-                            sub["attn"], hin, stage_cache[f"sub{i}"], pt,
-                            kpos, page, off, pos, cfg, sh,
-                            pos_pool=pos_pool, backend=backend,
-                            interpret=interp)
-                    else:
-                        hout, nci = ssm_mod.apply_ssm_decode(
-                            sub["mamba"], hin, stage_cache[f"sub{i}"],
-                            cfg, sh)
-                        # frozen state for masked rows (attention rows are
-                        # masked by redirecting their write to TRASH instead)
-                        nci = jax.tree.map(
-                            lambda new, old: jnp.where(
-                                active.reshape((-1,) + (1,) * (new.ndim - 1)),
-                                new, old),
-                            nci, stage_cache[f"sub{i}"])
-                    nc[f"sub{i}"] = nci
-                    h = h + hout
-                    if mlp != NONE:
-                        hin = apply_rmsnorm(sub["norm2"], h)
-                        if mlp == MOE:
-                            hout, _ = moe_mod.apply_moe(sub["moe"], hin,
-                                                        cfg, sh)
-                        else:
-                            hout = apply_mlp(sub["mlp"], hin, cfg, sh)
-                        h = h + hout
-                return h, nc
+            if enc_dec:
+                # encoder-decoder body: paged self-attention, then a
+                # read-only gather of the slot's cross KV pages — the
+                # per-row twin of decode_fn's (dec_stages, self, cross)
+                # scan, same residual structure operation for operation
+                S_enc = cfg.encoder_seq_len
+                nbc = self.cross_blocks
+                aname = self.kv.attn_subs[0]
+                cpt = st["cross_pt"]
 
-            h, new_caches = jax.lax.scan(body, x,
-                                         (params["stages"], st["caches"]))
+                def body(h, xs):
+                    sp, self_cache, ck_pool, cv_pool = xs
+                    a, nci = paged_attention_decode(
+                        sp["attn"], apply_rmsnorm(sp["norm1"], h),
+                        self_cache, pt, kpos, page, off, pos, cfg, sh,
+                        pos_pool=pos_pool, backend=backend, interpret=interp)
+                    h = h + a
+                    # (C, nbc, P, Hkv, D) -> (C, S_enc, Hkv, D): the pool
+                    # pads past S_enc with zeros the static slice drops, so
+                    # the gathered view is bitwise the prefill's cross KV
+                    ck = ck_pool[cpt].reshape(
+                        cpt.shape[0], nbc * p_sz,
+                        *ck_pool.shape[-2:])[:, :S_enc]
+                    cv = cv_pool[cpt].reshape(
+                        cpt.shape[0], nbc * p_sz,
+                        *cv_pool.shape[-2:])[:, :S_enc]
+                    c_out = apply_cross_attention(
+                        sp["cross"], apply_rmsnorm(sp["norm_c"], h),
+                        (ck.astype(h.dtype), cv.astype(h.dtype)), cfg, sh)
+                    h = h + c_out
+                    m = apply_mlp(sp["mlp"], apply_rmsnorm(sp["norm2"], h),
+                                  cfg, sh)
+                    return h + m, nci
+
+                cross = st["caches"]["cross"]
+                h, new_self = jax.lax.scan(
+                    body, x, (params["dec_stages"], st["caches"][aname],
+                              cross["k"], cross["v"]))
+                new_caches = {aname: new_self, "cross": cross}
+            else:
+                def body(h, xs):
+                    stage_params, stage_cache = xs
+                    nc = {}
+                    for i, (mixer, mlp) in enumerate(sched):
+                        sub = stage_params[f"sub{i}"]
+                        hin = apply_rmsnorm(sub["norm1"], h)
+                        if mixer == ATTN:
+                            hout, nci = paged_attention_decode(
+                                sub["attn"], hin, stage_cache[f"sub{i}"], pt,
+                                kpos, page, off, pos, cfg, sh,
+                                pos_pool=pos_pool, backend=backend,
+                                interpret=interp)
+                        else:
+                            hout, nci = ssm_mod.apply_ssm_decode(
+                                sub["mamba"], hin, stage_cache[f"sub{i}"],
+                                cfg, sh)
+                            # frozen state for masked rows (attention rows
+                            # are masked by redirecting their write to
+                            # TRASH instead)
+                            nci = jax.tree.map(
+                                lambda new, old: jnp.where(
+                                    active.reshape(
+                                        (-1,) + (1,) * (new.ndim - 1)),
+                                    new, old),
+                                nci, stage_cache[f"sub{i}"])
+                        nc[f"sub{i}"] = nci
+                        h = h + hout
+                        if mlp != NONE:
+                            hin = apply_rmsnorm(sub["norm2"], h)
+                            if mlp == MOE:
+                                hout, _ = moe_mod.apply_moe(sub["moe"], hin,
+                                                            cfg, sh)
+                            else:
+                                hout = apply_mlp(sub["mlp"], hin, cfg, sh)
+                            h = h + hout
+                    return h, nc
+
+                h, new_caches = jax.lax.scan(
+                    body, x, (params["stages"], st["caches"]))
             h = apply_rmsnorm(params["final_norm"], h)
             new_logits = apply_unembed(params["embed"], h, cfg, sh)[:, 0]
 
@@ -543,18 +649,23 @@ class ContinuousBatchingEngine:
 
         self._admit_skip_jit = jax.jit(admit_skip_fn, donate_argnums=(0,))
 
-        def admit_fn(st, caches_p, logits0, slot, pages, remaining, temp,
-                     topk, key, *, bucket: int, ring: int):
+        def admit_fn(st, caches_p, logits0, slot, pages, cross_pages,
+                     remaining, temp, topk, key, *, bucket: int, ring: int):
             self.admit_traces += 1
             self.tel.count("trace.admit")
             new = dict(st)
+            # enc-dec prefill returns {"self": ..., "cross": ...}; remap the
+            # self caches onto the (single) attention sublayer so the page
+            # scatter below is kind-agnostic
+            caches_attn = ({self.kv.attn_subs[0]: caches_p["self"]}
+                           if enc_dec else caches_p)
             nb = pages.shape[0] if pages is not None else 0
             if nb:
                 row = jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
                                jnp.int32).at[:nb].set(pages)
                 new["page_table"] = st["page_table"].at[slot].set(row)
                 name = self.kv.attn_subs[0]
-                pos_src = caches_p[name]["pos"][0, 0]            # (ring,)
+                pos_src = caches_attn[name]["pos"][0, 0]         # (ring,)
                 pos_vals = jnp.full((nb * p_sz,), POS_SENTINEL,
                                     jnp.int32).at[:ring].set(pos_src)
                 new["pos_pool"] = st["pos_pool"].at[pages].set(
@@ -576,14 +687,34 @@ class ContinuousBatchingEngine:
                         return paged_scatter(pool_leaf, pages, v,
                                              backend=backend,
                                              interpret=interp, sh=sh)
-                    nc[sname] = {"k": to_pages(caches_p[sname]["k"],
+                    nc[sname] = {"k": to_pages(caches_attn[sname]["k"],
                                                cur["k"]),
-                                 "v": to_pages(caches_p[sname]["v"],
+                                 "v": to_pages(caches_attn[sname]["v"],
                                                cur["v"])}
                 else:
                     nc[sname] = jax.tree.map(
                         lambda t, cp: t.at[:, slot].set(cp[:, 0]),
-                        cur, caches_p[sname])
+                        cur, caches_attn[sname])
+            if enc_dec:
+                # write-once cross KV scatter into the slot's private cross
+                # pages (pool dtype == compute dtype: bitwise the prefill's
+                # cross KV; the tail of the last page pads with zeros the
+                # decode gather's static slice drops)
+                S_enc = cfg.encoder_seq_len
+                nbc = self.cross_blocks
+
+                def cross_to_pages(leaf, pool_leaf):
+                    v = jnp.pad(leaf[:, 0], ((0, 0), (0, nbc * p_sz - S_enc),
+                                             (0, 0), (0, 0)))
+                    v = v.reshape(self.n_stages, nbc, p_sz, *leaf.shape[3:])
+                    return pool_leaf.at[:, cross_pages].set(
+                        v.astype(pool_leaf.dtype))
+
+                cross = st["caches"]["cross"]
+                nc["cross"] = {
+                    "k": cross_to_pages(caches_p["cross"]["k"], cross["k"]),
+                    "v": cross_to_pages(caches_p["cross"]["v"], cross["v"])}
+                new["cross_pt"] = st["cross_pt"].at[slot].set(cross_pages)
             new["caches"] = nc
             new["logits"] = st["logits"].at[slot].set(logits0[0])
             new["pos"] = st["pos"].at[slot].set(bucket)
@@ -610,13 +741,17 @@ class ContinuousBatchingEngine:
             new["page_table"] = st["page_table"].at[slot].set(
                 jnp.full((self.kv.max_blocks,), PagedKVCache.SENTINEL,
                          jnp.int32))
+            if enc_dec:
+                new["cross_pt"] = st["cross_pt"].at[slot].set(
+                    jnp.full((self.cross_blocks,), PagedKVCache.SENTINEL,
+                             jnp.int32))
             return new
 
         self._evict_jit = jax.jit(evict_fn, donate_argnums=(0,))
 
         def restore_fn(st, kv_blocks, pos_rows, logits, slot, pages,
                        scatter_pages, pos, remaining, temp, topk, key,
-                       lstep, ring):
+                       lstep, ring, cross, state):
             """Swap-in: scatter a preempted request's snapshot blocks into
             freshly allocated pages and rebuild its slot row bitwise.
             ``pages`` is the full SENTINEL-padded page-table row and the
@@ -625,7 +760,11 @@ class ContinuousBatchingEngine:
             the padding's and the re-shared blocks' writes to TRASH —
             re-shared device pages already hold the identical pristine
             content, and TRASH is never read as valid, exactly like
-            masked-row writes."""
+            masked-row writes.  ``cross`` / ``state`` are the per-kind
+            halves of the record — ``{"kv", "pages"}`` for an enc-dec
+            victim's cross pages, a sub->record tree for SSM slot state —
+            and are None (empty pytrees, so still one trace) on archs
+            without that kind."""
             self.restore_traces += 1
             self.tel.count("trace.restore")
             new = dict(st)
@@ -639,6 +778,17 @@ class ContinuousBatchingEngine:
                         kv_blocks[name]["k"].astype(cur["k"].dtype)),
                     "v": cur["v"].at[:, scatter_pages].set(
                         kv_blocks[name]["v"].astype(cur["v"].dtype))}
+            if cross is not None:
+                cp = st["caches"]["cross"]
+                nc["cross"] = {
+                    n: cp[n].at[:, cross["pages"]].set(
+                        cross["kv"][n].astype(cp[n].dtype))
+                    for n in ("k", "v")}
+                new["cross_pt"] = st["cross_pt"].at[slot].set(cross["pages"])
+            if state is not None:
+                for sname, leaves in state.items():
+                    nc[sname] = ssm_mod.restore_slot_state(
+                        st["caches"][sname], slot, leaves)
             new["caches"] = nc
             new["logits"] = st["logits"].at[slot].set(logits)
             new["pos"] = st["pos"].at[slot].set(pos)
@@ -702,36 +852,58 @@ class ContinuousBatchingEngine:
                     f"prompt of {prompt.size} tokens exceeds max_prompt_len="
                     f"{self.max_prompt_len}")
             bucket = self.bucket_len(prompt.size)
+            ring = self._ring_len(bucket)
             padded = np.zeros((bucket,), np.int32)
             padded[bucket - prompt.size:] = prompt
-            keys = (self.kv.chain_keys(padded) if self.prefix_sharing
-                    else [])
+            extra = resolve_extra_inputs(self.cfg, req)
+            salt = b""
+            if extra:
+                # non-token prefill inputs (merged patch embeddings, encoder
+                # frames) feed the prefilled KV, so they are part of block
+                # identity: requests share pages only under identical extras
+                dg = hashlib.sha256()
+                for name in sorted(extra):
+                    arr = np.ascontiguousarray(np.asarray(extra[name]))
+                    dg.update(name.encode())
+                    dg.update(arr.tobytes())
+                salt = dg.digest()
+            keys = (self.kv.chain_keys(padded, ring=ring, salt=salt)
+                    if self.prefix_sharing else [])
             # provisional only — the authoritative share decision re-probes
             # at admit time; this just decides whether to prefill
             skip = bool(keys and self._pure_attn
                         and len(self.kv.lookup_chain(keys)) == len(keys)
                         and keys[-1] in self._logits_cache)
             plans.append(dict(i=i, req=req, bucket=bucket,
-                              ring=self._ring_len(bucket), padded=padded,
+                              ring=ring, padded=padded, extra=extra,
                               keys=keys, skip=skip, logits=None,
                               caches=None))
         if not plans:
             return flags
-        groups: Dict[int, List[Dict[str, Any]]] = {}
+        groups: Dict[Any, List[Dict[str, Any]]] = {}
         for pl in plans:
             if not pl["skip"]:
-                groups.setdefault(pl["bucket"], []).append(pl)
-        for bucket, grp in groups.items():
+                gk = (pl["bucket"], tuple(sorted(pl["extra"])))
+                groups.setdefault(gk, []).append(pl)
+        for (bucket, extra_names), grp in groups.items():
             chunks = [grp] if self.batch_admission else [[pl] for pl in grp]
             for chunk in chunks:
                 width = 1 << (len(chunk) - 1).bit_length()
                 tokens = np.zeros((width, bucket), np.int32)
                 for j, pl in enumerate(chunk):
                     tokens[j] = pl["padded"]
+                batch = {"tokens": jnp.asarray(tokens)}
+                for name in extra_names:
+                    # stack the chunk's extras; padding rows are zeros (row-
+                    # independent prefill: the pad rows are sliced away)
+                    first = np.asarray(chunk[0]["extra"][name])
+                    rows = ([np.asarray(pl["extra"][name]) for pl in chunk]
+                            + [np.zeros_like(first)] * (width - len(chunk)))
+                    batch[name] = jnp.asarray(np.stack(rows))
                 with self.tel.span("admit.prefill", bucket=bucket,
                                    width=width, n=len(chunk)):
                     logits, caches, _ = self._prefill_jit(
-                        self.params, {"tokens": jnp.asarray(tokens)})
+                        self.params, batch)
                 self.prefill_calls += 1
                 self.tel.count("admit.prefill_calls")
                 for j, pl in enumerate(chunk):
@@ -772,6 +944,13 @@ class ContinuousBatchingEngine:
                                     will_write)
             if pages is None:
                 return False                 # pool pressure: retry later
+        cross_pages = None
+        if self.cross_blocks:
+            cross_pages = kv.alloc_cross(slot)
+            if cross_pages is None:
+                if pages is not None:
+                    kv.free(slot)            # undo the attn half
+                return False                 # cross-space pressure
         self._free_slots.pop()
         temp = getattr(req, "temperature", None)
         if temp is None:
@@ -789,6 +968,7 @@ class ContinuousBatchingEngine:
             self.state = self._admit_jit(
                 self.state, pl["caches"], pl["logits"], slot,
                 None if pages is None else jnp.asarray(pages),
+                None if cross_pages is None else jnp.asarray(cross_pages),
                 target, float(temp), topk, key, bucket=bucket, ring=ring)
             if self.prefix_sharing and self._pure_attn and pl["keys"]:
                 self._logits_cache_put(pl["keys"][-1], pl["logits"][0])
@@ -927,8 +1107,8 @@ class ContinuousBatchingEngine:
             raise ValueError(f"slot {slot} is empty")
         if not self.can_preempt:
             raise RuntimeError(
-                "engine cannot preempt: swap disabled or the arch has "
-                "unswappable (SSM) slot state")
+                "engine cannot preempt: swap disabled or the arch "
+                "registered an unswappable state kind")
         if self.prefix_sharing:
             assert s.planned == len(s.tokens), \
                 "preempt with a decode round in flight"
@@ -955,6 +1135,22 @@ class ContinuousBatchingEngine:
                    for name in kv.attn_subs}
         host_pos = np.array(st["pos_pool"][padded])
         host_pos[nb:] = POS_SENTINEL
+        # per-kind halves of the snapshot: the cross row is always full
+        # width (one gather shape per arch) and SSM slot state checkpoints
+        # as fixed-width records — both pure reads, like the page gather
+        host_cross = None
+        n_cross = 0
+        if self.cross_blocks:
+            cpages = np.asarray(kv.cross_pages_of(slot), np.int32)
+            host_cross = {n: np.array(st["caches"]["cross"][n][:, cpages])
+                          for n in ("k", "v")}
+            n_cross = len(cpages)
+        host_state = None
+        if self.ssm_subs:
+            host_state = {sname: ssm_mod.checkpoint_slot_state(
+                              st["caches"][sname], slot)
+                          for sname in self.ssm_subs}
+        n_state = len(self.ssm_subs)
         written = {((s.bucket + t) % s.ring) // self.page_size
                    for t in range(min(len(s.tokens), s.ring))}
         private = kv.private_blocks(slot)
@@ -967,11 +1163,14 @@ class ContinuousBatchingEngine:
             lstep=int(st["lstep"][slot]), key=np.asarray(st["keys"][slot]),
             logits=np.asarray(st["logits"][slot]), host_kv=host_kv,
             host_pos=host_pos, n_private=len(private),
-            preemptions=s.preemptions + 1, t_first=s.t_first)
+            preemptions=s.preemptions + 1, t_first=s.t_first,
+            host_cross=host_cross, n_cross=n_cross,
+            host_state=host_state, n_state=n_state)
         with self.tel.span("swap.out", slot=slot, pages=nb,
                            private=len(private), pdev=self.pdev):
             ticket = self.swap_store.put(rec)
-            kv.swap_out(slot, len(private))
+            kv.swap_out(slot, len(private), cross_blocks=n_cross,
+                        state_records=n_state)
             self.state = self._evict_jit(self.state, np.int32(slot))
         self._slots[slot] = None
         self._free_slots.append(slot)
@@ -998,7 +1197,9 @@ class ContinuousBatchingEngine:
             return False
         kv = self.kv
         rec = self.swap_store.record(ticket)
-        nb = kv.blocks_for(rec.ring)
+        # SSM-only archs have no attention page space: nothing to allocate
+        # (or scatter) on the attn side, the record is all slot state
+        nb = kv.blocks_for(rec.ring) if kv.attn_subs else 0
         # pristine prefix: contiguous blocks the decode ring never wrote
         pristine = 0
         while pristine < nb and pristine not in rec.written:
@@ -1006,16 +1207,25 @@ class ContinuousBatchingEngine:
         shared: List[int] = []
         if self.prefix_sharing and rec.chain_keys:
             shared = kv.lookup_chain(rec.chain_keys)[:pristine]
-        will_write = {((rec.pos + t) % rec.ring) // self.page_size
-                      for t in range(min(rec.remaining, rec.ring))}
+        will_write = ({((rec.pos + t) % rec.ring) // self.page_size
+                       for t in range(min(rec.remaining, rec.ring))}
+                      if nb else ())
         slot = self._free_slots[-1]
-        pages = kv.alloc_shared(slot, shared, nb - len(shared), will_write)
+        pages = (kv.alloc_shared(slot, shared, nb - len(shared), will_write)
+                 if nb else np.zeros((0,), np.int32))
         if pages is None:
             return False
+        cross_pages = None
+        if self.cross_blocks:
+            cross_pages = kv.alloc_cross(slot)
+            if cross_pages is None:
+                if nb:
+                    kv.free(slot)    # undo the attn half; retry later
+                return False
         try:
             arrays = self.swap_store.fetch(ticket)
         except InjectedFault:
-            kv.free(slot)            # undo; the host record is intact
+            kv.free(slot)            # undo both kinds; record intact
             raise
         self._free_slots.pop()
         # pad the page row to the table width (SENTINEL) and redirect both
@@ -1026,6 +1236,11 @@ class ContinuousBatchingEngine:
         row[:nb] = pages
         scatter = np.full((mb,), PagedKVCache.TRASH, np.int32)
         scatter[len(shared):nb] = np.asarray(pages)[len(shared):nb]
+        cross_arg = None
+        if self.cross_blocks:
+            cross_arg = {"kv": arrays["cross"],
+                         "pages": jnp.asarray(cross_pages)}
+        state_arg = arrays.get("state")
         with self.tel.span("swap.restore", slot=slot, pages=nb,
                            reshared=len(shared), pdev=self.pdev):
             self.state = self._restore_jit(
@@ -1034,8 +1249,10 @@ class ContinuousBatchingEngine:
                 jnp.asarray(scatter), np.int32(rec.pos),
                 np.int32(rec.remaining), np.float32(rec.temp),
                 np.int32(rec.top_k), jnp.asarray(rec.key),
-                np.int32(rec.lstep), np.int32(rec.ring))
-            kv.swap_in(rec.n_private)
+                np.int32(rec.lstep), np.int32(rec.ring),
+                cross_arg, state_arg)
+            kv.swap_in(rec.n_private, cross_blocks=rec.n_cross,
+                       state_records=rec.n_state)
         self.swap_store.pop(ticket)
         if self.prefix_sharing and rec.chain_keys:
             # unwritten restored blocks hold bitwise their chains' prefill
@@ -1056,7 +1273,8 @@ class ContinuousBatchingEngine:
         retry budget): its host blocks leave the ledger without a restore.
         Returns the record so the caller can surface the request."""
         rec = self.swap_store.pop(ticket)
-        self.kv.swap_in(rec.n_private, restored=False)
+        self.kv.swap_in(rec.n_private, restored=False,
+                        cross_blocks=rec.n_cross, state_records=rec.n_state)
         return rec
 
     def fail_live(self) -> List[Any]:

@@ -81,6 +81,23 @@ def sample_rows(logits: jax.Array, temps: jax.Array, topks: jax.Array,
     return jnp.where(temps > 0, sampled, greedy)
 
 
+def resolve_extra_inputs(cfg: ArchConfig, req: Any) -> Dict[str, np.ndarray]:
+    """Per-request non-token prefill inputs (encoder frames, vision patch
+    embeds), resolved from ``req.extra_inputs`` with per-arch defaults.
+
+    Encoder-decoder archs cannot prefill without ``frames``, so a request
+    that carries none gets deterministic zero frames — the *same* default
+    on every path (blocking batch build, continuous admission), which keeps
+    the A/B token-exactness contract intact for requests that never set
+    extras.  Arrays are per-request (no batch axis); batching paths stack
+    them."""
+    extra = dict(getattr(req, "extra_inputs", None) or {})
+    if cfg.enc_dec and "frames" not in extra:
+        extra["frames"] = np.zeros((cfg.encoder_seq_len, cfg.d_model),
+                                   np.float32)
+    return extra
+
+
 @dataclasses.dataclass
 class GenerationResult:
     tokens: np.ndarray            # (B, steps)
@@ -205,6 +222,16 @@ class ServingEngine:
             decode_loop_rows,
             static_argnames=("steps", "all_greedy", "any_topk"))
         self.decode_steps = 0       # scanned decode steps enqueued (benchmarks)
+
+    # ------------------------------------------------------------------
+    def state_kinds(self):
+        """The per-request state kinds this arch's serving rows carry
+        (attention KV pages / cross-attention pages / SSM records) — the
+        capability probe :meth:`repro.serving.continuous.
+        ContinuousBatchingEngine.supported_modes` and ``launch/serve.py
+        --list-archs`` are built on."""
+        from repro.serving.kvcache import state_kinds
+        return state_kinds(self.cfg)
 
     # ------------------------------------------------------------------
     def prefill(self, batch: Dict[str, Any]):

@@ -70,6 +70,35 @@ can admit and retire requests independently:
   scatter kernel).  Either way the decode step has a single static shape
   regardless of the prompt-length mix (shape-stable: one compile).
 
+State kinds (PR 9): the pool is no longer attention-only.  Each arch
+registers a tuple of :class:`StateKind` descriptors (:func:`state_kinds`):
+
+* ``attn`` — the refcounted/CoW/prefix-shared page space above, bitwise
+  unchanged for pure-attention archs;
+* ``cross`` — encoder-decoder cross-attention KV, paged into a *separate*
+  page space (``cross_blocks`` per slot, written once at admission, read-only
+  thereafter: no refcounts, no CoW, no trie — every admission takes a fresh
+  private row and retirement returns it).  Pool dtype is the compute dtype,
+  matching the blocking engine's prefill output bitwise;
+* ``ssm`` — SSM/hybrid slot state is *not* paged (it lives dense in the slot
+  table) but is checkpointable as fixed-width per-slot records
+  (:func:`repro.models.ssm.checkpoint_slot_state`), so SSM rows participate
+  in swap-preemption through the same per-kind host ledger.
+
+The two-tier conservation audit extends per kind: ``assert_conserved``
+accepts either the historical int (attention blocks only) or a
+``{"attn": n, "cross": n, "ssm": n}`` dict audited against the per-kind
+``swapped_by_kind()`` ledger and the swap store's ``pages_by_kind()``.
+
+Sliding-window archs share prefixes through *window-phase* chain keys:
+``chain_keys(padded, ring=...)`` emits one key per ring block tagged with
+``(ring, window base, block)`` — prefill clips the cache to the last
+``ring`` positions, so ring block ``b`` holds absolute positions ``base +
+b*P .. base + (b+1)*P - 1`` (``base = bucket - ring``) and two requests may
+share it only when bucket, ring and every token through the block's last
+position agree.  Non-windowed archs keep the historical untagged keys
+byte-for-byte.
+
 Masked (inactive) rows redirect their writes to the reserved ``TRASH`` page,
 which no active row's page table ever references — a retired slot's stale
 page table can therefore neither corrupt pages reallocated to newer requests
@@ -102,7 +131,8 @@ after pages have been freed and reused).
 """
 from __future__ import annotations
 
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import (Dict, Iterable, List, NamedTuple, Optional, Set, Tuple,
+                    Union)
 
 import jax
 import jax.numpy as jnp
@@ -120,6 +150,42 @@ def attn_subs(cfg: ArchConfig) -> List[str]:
     """Names of the attention sublayers in one stage (``sub{i}``)."""
     sched = cfg.block_schedule()[:cfg.stage_period]
     return [f"sub{i}" for i, (mixer, _) in enumerate(sched) if mixer == ATTN]
+
+
+def ssm_subs(cfg: ArchConfig) -> List[str]:
+    """Names of the SSM sublayers in one stage (``sub{i}``)."""
+    sched = cfg.block_schedule()[:cfg.stage_period]
+    return [f"sub{i}" for i, (mixer, _) in enumerate(sched) if mixer != ATTN]
+
+
+class StateKind(NamedTuple):
+    """One kind of per-request serving state the pool accounts for.
+
+    ``paged`` — lives in a shared device page space (attention KV in the
+    refcounted/CoW space, cross-attention KV in its private space);
+    ``swappable`` — has a fixed-width host snapshot representation, so rows
+    carrying it can be preemption victims.
+    """
+    name: str
+    paged: bool
+    swappable: bool
+
+
+def state_kinds(cfg: ArchConfig) -> Tuple[StateKind, ...]:
+    """The state kinds an arch's slot rows carry, in canonical order.
+
+    Every kind is currently swappable — attention/cross pages snapshot as
+    page blocks, SSM states as fixed-width per-slot records — which is what
+    lifts the old "SSM rows are never victims" restriction.
+    """
+    kinds: List[StateKind] = []
+    if attn_subs(cfg):
+        kinds.append(StateKind("attn", paged=True, swappable=True))
+    if cfg.enc_dec:
+        kinds.append(StateKind("cross", paged=True, swappable=True))
+    if ssm_subs(cfg):
+        kinds.append(StateKind("ssm", paged=False, swappable=True))
+    return tuple(kinds)
 
 
 class PagedKVCache:
@@ -140,12 +206,24 @@ class PagedKVCache:
     RESERVED = 2
 
     def __init__(self, cfg: ArchConfig, capacity: int, page_size: int,
-                 max_blocks: int, num_pages: Optional[int] = None):
+                 max_blocks: int, num_pages: Optional[int] = None,
+                 cross_blocks: int = 0):
         self.cfg = cfg
         self.capacity = capacity
         self.page_size = page_size
         self.max_blocks = max(max_blocks, 1)
         self.attn_subs = attn_subs(cfg)
+        self.state_kinds = state_kinds(cfg)
+        # cross-attention page space: per-request, written once at admission,
+        # read-only thereafter — so it needs no refcounts, trie or CoW, just
+        # its own free list.  Sized to hold every slot's row plus the two
+        # reserved pages (SENTINEL for vacated page-table rows).
+        self.cross_blocks = int(cross_blocks)
+        self.num_cross_pages = (self.RESERVED + capacity * self.cross_blocks
+                                if self.cross_blocks else 0)
+        self._cross_free: List[int] = list(
+            range(self.num_cross_pages - 1, self.RESERVED - 1, -1))
+        self._cross_owned: Dict[int, List[int]] = {}
         if num_pages is None:
             num_pages = self.RESERVED + capacity * self.max_blocks
         if num_pages < self.RESERVED + self.max_blocks:
@@ -170,6 +248,7 @@ class PagedKVCache:
         self.pages_allocated = 0
         self.pages_reused = 0
         self.pages_shared = 0
+        self.cross_pages_allocated = 0
         self.cow_forks = 0
         self.pristine_forks = 0
         # host tier (preemption swap): page blocks whose only copy lives in
@@ -178,7 +257,12 @@ class PagedKVCache:
         # ordinary free() accounting — but the *two-tier* audit
         # (assert_conserved(host_pages=...)) checks this ledger against the
         # store, so a swap record can neither leak nor double-count blocks.
+        # Per state kind: ``swapped_pages`` keeps its historical meaning
+        # (attention blocks), cross pages and SSM records get their own
+        # ledgers — audited per kind by assert_conserved(host_pages=dict).
         self.swapped_pages = 0
+        self.swapped_cross = 0
+        self.swapped_state = 0
         self.swap_outs = 0
         self.swap_ins = 0
         self.swap_drops = 0
@@ -227,14 +311,37 @@ class PagedKVCache:
                     need += 1
         return need
 
-    def chain_keys(self, padded: np.ndarray) -> List[bytes]:
-        """Chain key per full block of a padded prompt: the bytes of the
-        whole prompt up to and including the block, so two requests share a
-        block only when every earlier token (padding included) agrees —
-        exactly the condition under which the block's KV is bitwise equal."""
+    def chain_keys(self, padded: np.ndarray, ring: Optional[int] = None,
+                   salt: bytes = b"") -> List[bytes]:
+        """Chain key per page block of a padded prompt: the bytes of the
+        whole prompt up to and including the block's last cached position,
+        so two requests share a block only when every earlier token (padding
+        included) agrees — exactly the condition under which the block's KV
+        is bitwise equal.
+
+        ``ring`` (sliding-window archs) keys by *(content chain, window
+        phase)*: prefill clips the cache to the last ``ring`` positions, so
+        ring block ``b`` holds absolute positions ``base + b*P`` onward
+        (``base = bucket - ring``) and its key is the prompt bytes through
+        the block's last cached position plus a ``(ring, base, block)`` tag
+        — requests with a different bucket or window hold different
+        positions in the "same" ring block and must never collide.  When
+        the ring covers the whole bucket (``ring is None`` or ``ring >=
+        bucket``) keys are byte-identical to the historical untagged form.
+
+        ``salt`` prefixes every key (non-token prefill inputs — encoder
+        frames, vision patch embeds — change the KV a block holds, so they
+        must be part of block identity)."""
         t = np.ascontiguousarray(np.asarray(padded, np.int32).reshape(-1))
         p = self.page_size
-        return [t[:(b + 1) * p].tobytes() for b in range(t.size // p)]
+        bucket = t.size
+        if ring is None or ring >= bucket:
+            return [salt + t[:(b + 1) * p].tobytes()
+                    for b in range(bucket // p)]
+        base = bucket - ring
+        return [salt + t[:min(base + (b + 1) * p, bucket)].tobytes()
+                + b"|w%d:%d:%d" % (ring, base, b)
+                for b in range(-(-ring // p))]
 
     def lookup_chain(self, keys: Iterable[bytes]) -> List[int]:
         """Pages of the longest registered full-block prefix of ``keys``."""
@@ -319,6 +426,38 @@ class PagedKVCache:
             tel.event("kv.alloc", slot=slot, fresh=n_fresh,
                       shared=len(shared))
         return np.asarray(self._owned[slot], np.int32)
+
+    def alloc_cross(self, slot: int) -> Optional[np.ndarray]:
+        """Take ``slot``'s row of ``cross_blocks`` pages from the cross page
+        space; None when the space is short (the request stays queued).
+        Cross pages are private and written once, so there is nothing to
+        share and no reserve to keep."""
+        if slot in self._cross_owned:
+            raise ValueError(
+                f"slot {slot} already owns cross pages; free() it before "
+                f"re-allocating")
+        if len(self._cross_free) < self.cross_blocks:
+            self.tel.count("kv.alloc_blocked")
+            return None
+        pages = [self._cross_free.pop() for _ in range(self.cross_blocks)]
+        self._cross_owned[slot] = pages
+        self.cross_pages_allocated += len(pages)
+        if self.tel.enabled:
+            self.tel.count("kv.cross.pages_allocated", len(pages))
+        return np.asarray(pages, np.int32)
+
+    def cross_pages_of(self, slot: int) -> List[int]:
+        """The slot's cross page row (block order), read-only."""
+        return list(self._cross_owned.get(slot, ()))
+
+    def _free_cross(self, slot: int) -> int:
+        pages = self._cross_owned.pop(slot, None)
+        if not pages:
+            return 0
+        self._cross_free.extend(pages)
+        if self.tel.enabled:
+            self.tel.count("kv.cross.pages_freed", len(pages))
+        return len(pages)
 
     def register(self, slot: int, keys: List[bytes]) -> None:
         """Enter ``slot``'s pages into the prefix trie under their chain
@@ -411,28 +550,50 @@ class PagedKVCache:
         return [b for b, p in enumerate(self._owned.get(slot, ()))
                 if self._ref.get(p, 0) == 1 and p not in self._page_key]
 
-    def swap_out(self, slot: int, host_blocks: int) -> int:
+    def swapped_by_kind(self) -> Dict[str, int]:
+        """Host-tier ledger per state kind: attention page blocks, cross
+        page blocks, SSM state records (one per SSM sublayer per victim)."""
+        return {"attn": self.swapped_pages, "cross": self.swapped_cross,
+                "ssm": self.swapped_state}
+
+    def swap_out(self, slot: int, host_blocks: int, cross_blocks: int = 0,
+                 state_records: int = 0) -> int:
         """Preemption swap-out: retire a victim slot's page references —
-        exactly :meth:`free`, shared prefix pages are never pulled out from
-        under their other sequences — and account ``host_blocks`` page
-        blocks (the victim's private suffix, see :meth:`private_blocks`) as
-        now held by the host tier.  The engine snapshots page content
+        exactly :meth:`free` (cross row included), shared prefix pages are
+        never pulled out from under their other sequences — and account the
+        snapshot against the per-kind host ledger: ``host_blocks`` attention
+        page blocks (the victim's private suffix, see
+        :meth:`private_blocks`), ``cross_blocks`` cross pages and
+        ``state_records`` SSM state records.  The engine snapshots content
         *before* calling this; the allocator only moves the ledger.
-        Returns the pages whose refcount dropped to 0."""
+        Returns the attention pages whose refcount dropped to 0."""
         released = self.free(slot)
         self.swapped_pages += host_blocks
+        self.swapped_cross += cross_blocks
+        self.swapped_state += state_records
         self.swap_outs += 1
         self.tel.count("kv.swap_out_blocks", host_blocks)
+        if cross_blocks:
+            self.tel.count("kv.cross.swap_out_blocks", cross_blocks)
+        if state_records:
+            self.tel.count("kv.ssm.swap_out_records", state_records)
         self.tel.gauge("kv.swapped_pages", self.swapped_pages)
         return released
 
-    def swap_in(self, host_blocks: int, restored: bool = True) -> None:
-        """Account ``host_blocks`` page blocks leaving the host tier —
-        either restored into fresh device pages (``restored``) or dropped
-        with a terminally failed swap record."""
+    def swap_in(self, host_blocks: int, restored: bool = True,
+                cross_blocks: int = 0, state_records: int = 0) -> None:
+        """Account a record's blocks leaving the host tier — either restored
+        into fresh device pages / slot rows (``restored``) or dropped with a
+        terminally failed swap record."""
         assert self.swapped_pages >= host_blocks, \
             (self.swapped_pages, host_blocks)
+        assert self.swapped_cross >= cross_blocks, \
+            (self.swapped_cross, cross_blocks)
+        assert self.swapped_state >= state_records, \
+            (self.swapped_state, state_records)
         self.swapped_pages -= host_blocks
+        self.swapped_cross -= cross_blocks
+        self.swapped_state -= state_records
         if restored:
             self.swap_ins += 1
             self.tel.count("kv.swap_in_blocks", host_blocks)
@@ -442,11 +603,13 @@ class PagedKVCache:
         self.tel.gauge("kv.swapped_pages", self.swapped_pages)
 
     def free(self, slot: int) -> int:
-        """Retire a slot: decrement its pages' refcounts.  Pages reaching
-        refcount 0 return to the free list — or stay behind as cached
-        (evictable) pristine pages when still trie-registered, so a later
-        identical prefix can re-share them.  Returns the number of pages
-        whose refcount dropped to 0."""
+        """Retire a slot: decrement its pages' refcounts and return its
+        cross row (if any) to the cross free list.  Attention pages
+        reaching refcount 0 return to the free list — or stay behind as
+        cached (evictable) pristine pages when still trie-registered, so a
+        later identical prefix can re-share them.  Returns the number of
+        attention pages whose refcount dropped to 0."""
+        self._free_cross(slot)
         released = 0
         for blk, page in enumerate(self._owned.pop(slot, [])):
             self._ref[page] -= 1
@@ -488,17 +651,21 @@ class PagedKVCache:
         return page
 
     # ------------------------------------------------------------------
-    def assert_conserved(self, host_pages: Optional[int] = None) -> None:
+    def assert_conserved(
+            self, host_pages: Optional[Union[int, Dict[str, int]]] = None
+    ) -> None:
         """Audit the allocator (tests): page conservation, refcount
-        integrity, trie consistency and fork-reserve headroom.
+        integrity, trie consistency, fork-reserve headroom, and — when a
+        cross page space exists — cross-row conservation.
 
         With ``host_pages`` (the swap store's current block count) the audit
         extends to the host tier: the device invariant must hold unchanged
         — a swapped victim's pages went through the ordinary free/realloc
         accounting — *and* every block the allocator believes is
-        host-resident is in the store exactly once (``swapped_pages ==
-        host_pages``), so a swap round-trip conserves pages across both
-        tiers."""
+        host-resident is in the store exactly once, so a swap round-trip
+        conserves pages across both tiers.  An int audits the attention
+        ledger only (``swapped_pages == host_pages``, the historical form);
+        a dict (``store.pages_by_kind()``) audits every kind's ledger."""
         usable = self.num_pages - self.RESERVED
         live = {p for p, r in self._ref.items() if r > 0}
         free_set = set(self._free)
@@ -529,10 +696,29 @@ class PagedKVCache:
         # always be coverable, so a copy-on-write fork can never fail
         assert self.available() >= self.cow_reserve, \
             (self.available(), self.cow_reserve)
-        assert self.swapped_pages >= 0, self.swapped_pages
+        if self.cross_blocks:
+            cross_live = [p for pages in self._cross_owned.values()
+                          for p in pages]
+            cross_free = set(self._cross_free)
+            assert len(cross_free) == len(self._cross_free), \
+                "cross free list has duplicates"
+            assert len(set(cross_live)) == len(cross_live), \
+                "cross page owned twice"
+            assert not (cross_free & set(cross_live)), \
+                "cross page both free and owned"
+            assert len(cross_free) + len(cross_live) == \
+                self.num_cross_pages - self.RESERVED, \
+                (len(cross_free), len(cross_live), self.num_cross_pages)
+        ledger = self.swapped_by_kind()
+        assert all(v >= 0 for v in ledger.values()), ledger
         if host_pages is not None:
-            assert self.swapped_pages == host_pages, \
-                (self.swapped_pages, host_pages)
+            if isinstance(host_pages, dict):
+                want = {k: 0 for k in ledger}
+                want.update(host_pages)
+                assert ledger == want, (ledger, want)
+            else:
+                assert self.swapped_pages == host_pages, \
+                    (self.swapped_pages, host_pages)
         self.tel.count("kv.conservation_checks")
 
     # ------------------------------------------------------------------
@@ -553,6 +739,21 @@ class PagedKVCache:
         return {name: {"k": jnp.zeros(shape, jnp.bfloat16),
                        "v": jnp.zeros(shape, jnp.bfloat16)}
                 for name in self.attn_subs}
+
+    def make_cross_page_table(self) -> jax.Array:
+        return jnp.full((self.capacity, self.cross_blocks), self.SENTINEL,
+                        jnp.int32)
+
+    def make_cross_pools(self, n_stages: int) -> Dict[str, jax.Array]:
+        """Cross-attention page pool, in the *compute* dtype: the blocking
+        engine decodes straight from prefill's cross KV (compute dtype), so
+        storing bf16 here would break bitwise parity with it."""
+        from repro.models.layers import dtype_of
+        cfg = self.cfg
+        shape = (n_stages, self.num_cross_pages, self.page_size,
+                 cfg.num_kv_heads, cfg.head_dim)
+        dt = dtype_of(cfg.compute_dtype)
+        return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
 # ---------------------------------------------------------------------------

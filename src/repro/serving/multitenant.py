@@ -86,8 +86,10 @@ an overload-survival layer:
   never re-takes the slot a blocked tier-0 request needs), stage their
   pages back through the
   sequential :class:`repro.core.transfer.StagingEngine` with async
-  prefetch, and resume token-exactly.  Only pure-attention engines
-  preempt; SSM/hybrid rows are never victims.
+  prefetch, and resume token-exactly.  Every state kind swaps (PR 9):
+  attention and cross-attention pages as blocks, SSM slot state as
+  fixed-width checkpoint records — so SSM/hybrid and encoder-decoder
+  rows are ordinary preemption victims, picked by priority alone.
 * **graceful degradation under faults** — a :class:`repro.distributed.
   fault.FaultPlane` can drop rounds, stall admissions and poison swap
   reads; each injection raises before state mutates and feeds a retry/limit
@@ -118,7 +120,7 @@ from repro.distributed.fault import (HeartbeatMonitor, InjectedFault,
                                      StragglerDetector)
 from repro.obs.telemetry import Telemetry, get_telemetry, record_timeline
 from repro.serving.engine import (GenerationResult, PendingGeneration,
-                                  ServingEngine)
+                                  ServingEngine, resolve_extra_inputs)
 
 MODES = ("continuous", "overlapped", "blocking")
 OUTCOMES = ("completed", "rejected", "failed")
@@ -143,6 +145,13 @@ class Request:
     # and pick shedding victims
     priority: int = 1
     deadline_s: Optional[float] = None
+    # non-token prefill inputs, per-request and without a batch axis (e.g.
+    # {"patch_embeds": (num_patches, 1024)} for vision archs, {"frames":
+    # (encoder_seq_len, d_model)} for encoder-decoder archs — the latter
+    # defaults to zero frames via resolve_extra_inputs when omitted).
+    # Batching paths stack them; the continuous engine folds them into the
+    # prefix-sharing chain keys so only identical extras share pages.
+    extra_inputs: Optional[Dict[str, Any]] = None
 
 
 @dataclasses.dataclass
@@ -364,6 +373,33 @@ class MultiTenantScheduler:
             prompts[i, s_max - r.prompt.size:] = r.prompt
         return tenant, reqs, prompts, max(r.max_new_tokens for r in reqs)
 
+    def _batch_extras(self, reqs: List[Request]
+                      ) -> Optional[Dict[str, np.ndarray]]:
+        """Stack the batch's per-request non-token prefill inputs (None when
+        no request carries any).  A key missing from some rows is zero-
+        filled — sound for encoder frames (resolve_extra_inputs defaults
+        them anyway), but mixing with-image and text-only vision requests
+        in one tenant batch merges zero patches into the text-only rows, so
+        keep a tenant's extras uniform (the continuous schedule groups by
+        extra-key signature instead and has no such caveat)."""
+        cfg = getattr(self.engine, "cfg", None)
+        if cfg is None:      # engine test-doubles: no per-arch defaults
+            per_req = [dict(getattr(r, "extra_inputs", None) or {})
+                       for r in reqs]
+        else:
+            per_req = [resolve_extra_inputs(cfg, r) for r in reqs]
+        names = sorted({k for ex in per_req for k in ex})
+        if not names:
+            return None
+        out = {}
+        for name in names:
+            proto = next(np.asarray(ex[name]) for ex in per_req
+                         if name in ex)
+            out[name] = np.stack([np.asarray(ex[name]) if name in ex
+                                  else np.zeros_like(proto)
+                                  for ex in per_req])
+        return out
+
     def _sampling_kwargs(self, reqs: List[Request]) -> Dict[str, Any]:
         """Per-request sampling arrays for dispatch(); empty when every row
         uses engine defaults so the scalar (token-exact) path keeps running."""
@@ -445,6 +481,7 @@ class MultiTenantScheduler:
         # never empty (and the tenant's round-served mark stays consistent)
         tenant, reqs, prompts, steps = self._build_batch(tenant)
         handle = self.engine.dispatch(prompts, steps,
+                                      extra_inputs=self._batch_extras(reqs),
                                       **self._sampling_kwargs(reqs))
         te = time.perf_counter() - self._t0
         slot = self._slot_of[tenant]
@@ -1008,7 +1045,8 @@ class MultiTenantScheduler:
         self._prepared = None
         asm_start, asm_end = self._asm_window
         t0 = time.perf_counter()
-        result: GenerationResult = self.engine.generate(prompts, steps)
+        result: GenerationResult = self.engine.generate(
+            prompts, steps, extra_inputs=self._batch_extras(reqs))
         done = time.perf_counter()       # service completion: BEFORE the
         busy = done - t0                 # stage-ahead work below, so the
         # compute window and latencies don't absorb the next slot's assembly

@@ -31,7 +31,15 @@ module is the host side of that tiering:
 
 Conservation: :meth:`pages` is the store's total private-block count, which
 :meth:`repro.serving.kvcache.PagedKVCache.assert_conserved` checks against
-the allocator's ``swapped_pages`` ledger (``host_pages=store.pages()``).
+the allocator's ``swapped_pages`` ledger (``host_pages=store.pages()``);
+:meth:`pages_by_kind` is the per-state-kind split (attention blocks, cross
+pages, SSM records) audited by the dict form of the same call.
+
+Records are per-kind (PR 9): a victim's snapshot carries its attention page
+blocks, its cross-attention page row (enc-dec archs — read-only content,
+restored verbatim) and its checkpointed SSM slot state (SSM/hybrid archs —
+fixed-width records from :func:`repro.models.ssm.checkpoint_slot_state`),
+all staged back through the same sequential lanes.
 """
 from __future__ import annotations
 
@@ -78,6 +86,13 @@ class SwapRecord:
     n_private: int                  # blocks uniquely held by this record
     preemptions: int = 1            # times this request has been swapped
     t_first: Optional[float] = None  # first-token stamp (TTFT survives swap)
+    # per-kind snapshots (PR 9): cross-attention pages (enc-dec archs) and
+    # checkpointed SSM slot-state records (SSM/hybrid archs).  Keyword-only
+    # in spirit — defaults keep pure-attention records source-compatible.
+    host_cross: Optional[Dict[str, np.ndarray]] = None  # k/v (S, nbc, P, H, D)
+    n_cross: int = 0                # cross pages held by this record
+    host_state: Optional[Dict[str, Any]] = None  # sub -> {ssm, conv} records
+    n_state: int = 0                # SSM records (one per SSM sublayer)
 
 
 class HostSwapStore:
@@ -125,9 +140,18 @@ class HostSwapStore:
         return len(self._records)
 
     def pages(self) -> int:
-        """Total private page blocks currently held by the host tier (the
-        store half of the two-tier conservation audit)."""
+        """Total private attention page blocks currently held by the host
+        tier (the store half of the two-tier conservation audit)."""
         return sum(r.n_private for r in self._records.values())
+
+    def pages_by_kind(self) -> Dict[str, int]:
+        """Host-held blocks per state kind — the store half of the
+        *per-kind* two-tier audit (:meth:`repro.serving.kvcache.
+        PagedKVCache.assert_conserved` with a dict)."""
+        recs = self._records.values()
+        return {"attn": sum(r.n_private for r in recs),
+                "cross": sum(r.n_cross for r in recs),
+                "ssm": sum(r.n_state for r in recs)}
 
     def tickets(self) -> List[int]:
         return sorted(self._records)
@@ -143,8 +167,12 @@ class HostSwapStore:
         self.puts += 1
         if self.tel.enabled:
             self.tel.count("swap.puts")
-            self.tel.count("swap.bytes_out",
-                           _tree_bytes(rec.host_kv) + rec.host_pos.nbytes)
+            nbytes = _tree_bytes(rec.host_kv) + rec.host_pos.nbytes
+            if rec.host_cross is not None:
+                nbytes += _tree_bytes(rec.host_cross)
+            if rec.host_state is not None:
+                nbytes += _tree_bytes(rec.host_state)
+            self.tel.count("swap.bytes_out", nbytes)
             self.tel.gauge("swap.host_pages", self.pages())
         return ticket
 
@@ -156,12 +184,17 @@ class HostSwapStore:
             return
         rec = self._records[ticket]
         tree = {"kv": rec.host_kv, "pos": rec.host_pos}
+        if rec.host_cross is not None:
+            tree["cross"] = rec.host_cross
+        if rec.host_state is not None:
+            tree["state"] = rec.host_state
         self.tel.event("swap.prefetch", ticket=ticket,
                        lanes=(self.lanes.n_lanes if self.lanes is not None
                               else 1))
         if self.lanes is not None:
-            # KV blocks (S, max_blocks, P, Hkv, D) shard along Hkv; the
-            # position rows replicate.  Each shard stages on its own lane.
+            # KV blocks (S, max_blocks, P, Hkv, D) — self- or cross-attention
+            # — shard along Hkv; position rows and SSM state records
+            # replicate.  Each shard stages on its own lane.
             sh = self.sharder
 
             def sharding_of(a):

@@ -108,6 +108,166 @@ def test_block_schedules():
     assert all(s == ("attn", "moe") for s in llama4.block_schedule())
 
 
+def _serving_pair(cfg, capacity=2):
+    """One (blocking engine, continuous engine) pair on the reduced cfg."""
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    ceng = ContinuousBatchingEngine(engine, capacity=capacity, page_size=8,
+                                    inner_steps=3, max_prompt_len=16)
+    return engine, ceng
+
+
+def _blocking_oracle(engine, ceng, req):
+    """Blocking generate under the continuous path's conventions: prompt
+    left-padded to its admission bucket, same resolved per-request extras."""
+    from repro.serving.engine import resolve_extra_inputs
+
+    b = ceng.bucket_len(req.prompt.size)
+    padded = np.zeros((1, b), np.int32)
+    padded[0, b - req.prompt.size:] = req.prompt
+    extra = {k: np.asarray(v)[None] for k, v in
+             resolve_extra_inputs(engine.cfg, req).items()}
+    return engine.generate(padded, max_new_tokens=req.max_new_tokens,
+                           extra_inputs=extra or None,
+                           seed=req.seed).tokens[0]
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_continuous_serving(arch, rng):
+    """Every config serves mode="continuous" through the paged-state pool
+    (PR 9).  Three ragged requests over two slots force slot eviction and
+    refill mid-drain; non-MoE archs must be token-exact against the
+    blocking oracle (MoE capacity routing couples batch rows, so those
+    assert completion + finiteness instead, per ``supported_modes``), and
+    the per-kind page/record ledger must balance at drain."""
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.multitenant import Request
+
+    cfg = get_config(arch).reduced()
+    modes = ContinuousBatchingEngine.supported_modes(cfg)
+    assert modes["continuous"]["supported"]
+    engine, ceng = _serving_pair(cfg)
+    reqs = []
+    for i, n in enumerate((5, 9, 13)):
+        extra = None
+        if cfg.num_patches:
+            # distinct per-request images: rows must never share pages
+            extra = {"patch_embeds": rng.normal(
+                size=(cfg.num_patches, 1024)).astype(np.float32)}
+        reqs.append(Request(f"t{i}", rng.integers(
+            1, cfg.vocab_size, n).astype(np.int32), max_new_tokens=6,
+            extra_inputs=extra))
+    done = {req.tenant: toks for req, toks in ceng.run_all(list(reqs))}
+    assert not ceng.rejected
+    for req in reqs:
+        toks = done[req.tenant]
+        assert toks.size == req.max_new_tokens
+        assert np.isfinite(toks).all(), arch
+        if modes["continuous"]["exactness"] == "bitwise":
+            np.testing.assert_array_equal(
+                _blocking_oracle(engine, ceng, req), toks, err_msg=arch)
+    ceng.kv.assert_conserved(
+        host_pages={k.name: 0 for k in ceng.kv.state_kinds})
+
+
+@pytest.mark.parametrize("arch", ["mamba2-2.7b", "jamba-1.5-large-398b"])
+def test_smoke_ssm_hybrid_preempt_restore(arch, rng):
+    """SSM and hybrid rows are ordinary preemption victims (PR 9): their
+    slot state checkpoints to fixed-width host records on swap-out and
+    scatters back on restore.  A tier-0 arrival against a full slot table
+    must preempt, every request must complete to full length, and mamba2
+    (non-MoE) must resume token-exactly vs the blocking oracle."""
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    cfg = get_config(arch).reduced()
+    engine, ceng = _serving_pair(cfg)
+    assert ceng.can_preempt
+    assert "ssm" in [k.name for k in ceng.state_kinds]
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous_engine=ceng, preemption=True)
+    los = [Request(f"lo{i}", rng.integers(1, cfg.vocab_size,
+                                          9).astype(np.int32),
+                   max_new_tokens=12, priority=1) for i in range(2)]
+    hi = Request("hi", rng.integers(1, cfg.vocab_size, 6).astype(np.int32),
+                 max_new_tokens=3, priority=0)
+    for r in los:
+        sched.submit(r)
+    sched.step()
+    sched.submit(hi)
+    out = {r.tenant: r for r in sched.drain()}
+    assert ceng.preemptions > 0 and ceng.restores > 0
+    assert len(ceng.swap_store) == 0
+    for req in [*los, hi]:
+        resp = out[req.tenant]
+        assert resp.outcome == "completed", arch
+        assert resp.tokens.size == req.max_new_tokens
+        assert np.isfinite(resp.tokens).all(), arch
+        if arch == "mamba2-2.7b":
+            np.testing.assert_array_equal(
+                _blocking_oracle(engine, ceng, req), resp.tokens)
+    ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages_by_kind())
+
+
+def test_smoke_ssm_checkpoint_roundtrip_bitwise(rng):
+    """The checkpoint/restore hooks themselves: gathering a slot's row out
+    of an SSM state pytree and scattering it back is bitwise lossless and
+    leaves every other slot untouched."""
+    from repro.models import ssm as ssm_mod
+
+    state = {"conv": jnp.asarray(rng.normal(size=(3, 4, 5, 7)), jnp.float32),
+             "ssm": {"h": jnp.asarray(rng.normal(size=(3, 4, 2, 8)),
+                                      jnp.float32)}}
+    rec = ssm_mod.checkpoint_slot_state(state, 2)
+    clobbered = jax.tree.map(lambda l: l.at[:, 2].set(0.0), state)
+    restored = ssm_mod.restore_slot_state(clobbered, 2, rec)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_smoke_sliding_window_prefix_sharing(rng):
+    """Sliding-window archs re-enter the prefix trie via window-phase chain
+    keys (PR 9): a byte-identical refresh admitted while the original's
+    ring is still pristine shares its pages and skips prefill entirely,
+    the original's first ring write CoW-forks the shared pages, and both
+    rows stay token-exact vs blocking.  (Every ring block is decode-
+    written, so the pool must hold fork headroom — hence the explicit
+    ``num_pages`` — and retired SWA rings leave nothing pristine to share,
+    unlike full-attention prompts.)"""
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import Request
+
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    assert cfg.sliding_window is not None
+    modes = ContinuousBatchingEngine.supported_modes(cfg)
+    assert modes["continuous"]["window_phase_keys"]
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=4,
+                                    num_pages=16, inner_steps=3,
+                                    max_prompt_len=16)
+    prompt = rng.integers(1, cfg.vocab_size, 13).astype(np.int32)
+    reqs = [Request(f"s{i}", prompt.copy(), max_new_tokens=6)
+            for i in range(2)]
+    assert ceng.try_admit_batch([reqs[0]]) == [True]
+    assert ceng.try_admit_batch([reqs[1]]) == [True]   # the refresh
+    assert ceng.kv.pages_shared > 0
+    assert ceng.prefill_skips >= 1
+    done = {}
+    while ceng.active_count():
+        for r, toks, _ in ceng.collect(ceng.dispatch_round()).finished:
+            done[r.tenant] = toks
+    assert ceng.kv.cow_forks > 0
+    for req in reqs:
+        np.testing.assert_array_equal(
+            _blocking_oracle(engine, ceng, req), done[req.tenant])
+    ceng.kv.assert_conserved(
+        host_pages={k.name: 0 for k in ceng.kv.state_kinds})
+
+
 def test_param_counts_plausible():
     # reduced configs stay tiny; full configs match the pool's labels
     import math

@@ -452,12 +452,34 @@ def test_unadmittable_request_rejects_not_spins(engine, rng, monkeypatch):
     assert sched.stats["a"]["rejected"] == 1
 
 
-def test_enc_dec_rejected():
-    """Encoder-decoder models have no paged cross-attention representation;
-    the constructor must refuse them loudly."""
+def test_enc_dec_continuous_token_exact(rng):
+    """Encoder-decoder family (PR 9): cross-attention KV pages into the
+    pool's separate per-request cross space at admission, decode gathers it
+    read-only per step, and every request is token-exact vs blocking
+    generate on the same padded prompt + (default zero) frames."""
     engine = _make_engine("whisper-base")
-    with pytest.raises(ValueError, match="encoder-decoder"):
-        ContinuousBatchingEngine(engine)
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    inner_steps=3, max_prompt_len=32)
+    assert {k.name for k in ceng.state_kinds} == {"attn", "cross"}
+    assert ceng.cross_blocks > 0
+    cfg = engine.cfg
+    reqs = [Request("e", rng.integers(1, cfg.vocab_size,
+                                      6 + 3 * i).astype(np.int32),
+                    max_new_tokens=4) for i in range(3)]
+    done = ceng.run_all(reqs)
+    assert len(done) == 3
+    from repro.serving.engine import resolve_extra_inputs
+    for req, tokens in done:
+        b = ceng.bucket_len(req.prompt.size)
+        padded = np.zeros((1, b), np.int32)
+        padded[0, b - req.prompt.size:] = req.prompt
+        extra = {k: np.asarray(v)[None] for k, v in
+                 resolve_extra_inputs(cfg, req).items()}
+        want = engine.generate(padded, max_new_tokens=req.max_new_tokens,
+                               extra_inputs=extra, seed=req.seed).tokens[0]
+        np.testing.assert_array_equal(want, tokens)
+    # all cross pages returned to the cross free list at drain
+    ceng.kv.assert_conserved(host_pages={"attn": 0, "cross": 0, "ssm": 0})
 
 
 def test_prompt_longer_than_max_rejected(engine, ceng):

@@ -382,10 +382,36 @@ def test_heartbeat_verdicts_on_global_plane():
 # ---------------------------------------------------------------------
 # satellite 4: golden-file schema pin for a deterministic run
 # ---------------------------------------------------------------------
+def _state_kind_counters(arch):
+    """One deterministic admit -> round -> preempt -> restore -> drain
+    cycle on ``arch``, returning only its per-state-kind ``kv.cross.*`` /
+    ``kv.ssm.*`` counters (the PR-9 paged-state-pool schema)."""
+    tel = Telemetry(enabled=True)
+    cfg = get_config(arch).reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    eng = ServingEngine(cfg, params)
+    ceng = ContinuousBatchingEngine(eng, capacity=2, page_size=8,
+                                    inner_steps=4, max_prompt_len=16,
+                                    telemetry=tel)
+    rng = np.random.default_rng(3)
+    reqs = [Request(t, rng.integers(1, cfg.vocab_size, 12).astype(np.int32),
+                    max_new_tokens=6) for t in ("a", "b")]
+    assert all(ceng.try_admit_batch(reqs))
+    ceng.collect(ceng.dispatch_round())
+    ticket = ceng.preempt(0)
+    assert ceng.try_restore(ticket)
+    assert len(_drain_lockstep(ceng, [])) == 2
+    return {k: float(v) for k, v in sorted(tel.counter_snapshot().items())
+            if k.startswith(("kv.cross.", "kv.ssm."))}
+
+
 def test_golden_counters_and_span_names(engine, rng):
     """Lockstep 2-tenant engine-level run (no ready()-timing races):
     the counter table and the span-name multiset are pinned by a golden
-    file, so a renamed or silently-dropped metric fails loudly.
+    file, so a renamed or silently-dropped metric fails loudly.  The
+    ``state_kind_counters`` section pins the PR-9 per-kind schema — an
+    enc-dec and a pure-SSM arch each through a full admit/preempt/restore
+    cycle, keeping only their ``kv.cross.*`` / ``kv.ssm.*`` rows.
     Regenerate with REPRO_REGEN_GOLDEN=1 after an intentional change."""
     tel = Telemetry(enabled=True)
     ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
@@ -401,7 +427,10 @@ def test_golden_counters_and_span_names(engine, rng):
         names[s.name] = names.get(s.name, 0) + 1
     got = {"counters": {k: float(v)
                         for k, v in sorted(tel.counter_snapshot().items())},
-           "span_names": dict(sorted(names.items()))}
+           "span_names": dict(sorted(names.items())),
+           "state_kind_counters": {
+               "whisper-base": _state_kind_counters("whisper-base"),
+               "mamba2-2.7b": _state_kind_counters("mamba2-2.7b")}}
     if os.environ.get("REPRO_REGEN_GOLDEN"):
         os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
         with open(GOLDEN, "w") as f:

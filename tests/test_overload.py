@@ -6,9 +6,11 @@ The PR-6 robustness contracts on top of the continuous-batching stack:
   restored later decodes bitwise identically to an uninterrupted run:
   greedy and seeded sampling, pure attention and sliding-window attention,
   including a victim holding trie-shared (CoW) prefix pages;
-* **SSM rows are never victims** — slot-table SSM state has no paged
-  representation to swap, so ``can_preempt`` is off for those families and
-  priority traffic still completes without preemption;
+* **every state kind swaps (PR 9)** — SSM/hybrid and encoder-decoder rows
+  are ordinary preemption victims: slot-table SSM state checkpoints as
+  fixed-width host records and cross-attention pages snapshot like
+  attention blocks, so an SSM victim's restored decode is token-exact too
+  (the per-kind two-tier ledger audits all of it);
 * **every request terminates** — a 2x-oversubscribed burst, load shedding
   past ``max_backlog``, and injected faults (dropped rounds, stalled
   admissions, poisoned swap reads) all end in exactly one explicit
@@ -187,35 +189,30 @@ def test_sliding_window_preempt_restore_token_exact(rng):
                                       resp.tokens)
 
 
-def test_ssm_rows_never_victims(rng):
-    """Pure-SSM family: slot-table SSM state has no paged representation,
-    so preemption is structurally off — a priority arrival waits for a slot
-    instead of evicting one, and everything still completes exactly."""
+def test_ssm_preempt_restore_token_exact(rng):
+    """Pure-SSM family (PR 9): slot-table SSM state checkpoints as fixed-
+    width host records on swap-out and scatters back bitwise on restore, so
+    an SSM victim's resumed decode is token-exact — a priority arrival
+    evicts a row instead of waiting, exactly like the attention families."""
     engine = _make_engine("mamba2-2.7b")
     ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
                                     inner_steps=3, max_prompt_len=16)
-    assert not ceng.can_preempt
+    assert ceng.can_preempt
+    assert [k.name for k in ceng.state_kinds] == ["ssm"]
     cfg = engine.cfg
-    sched = _sched(engine, ceng)
     los = [Request(f"mlo{i}", rng.integers(1, cfg.vocab_size,
                                            9).astype(np.int32),
                    max_new_tokens=12, priority=1) for i in range(2)]
     hi = Request("mhi", rng.integers(1, cfg.vocab_size, 6).astype(np.int32),
                  max_new_tokens=3, priority=0)
-    for r in los:
-        sched.submit(r)
-    sched.step()
-    sched.submit(hi)
-    out = sched.drain()
-    assert ceng.preemptions == 0
-    assert sum(s["preempted"] for s in sched.stats.values()) == 0
-    assert len(out) == 3
-    for resp in out:
-        assert resp.outcome == "completed"
-    by_tenant = {r.tenant: r for r in out}
+    sched, by_tenant = _preempt_mix(engine, ceng, los, hi)
+    assert sum(s["preempted"] for s in sched.stats.values()) >= 1
     for req in [*los, hi]:
+        resp = by_tenant[req.tenant]
+        assert resp.outcome == "completed"
         np.testing.assert_array_equal(_oracle(engine, ceng, req),
-                                      by_tenant[req.tenant].tokens)
+                                      resp.tokens)
+    ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages_by_kind())
 
 
 def test_burst_2x_oversubscribed_terminates(engine, pceng, rng):

@@ -312,7 +312,9 @@ def test_pallas_backend_sliding_window_arch():
         ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=4,
                                         inner_steps=3, max_prompt_len=16,
                                         backend=backend)
-        assert not ceng.prefix_sharing        # SWA disables sharing
+        # PR 9: SWA no longer disables sharing — chain keys carry the
+        # window phase, so these distinct prompts simply never match
+        assert ceng.prefix_sharing
         out[backend] = {id(r): t for r, t in ceng.run_all(reqs)}
     for r in reqs:
         np.testing.assert_array_equal(out["jnp"][id(r)],
