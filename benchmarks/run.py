@@ -11,7 +11,11 @@
 trajectory — e.g. blocking vs overlapped wall time for both the risk
 pipeline (``pipeline/*``) and the multi-tenant serving scheduler
 (``serving/*``), with per-tenant transfer/compute windows and realised
-overlap-pair counts — can be tracked across PRs.  With ``--json`` the
+overlap-pair counts — can be tracked across PRs.  ``--only recovery``
+selects the crash-recovery row (``overload.bench_serving_recovery``): a
+journalled child is SIGKILLed mid-round and a fresh process recovers,
+reporting recovery wall time, rounds replayed and the preserved-vs-
+replayed token split.  With ``--json`` the
 global telemetry plane is enabled for the run and each row carries the
 counter *delta* its bench produced (``telemetry``: pages allocated/shared,
 bytes moved through staging lanes, preemptions/restores, fault

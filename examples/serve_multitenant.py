@@ -119,6 +119,52 @@ the lowest-priority queued work with an explicit REJECTED outcome instead
 of letting the queue grow past the SLO; every submitted request always
 reaches exactly one terminal outcome (completed / rejected / failed).
 
+Crash safety: journal, checkpoint, recover
+------------------------------------------
+The same swap machinery doubles as the crash-recovery data plane.  Arm it
+by giving the scheduler a durable write-ahead journal and a checkpoint
+cadence::
+
+    sched = MultiTenantScheduler(engine, mode="continuous", ...,
+                                 journal="state/journal.jsonl",
+                                 checkpoint_dir="state/checkpoints",
+                                 checkpoint_every=8)
+
+Every ``submit`` is fsync'd to the journal *before* the request is queued
+(so a crash between the two re-queues it on recovery — never a lost
+request), every collected micro-round appends a ROUND_COMMIT with
+cumulative per-request token counts, and every terminal outcome is
+journalled with its tokens.  Every ``checkpoint_every`` committed rounds
+the scheduler quiesces the engine (one pipeline bubble) and snapshots the
+*whole* serving state to disk: each live slot as the same per-kind
+``SwapRecord`` preemption takes (attention pages, cross-attention pages,
+SSM slot state — whatever the arch registers), the host swap tier under
+its original tickets, the queued requests, the restore queue, and the
+prefix-trie chain keys.  After a crash — SIGKILL included, mid-round or
+mid-preemption — a *fresh* scheduler over the same journal rebuilds
+everything::
+
+    sched = MultiTenantScheduler(engine2, mode="continuous", ...,
+                                 journal="state/journal.jsonl",
+                                 checkpoint_dir="state/checkpoints")
+    summary = sched.recover()      # then sched.drain() as usual
+
+Checkpointed live slots re-enter the pool through the ordinary restore
+jit (same staging lanes — a checkpoint taken on a 1x8 mesh restores on
+any mesh), requests submitted after the checkpoint re-queue from the
+journal, and the rounds committed after the checkpoint are *replayed*.
+
+The exactness contract: decode is deterministic under seeded sampling
+(the per-slot PRNG key folds in the emitted-token index, independent of
+round composition), so for every non-MoE arch the replayed rounds
+regenerate **bitwise-identical tokens** — a recovered request finishes
+with exactly the tokens an uninterrupted run produces, and post-
+checkpoint RETIRE records in the journal double as a cross-check oracle
+(``summary.replay_check``).  MoE archs recover completion-level exact,
+matching their ``supported_modes()`` exactness class.  On the launch
+driver the equivalent knobs are ``--journal-dir`` /
+``--checkpoint-every`` / ``--recover``.
+
 Observability
 -------------
 Every layer this example exercises is instrumented against the telemetry

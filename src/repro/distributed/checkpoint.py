@@ -1,4 +1,8 @@
-"""Sharded checkpointing with elastic restore (no orbax offline).
+"""Checkpointing: sharded training trees + serving engine snapshots.
+
+This module owns every on-disk checkpoint format in the repo.
+
+**Training trees** (the original format):
 
 Layout:  <dir>/step_<N>/
              manifest.json        — tree structure, shapes, dtypes
@@ -10,6 +14,27 @@ whatever shardings the (possibly different) target mesh dictates — save on
 512 chips, restore on 256 (pod loss) or on 1 CPU device (tests).  Writes are
 atomic (marker written last), partial checkpoints are ignored, and
 ``keep_last`` garbage-collects old steps.
+
+**Engine checkpoints** (crash-safe serving — the data plane to
+``serving/journal.py``'s write-ahead control plane):
+
+Layout:  <dir>/engine_<N>/
+             engine.json          — json meta (slot records' scalars,
+                                    chain keys, serialized scheduler
+                                    queue state, array name index)
+             arr_<i>.npy          — one file per named numpy array
+                                    (SwapRecord page blocks / position
+                                    rows / PRNG keys / SSM records)
+         <dir>/engine_<N>.done    — atomic commit marker
+
+The same atomicity discipline applies: the ``.done`` marker is written
+last, so a SIGKILL mid-save leaves either the previous checkpoint intact
+or both — never a half-written latest.  ``load_engine_checkpoint`` only
+ever reads committed steps; recovery therefore always has a consistent
+(journal, checkpoint) pair to rebuild from.  Arrays are stored unsharded
+(host-gathered); the restore path re-commits them to whatever mesh the
+recovering engine runs, through the ordinary swap-in staging lanes — a
+1x8 crash can recover on 1x1 and vice versa.
 """
 from __future__ import annotations
 
@@ -121,3 +146,87 @@ def gc_old(directory, keep_last: int) -> None:
     for s in steps[:-keep_last]:
         shutil.rmtree(directory / f"step_{s}", ignore_errors=True)
         (directory / f"step_{s}.done").unlink(missing_ok=True)
+
+
+# ----------------------------------------------------------------------
+# Engine checkpoints (crash-safe serving)
+# ----------------------------------------------------------------------
+def save_engine_checkpoint(directory, step: int, meta: Dict[str, Any],
+                           arrays: Dict[str, np.ndarray],
+                           keep_last: Optional[int] = 3) -> pathlib.Path:
+    """Atomically write one serving-engine checkpoint: json-able ``meta``
+    plus a flat dict of named numpy ``arrays`` (names are free-form, e.g.
+    ``live/0/kv/layers.0.attn/k``); the name->file index rides the meta."""
+    directory = pathlib.Path(directory)
+    tmp = directory / f"engine_{step}.tmp"
+    final = directory / f"engine_{step}"
+    marker = directory / f"engine_{step}.done"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+    names = sorted(arrays)
+    dtypes = {}
+    for i, name in enumerate(names):
+        arr = np.ascontiguousarray(arrays[name])
+        dtypes[name] = str(arr.dtype)
+        if arr.dtype.kind not in "biufc":
+            # extension dtypes (bfloat16 via ml_dtypes) round-trip through
+            # np.save as raw void bytes — store the uint8 view and re-view
+            # on load from the recorded dtype string
+            arr = arr.view(np.uint8)
+        np.save(tmp / f"arr_{i}.npy", arr)
+    doc = {"step": step, "version": 1, "array_names": names,
+           "array_dtypes": dtypes, "meta": meta}
+    (tmp / "engine.json").write_text(json.dumps(doc))
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)
+    marker.write_text(str(step))          # commit marker last => atomic
+    if keep_last:
+        for s in engine_checkpoint_steps(directory)[:-keep_last]:
+            shutil.rmtree(directory / f"engine_{s}", ignore_errors=True)
+            (directory / f"engine_{s}.done").unlink(missing_ok=True)
+    return final
+
+
+def engine_checkpoint_steps(directory) -> List[int]:
+    """Committed (``.done``-marked, manifest present) engine steps."""
+    directory = pathlib.Path(directory)
+    if not directory.exists():
+        return []
+    steps = []
+    for m in directory.glob("engine_*.done"):
+        try:
+            s = int(m.stem.split("_")[1])
+        except (IndexError, ValueError):
+            continue
+        if (directory / f"engine_{s}" / "engine.json").exists():
+            steps.append(s)
+    return sorted(steps)
+
+
+def latest_engine_step(directory) -> Optional[int]:
+    steps = engine_checkpoint_steps(directory)
+    return steps[-1] if steps else None
+
+
+def load_engine_checkpoint(directory, step: Optional[int] = None):
+    """Load a committed engine checkpoint; ``step=None`` means latest.
+    Returns ``(meta, arrays)`` — the inverse of
+    :func:`save_engine_checkpoint` — or ``(None, None)`` when the
+    directory holds no committed step."""
+    if step is None:
+        step = latest_engine_step(directory)
+        if step is None:
+            return None, None
+    directory = pathlib.Path(directory) / f"engine_{step}"
+    doc = json.loads((directory / "engine.json").read_text())
+    dtypes = doc.get("array_dtypes", {})
+    arrays = {}
+    for i, name in enumerate(doc["array_names"]):
+        arr = np.load(directory / f"arr_{i}.npy")
+        want = dtypes.get(name, str(arr.dtype))
+        if str(arr.dtype) != want:       # stored as a raw uint8 view
+            arr = arr.view(np.dtype(want))
+        arrays[name] = arr
+    return doc["meta"], arrays

@@ -87,13 +87,27 @@ class FaultPlane:
       swap store's read path, before the staged copy is handed to the
       restore jit; the host-side record is untouched, so a retry re-reads
       the intact copy.
+
+    **Crash injection** (exact-once, not every-k): ``crash_at_round=k``
+    SIGKILLs the process at the k-th dispatched round, ``crash_at_swap=k``
+    at the k-th swap-store put (mid-preemption).  Unlike the transient
+    faults above these never raise — ``os.kill(pid, SIGKILL)`` gives the
+    process no chance to flush, unwind or atexit, which is exactly the
+    failure the crash-recovery subsystem (``serving/journal.py`` +
+    engine checkpoints) must survive: the subprocess kill-and-restart
+    harness drives them at deterministic points and asserts token-exact
+    recovery.  Counters are process-local, so the restarted process
+    starts at zero and does not re-crash.
     """
     drop_round_every: int = 0
     stall_admission_every: int = 0
     poison_swap_every: int = 0
+    crash_at_round: int = 0
+    crash_at_swap: int = 0
     rounds: int = 0
     admissions: int = 0
     swap_reads: int = 0
+    swap_puts: int = 0
     injected: Dict[str, int] = dataclasses.field(
         default_factory=lambda: {"round": 0, "admission": 0, "swap": 0})
 
@@ -107,8 +121,15 @@ class FaultPlane:
             tel.event("fault.injected", kind=kind,
                       n=self.injected[kind])
 
+    def _maybe_crash(self, at: int, count: int) -> None:
+        if at > 0 and count == at:
+            import os
+            import signal
+            os.kill(os.getpid(), signal.SIGKILL)   # no unwind, no flush
+
     def round_fault(self) -> None:
         self.rounds += 1
+        self._maybe_crash(self.crash_at_round, self.rounds)
         if self._fire(self.drop_round_every, self.rounds):
             self.injected["round"] += 1
             self._record("round")
@@ -127,6 +148,13 @@ class FaultPlane:
             self.injected["swap"] += 1
             self._record("swap")
             raise InjectedFault("injected fault: swap read poisoned")
+
+    def swap_put_crash(self) -> None:
+        """Mid-preemption crash point (called from the swap store's put):
+        SIGKILL between the victim's host gather and its journal/ledger
+        bookkeeping — never raises, never returns when it fires."""
+        self.swap_puts += 1
+        self._maybe_crash(self.crash_at_swap, self.swap_puts)
 
     def total_injected(self) -> int:
         return sum(self.injected.values())

@@ -41,6 +41,22 @@ block identity, and a block is shareable only when the *whole* prompt
 content feeding its window is identical.
 
 
+Crash safety: ``--journal-dir DIR`` arms the durable write-ahead request
+journal (``DIR/journal.jsonl``, fsync'd per record — every submission is
+on disk *before* it is queued) and engine checkpoints
+(``DIR/checkpoints/engine_<N>/``); ``--checkpoint-every K`` snapshots the
+whole serving state — every live slot's per-kind host record, the host
+swap tier, queue/priority state and the prefix-trie keys — every K
+committed decode rounds (engine quiesced; one pipeline bubble per
+checkpoint).  After a crash (SIGKILL included), re-running with the same
+``--journal-dir`` plus ``--recover`` rebuilds a fresh engine from the
+latest checkpoint, re-queues journalled-but-never-checkpointed requests,
+and *replays* the rounds committed after the checkpoint.  The exactness
+contract matches ``--list-archs``: non-MoE archs recover bitwise
+token-exact (seeded sampling folds the per-slot key by emitted-token
+index, so replayed rounds regenerate identical tokens); MoE archs recover
+completion-exact per their ``supported_modes`` exactness class.
+
 Observability: ``--trace-out trace.json`` enables the telemetry plane and
 writes a Chrome-trace/Perfetto JSON of every span the run recorded
 (scheduler steps > round dispatch > kernel windows, KV pool activity, swap
@@ -191,6 +207,30 @@ def main(argv=None) -> int:
                          "A*B visible devices (e.g. XLA_FLAGS="
                          "--xla_force_host_platform_device_count=8).  "
                          "Default: no mesh (single device)")
+    ap.add_argument("--journal-dir", default=None, metavar="DIR",
+                    help="continuous mode: arm crash safety — write the "
+                         "durable request journal to DIR/journal.jsonl "
+                         "(fsync'd write-ahead of every queue mutation) "
+                         "and engine checkpoints to DIR/checkpoints/ "
+                         "(default: no journal)")
+    ap.add_argument("--checkpoint-every", type=int, default=0, metavar="K",
+                    help="continuous mode: checkpoint the full serving "
+                         "state every K committed decode rounds (needs "
+                         "--journal-dir; 0 = journal only, no checkpoints)")
+    ap.add_argument("--crash-at-round", type=int, default=0, metavar="N",
+                    help="continuous mode: SIGKILL this process at the "
+                         "N-th dispatched decode round (FaultPlane crash "
+                         "injection — no unwind, no flush; exit code 137)."
+                         "  Pair with --journal-dir, then re-run with "
+                         "--recover to demonstrate kill-and-restart "
+                         "(default: 0 = never)")
+    ap.add_argument("--recover", action="store_true",
+                    help="recover from --journal-dir instead of submitting "
+                         "synthetic requests: rebuild the engine from the "
+                         "latest checkpoint, re-queue journalled-but-"
+                         "unfinished work and replay rounds past the "
+                         "checkpoint (token-exact for non-MoE archs), "
+                         "then drain to completion")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome-trace/Perfetto JSON of the run's "
                          "telemetry spans to PATH (enables the telemetry "
@@ -224,6 +264,19 @@ def main(argv=None) -> int:
                            kernel_backend=args.kernel_backend)
     preserve = {"never": False, "reuse": True,
                 "always": "always"}[args.preserve_pristine]
+    crash_kw = {}
+    if args.journal_dir:
+        import os
+        crash_kw = dict(
+            journal=os.path.join(args.journal_dir, "journal.jsonl"),
+            checkpoint_dir=os.path.join(args.journal_dir, "checkpoints"),
+            checkpoint_every=args.checkpoint_every)
+    elif args.recover or args.checkpoint_every:
+        ap.error("--recover/--checkpoint-every need --journal-dir")
+    if args.crash_at_round:
+        from repro.distributed.fault import FaultPlane
+        crash_kw["fault_plane"] = FaultPlane(
+            crash_at_round=args.crash_at_round)
     sched = MultiTenantScheduler(
         engine, max_batch=args.max_batch,
         tenancy=TenancyConfig(1, args.tenants), mode=mode,
@@ -235,13 +288,24 @@ def main(argv=None) -> int:
                         batch_admission=args.batch_admission,
                         preserve_pristine=preserve,
                         max_prompt_len=max(64, 2 * args.prompt_len
-                                           + args.shared_prefix_len)))
+                                           + args.shared_prefix_len)),
+        **crash_kw)
+
+    if args.recover:
+        s = sched.recover()
+        print(f"recovered from checkpoint step={s.checkpoint_step}: "
+              f"live={s.restored_live} swapped={s.restored_swapped} "
+              f"requeued={s.requeued} "
+              f"already_complete={len(s.already_complete)} "
+              f"rounds_replayed={s.rounds_replayed} "
+              f"tokens preserved={s.tokens_preserved} "
+              f"replayed={s.tokens_replayed}")
 
     rng = np.random.default_rng(0)
     shared_prefix = rng.integers(1, cfg.vocab_size,
                                  args.shared_prefix_len).astype(np.int32)
     late: list = []         # tier-0 arrivals held back to land mid-flight
-    for i in range(args.requests):
+    for i in range(0 if args.recover else args.requests):
         tenant = f"tenant-{i % args.tenants}"
         prompt = rng.integers(1, cfg.vocab_size,
                               args.prompt_len).astype(np.int32)

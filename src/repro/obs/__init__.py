@@ -33,6 +33,8 @@ prefix      layer
 ``timeline`` ``TenantTimeline`` entries re-expressed as spans
 ``replay``  `obs.fit` — replayed simulator/bench runs
 ``power``   `obs.fit` — (busy_frac, watts) samples for the energy fit
+``journal`` `serving.journal` — WAL appends/bytes (crash safety)
+``recovery`` `serving` — checkpoint saves, journal replay, pool restore
 ========== ==========================================================
 
 Kinds:

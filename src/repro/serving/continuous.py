@@ -1087,21 +1087,17 @@ class ContinuousBatchingEngine:
     # ------------------------------------------------------------------
     # preemption: swap-out / swap-in (KV tiering)
     # ------------------------------------------------------------------
-    def preempt(self, slot: int) -> int:
-        """Swap a live row out to the host tier and vacate its slot.
+    def _snapshot_slot(self, slot: int, preempting: bool = False
+                       ) -> SwapRecord:
+        """Host-gather one live slot as a :class:`SwapRecord` — a pure
+        read (sharers, allocator and device state untouched), shared by
+        :meth:`preempt` (which then vacates the slot) and
+        :meth:`snapshot_live` (engine checkpoints, which don't).
 
-        Snapshots *every* page block of the victim (K/V per attention
-        sublayer + position rows — a pure read, so sharers are untouched)
-        plus the complete per-slot decode state, parks it in the swap
-        store, then drops the page references through the ordinary
-        allocator accounting: shared prefix pages keep serving their other
-        readers, registered pristine pages linger as cache, and only the
-        victim's private suffix is uniquely host-held (the ledger count).
-
-        Caller contract: no decode round may be in flight (the scheduler
-        force-collects first), so the slot's collected tokens are caught up
-        with its dispatched steps.  Returns the swap-store ticket.
-        """
+        Caller contract: no decode round may be in flight, so the slot's
+        collected tokens are caught up with its dispatched steps.
+        ``preempting`` bumps the record's preemption count — a checkpoint
+        snapshot is not a preemption."""
         s = self._slots[slot]
         if s is None:
             raise ValueError(f"slot {slot} is empty")
@@ -1111,7 +1107,7 @@ class ContinuousBatchingEngine:
                 "registered an unswappable state kind")
         if self.prefix_sharing:
             assert s.planned == len(s.tokens), \
-                "preempt with a decode round in flight"
+                "slot snapshot with a decode round in flight"
         kv, st = self.kv, self.state
         pages = np.asarray(kv.owned_pages(slot), np.int32)
         # snapshots are padded to the page-table width so the restore jit
@@ -1154,7 +1150,7 @@ class ContinuousBatchingEngine:
         written = {((s.bucket + t) % s.ring) // self.page_size
                    for t in range(min(len(s.tokens), s.ring))}
         private = kv.private_blocks(slot)
-        rec = SwapRecord(
+        return SwapRecord(
             req=s.req, priority=s.priority, target=s.target, temp=s.temp,
             top_k=s.top_k, bucket=s.bucket, ring=s.ring,
             tokens=list(s.tokens), chain_keys=list(s.chain_keys),
@@ -1163,20 +1159,83 @@ class ContinuousBatchingEngine:
             lstep=int(st["lstep"][slot]), key=np.asarray(st["keys"][slot]),
             logits=np.asarray(st["logits"][slot]), host_kv=host_kv,
             host_pos=host_pos, n_private=len(private),
-            preemptions=s.preemptions + 1, t_first=s.t_first,
-            host_cross=host_cross, n_cross=n_cross,
+            preemptions=s.preemptions + (1 if preempting else 0),
+            t_first=s.t_first, host_cross=host_cross, n_cross=n_cross,
             host_state=host_state, n_state=n_state)
+
+    def preempt(self, slot: int) -> int:
+        """Swap a live row out to the host tier and vacate its slot.
+
+        Snapshots *every* page block of the victim (K/V per attention
+        sublayer + position rows — a pure read, so sharers are untouched)
+        plus the complete per-slot decode state, parks it in the swap
+        store, then drops the page references through the ordinary
+        allocator accounting: shared prefix pages keep serving their other
+        readers, registered pristine pages linger as cache, and only the
+        victim's private suffix is uniquely host-held (the ledger count).
+
+        Caller contract: no decode round may be in flight (the scheduler
+        force-collects first), so the slot's collected tokens are caught up
+        with its dispatched steps.  Returns the swap-store ticket.
+        """
+        rec = self._snapshot_slot(slot, preempting=True)
+        nb = len(self.kv.owned_pages(slot))
         with self.tel.span("swap.out", slot=slot, pages=nb,
-                           private=len(private), pdev=self.pdev):
+                           private=rec.n_private, pdev=self.pdev):
             ticket = self.swap_store.put(rec)
-            kv.swap_out(slot, len(private), cross_blocks=n_cross,
-                        state_records=n_state)
+            self.kv.swap_out(slot, rec.n_private, cross_blocks=rec.n_cross,
+                             state_records=rec.n_state)
             self.state = self._evict_jit(self.state, np.int32(slot))
         self._slots[slot] = None
         self._free_slots.append(slot)
         self.preemptions += 1
         self.tel.count("swap.preemptions")
         return ticket
+
+    def snapshot_live(self) -> List[Tuple[int, SwapRecord]]:
+        """Engine-checkpoint gather: every live slot as a
+        :class:`SwapRecord`, in slot order, without vacating anything —
+        the same per-kind host snapshot preemption takes, reused as the
+        checkpoint format.  Caller contract: no round in flight."""
+        return [(c, self._snapshot_slot(c))
+                for c, s in enumerate(self._slots) if s is not None]
+
+    def restore_from(self, live: List[SwapRecord],
+                     swapped: Dict[int, SwapRecord]) -> int:
+        """Rebuild a *fresh* engine from a checkpoint: re-park the host
+        tier's ``swapped`` records under their original tickets (seeding
+        the two-tier ledger of the empty pool), then re-admit every
+        checkpointed-``live`` record through the ordinary restore jit —
+        pages re-allocate, prefix chains re-register and re-share, and
+        each slot resumes with bitwise the scalars/pages it was
+        checkpointed with.  Returns the number of live slots rebuilt."""
+        if not live and not swapped:
+            return 0
+        assert self.swap_store is not None, "restore_from needs a swap store"
+        assert self.active_count() == 0, "restore_from on a non-empty engine"
+        with self.tel.span("recovery.restore", live=len(live),
+                           swapped=len(swapped), pdev=self.pdev):
+            self.swap_store.restore_records(swapped)
+            for rec in swapped.values():
+                self.kv.adopt_swapped(rec.n_private,
+                                      cross_blocks=rec.n_cross,
+                                      state_records=rec.n_state)
+            for rec in live:
+                # the fresh pool's two-tier ledger must cover this record
+                # before try_restore's swap_in debits it (a checkpointed
+                # live slot was never swap_out'd, so nothing credited it)
+                self.kv.adopt_swapped(rec.n_private,
+                                      cross_blocks=rec.n_cross,
+                                      state_records=rec.n_state)
+                ticket = self.swap_store.put(rec)
+                if not self.try_restore(ticket):
+                    # the checkpointed working set fit the pool when it was
+                    # taken; a fresh pool of the same geometry must re-fit
+                    raise RuntimeError(
+                        "recovery: pool/slot pressure rebuilding a "
+                        "checkpointed live slot")
+        self.tel.count("recovery.slots_restored", len(live))
+        return len(live)
 
     def try_restore(self, ticket: int) -> bool:
         """Swap a preempted request back into a free slot, token-exactly.

@@ -550,6 +550,14 @@ class PagedKVCache:
         return [b for b, p in enumerate(self._owned.get(slot, ()))
                 if self._ref.get(p, 0) == 1 and p not in self._page_key]
 
+    def trie_keys(self) -> List[bytes]:
+        """Every chain key currently registered in the prefix trie, sorted
+        — recorded in engine checkpoints so recovery can audit that the
+        rebuilt pool re-registered each restored slot's live chains (the
+        refcount-0 cached tail is a cache and is deliberately *not* part
+        of the recovery contract)."""
+        return sorted(self._prefix)
+
     def swapped_by_kind(self) -> Dict[str, int]:
         """Host-tier ledger per state kind: attention page blocks, cross
         page blocks, SSM state records (one per SSM sublayer per victim)."""
@@ -579,6 +587,19 @@ class PagedKVCache:
             self.tel.count("kv.ssm.swap_out_records", state_records)
         self.tel.gauge("kv.swapped_pages", self.swapped_pages)
         return released
+
+    def adopt_swapped(self, host_blocks: int, cross_blocks: int = 0,
+                      state_records: int = 0) -> None:
+        """Crash recovery: seed the host-tier ledger of a *fresh* pool for
+        a checkpointed swap record re-parked in the store without ever
+        having been swapped out of this pool instance.  The two-tier
+        conservation audit (:meth:`assert_conserved` with ``host_pages``)
+        holds from the first post-recovery drain, not only after the
+        record's eventual restore."""
+        self.swapped_pages += host_blocks
+        self.swapped_cross += cross_blocks
+        self.swapped_state += state_records
+        self.tel.gauge("kv.swapped_pages", self.swapped_pages)
 
     def swap_in(self, host_blocks: int, restored: bool = True,
                 cross_blocks: int = 0, state_records: int = 0) -> None:

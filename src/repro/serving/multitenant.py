@@ -116,11 +116,16 @@ import numpy as np
 
 from repro.core.pipeline import CompletionWaiter, TenantTimeline
 from repro.core.tenancy import TenancyConfig
+from repro.distributed import checkpoint as ckpt_mod
 from repro.distributed.fault import (HeartbeatMonitor, InjectedFault,
                                      StragglerDetector)
 from repro.obs.telemetry import Telemetry, get_telemetry, record_timeline
+from repro.serving import journal as journal_mod
 from repro.serving.engine import (GenerationResult, PendingGeneration,
                                   ServingEngine, resolve_extra_inputs)
+from repro.serving.journal import JournalWriter, RecoverySummary
+from repro.serving.swap import (swap_record_from_payload,
+                                swap_record_to_payload)
 
 MODES = ("continuous", "overlapped", "blocking")
 OUTCOMES = ("completed", "rejected", "failed")
@@ -209,7 +214,11 @@ class MultiTenantScheduler:
                  fault_plane: Optional[Any] = None,
                  heartbeat_timeout_s: float = 300.0,
                  restore_prefetch: int = 4,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 journal: Optional[Any] = None,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 checkpoint_keep: int = 3):
         self.engine = engine
         self.tel = get_telemetry(telemetry)
         self.max_batch = max_batch
@@ -290,13 +299,276 @@ class MultiTenantScheduler:
         # separate from `timeline` so the round-level overlap predicate
         # isn't polluted by degenerate compute windows.
         self.admission_timeline: List[TenantTimeline] = []
+        # ---- crash-safety layer (continuous mode) ----
+        # write-ahead journal (path or JournalWriter) + periodic engine
+        # checkpoints every `checkpoint_every` committed rounds; recover()
+        # rebuilds a fresh scheduler/engine pair from the (journal,
+        # latest-checkpoint) pair after a crash
+        self.journal: Optional[JournalWriter] = None
+        if journal is not None:
+            self.journal = (journal if isinstance(journal, JournalWriter)
+                            else JournalWriter(str(journal),
+                                               telemetry=telemetry))
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        self.checkpoint_keep = int(checkpoint_keep)
+        self.checkpoints_taken = 0
+        self._rids: Dict[int, int] = {}       # id(req) -> stable journal rid
+        self._next_rid = 0
+        self._committed_rounds = 0            # collected decode rounds
+        self._last_ckpt_round = 0
+        self._ckpt_step = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
-        if req.tenant not in self._order:
-            self._slot_of[req.tenant] = len(self._order)
-            self._order.append(req.tenant)
+        # WAL discipline: the SUBMIT record is durably on disk *before* the
+        # queue mutation, so a crash between the two re-queues the request
+        # on recovery instead of losing it
+        if self.journal is not None:
+            rid = self._next_rid
+            self._next_rid += 1
+            self._rids[id(req)] = rid
+            self.journal.append(
+                "SUBMIT", **journal_mod.request_to_record(rid, req))
+        self._enqueue(req)
+
+    def _register_tenant(self, tenant: str) -> None:
+        if tenant not in self._order:
+            self._slot_of[tenant] = len(self._order)
+            self._order.append(tenant)
+
+    def _enqueue(self, req: Request) -> None:
+        self._register_tenant(req.tenant)
         self.queues[req.tenant].append(req)
+
+    # ------------------------------------------------------------------
+    # crash-safety: journal hooks (no-ops without a journal)
+    # ------------------------------------------------------------------
+    def _rid(self, req: Any) -> int:
+        return self._rids.get(id(req), -1)
+
+    def _journal(self, kind: str, **fields: Any) -> None:
+        if self.journal is not None:
+            self.journal.append(kind, **fields)
+
+    def _journal_admits(self, reqs: List[Request]) -> None:
+        """ADMIT records for freshly admitted picks: scan the slot table
+        for the rows these request objects landed in."""
+        if self.journal is None or not reqs:
+            return
+        want = {id(r) for r in reqs}
+        for c, s in enumerate(self._ceng._slots):
+            if s is not None and id(s.req) in want:
+                self.journal.append(
+                    "ADMIT", rid=self._rid(s.req), slot=int(c),
+                    bucket=int(s.bucket), ring=int(s.ring))
+
+    def _journal_round(self, res: Any) -> None:
+        """One collected micro-round: cumulative emitted token counts for
+        every row that was live in it (retired rows report their final
+        count; JSON object keys must be strings, replay int()s them)."""
+        self._committed_rounds += 1
+        if self.journal is None:
+            return
+        emitted: Dict[str, int] = {}
+        for (req, tokens, _c), _srec in zip(res.finished, res.retired):
+            emitted[str(self._rid(req))] = int(tokens.size)
+        for s in self._ceng._slots:
+            if s is not None:
+                emitted[str(self._rid(s.req))] = len(s.tokens)
+        self.journal.append("ROUND_COMMIT", rnd=self._committed_rounds,
+                            emitted=emitted)
+
+    # ------------------------------------------------------------------
+    # crash-safety: engine checkpoint + recovery (continuous mode)
+    # ------------------------------------------------------------------
+    def _checkpoint_due(self) -> bool:
+        return (self.checkpoint_dir is not None
+                and self.checkpoint_every > 0
+                and self._committed_rounds - self._last_ckpt_round
+                >= self.checkpoint_every)
+
+    def save_checkpoint(self) -> int:
+        """Snapshot the whole serving state to disk (engine quiesced: no
+        round in flight).  Data plane: one :class:`~repro.serving.swap.
+        SwapRecord` payload per live slot (the preemption host-gather,
+        without vacating the slot) plus the host swap tier's records under
+        their original tickets.  Control plane: the queued requests in
+        admission order, the restore queue, ticket retry budgets, and the
+        prefix-trie chain keys (audit).  Written via
+        :func:`repro.distributed.checkpoint.save_engine_checkpoint`
+        (marker-file atomicity), then journalled as a CHECKPOINT record —
+        the recovery baseline."""
+        eng = self._ceng
+        assert eng is not None and self._cont_inflight is None, \
+            "engine checkpoint requires a quiesced continuous engine"
+        step = self._ckpt_step
+        self._ckpt_step += 1
+        arrays: Dict[str, np.ndarray] = {}
+        live_meta: List[Dict[str, Any]] = []
+        for c, rec in eng.snapshot_live():
+            m, arrs = swap_record_to_payload(
+                rec, journal_mod.request_to_record(self._rid(rec.req),
+                                                   rec.req))
+            live_meta.append({"slot": int(c), "rid": self._rid(rec.req),
+                              "rec": m})
+            for k, v in arrs.items():
+                arrays[f"live/{c}/{k}"] = v
+        swapped_meta: List[Dict[str, Any]] = []
+        if eng.swap_store is not None:
+            for ticket in eng.swap_store.tickets():
+                rec = eng.swap_store.record(ticket)
+                m, arrs = swap_record_to_payload(
+                    rec, journal_mod.request_to_record(
+                        self._rid(rec.req), rec.req))
+                swapped_meta.append({"ticket": int(ticket),
+                                     "rid": self._rid(rec.req), "rec": m})
+                for k, v in arrs.items():
+                    arrays[f"swapped/{ticket}/{k}"] = v
+        queued = [journal_mod.request_to_record(self._rid(r), r)
+                  for t in self._order for r in self.queues[t]]
+        meta = {
+            "step": int(step),
+            "rounds": int(self._committed_rounds),
+            "next_rid": int(self._next_rid),
+            "live": live_meta,
+            "swapped": swapped_meta,
+            "queued": queued,
+            "restore_q": [int(t) for t in self._restore_q],
+            "ticket_attempts": {str(k): int(v) for k, v in
+                                self._ticket_attempts.items()},
+            "trie": [k.hex() for k in eng.kv.trie_keys()],
+        }
+        ckpt_mod.save_engine_checkpoint(self.checkpoint_dir, step, meta,
+                                        arrays,
+                                        keep_last=self.checkpoint_keep)
+        self._last_ckpt_round = self._committed_rounds
+        self.checkpoints_taken += 1
+        self._journal("CHECKPOINT", step=int(step),
+                      rnd=int(self._committed_rounds))
+        if self.tel.enabled:
+            self.tel.count("recovery.checkpoints")
+        return step
+
+    def recover(self) -> RecoverySummary:
+        """Rebuild serving state on a *fresh* scheduler/engine pair from
+        the (journal, latest checkpoint) pair after a crash.
+
+        * checkpointed live slots re-enter the pool through the ordinary
+          swap-restore path (same jits, same staging lanes — so a 1x8 mesh
+          checkpoint restores onto any mesh the engine runs on);
+        * checkpointed host-tier records re-park under their original
+          tickets, with the pool's two-tier ledgers seeded to match;
+        * checkpointed queued requests re-queue in admission order;
+        * journalled-but-never-checkpointed rids (SUBMIT without terminal
+          outcome or checkpoint presence) re-queue — never lost;
+        * rounds committed after the checkpoint are *replayed*: seeded
+          sampling makes the re-decoded tokens bitwise-identical for
+          non-MoE archs, and journalled post-checkpoint RETIRE records
+          become the ``replay_check`` oracle.
+
+        Wall clocks (``arrival_s``/``t_first``) are process-relative and
+        meaningless across the crash: every rebuilt request is re-stamped
+        to recovery time."""
+        assert self.mode == "continuous", "recover() is continuous-only"
+        assert self.journal is not None, "recover() needs a journal"
+        eng = self._ceng
+        assert eng.active_count() == 0 and not any(
+            len(q) for q in self.queues.values()), \
+            "recover() must run on a fresh scheduler"
+        with self.tel.span("recovery.replay") as sp:
+            js = journal_mod.replay(journal_mod.read_journal(
+                self.journal.path))
+            step = (ckpt_mod.latest_engine_step(self.checkpoint_dir)
+                    if self.checkpoint_dir is not None else None)
+            meta, arrays = ((None, None) if step is None else
+                            ckpt_mod.load_engine_checkpoint(
+                                self.checkpoint_dir, step))
+            now = time.perf_counter()
+            accounted: set = set()
+            live_recs: List[Any] = []
+            swapped_recs: Dict[int, Any] = {}
+            tokens_preserved = 0
+
+            def _rebuild(ent: Dict[str, Any], prefix: str):
+                sub = {k[len(prefix):]: v for k, v in arrays.items()
+                       if k.startswith(prefix)}
+                req = journal_mod.request_from_record(ent["rec"]["req"])
+                req.arrival_s = now
+                self._register_tenant(req.tenant)
+                rec = swap_record_from_payload(ent["rec"], sub, req)
+                rec.t_first = None
+                self._rids[id(req)] = int(ent["rid"])
+                accounted.add(int(ent["rid"]))
+                return rec
+
+            if meta is not None:
+                for ent in meta["live"]:
+                    rec = _rebuild(ent, f"live/{ent['slot']}/")
+                    live_recs.append(rec)
+                    tokens_preserved += len(rec.tokens)
+                for ent in meta["swapped"]:
+                    rec = _rebuild(ent, f"swapped/{ent['ticket']}/")
+                    swapped_recs[int(ent["ticket"])] = rec
+                    tokens_preserved += len(rec.tokens)
+            eng.restore_from(live_recs, swapped_recs)
+            if meta is not None:
+                self._restore_q = [int(t) for t in meta["restore_q"]]
+                self._ticket_attempts = {
+                    int(k): int(v)
+                    for k, v in meta["ticket_attempts"].items()}
+                for qrec in meta["queued"]:
+                    req = journal_mod.request_from_record(qrec)
+                    req.arrival_s = now
+                    self._rids[id(req)] = int(qrec["rid"])
+                    accounted.add(int(qrec["rid"]))
+                    self._enqueue(req)
+                self._committed_rounds = max(int(meta["rounds"]),
+                                             js.last_round)
+                self._ckpt_step = int(meta["step"]) + 1
+            else:
+                self._committed_rounds = js.last_round
+            self._last_ckpt_round = self._committed_rounds
+            # journalled but neither terminal nor checkpointed: SUBMIT hit
+            # disk before the crash, so the request re-queues — the "never
+            # lost" half of the WAL contract
+            requeued = 0
+            for rid in js.pending():
+                if rid in accounted:
+                    continue
+                req = journal_mod.request_from_record(js.submitted[rid])
+                req.arrival_s = now
+                self._rids[id(req)] = rid
+                self._enqueue(req)
+                requeued += 1
+            self._next_rid = max(js.next_rid,
+                                 0 if meta is None else int(
+                                     meta["next_rid"]))
+            already, oracle = {}, {}
+            for rid, toks in js.retired_tokens.items():
+                (oracle if rid in accounted else already)[rid] = toks
+            summary = RecoverySummary(
+                checkpoint_step=step,
+                restored_live=len(live_recs),
+                restored_swapped=len(swapped_recs),
+                requeued=requeued,
+                already_complete=already,
+                replay_check=oracle,
+                rounds_replayed=js.rounds_after_checkpoint,
+                tokens_preserved=tokens_preserved,
+                tokens_replayed=js.tokens_after_checkpoint)
+            sp.note(step=-1 if step is None else int(step),
+                    restored_live=summary.restored_live,
+                    restored_swapped=summary.restored_swapped,
+                    requeued=summary.requeued,
+                    rounds_replayed=summary.rounds_replayed)
+        self._journal("RECOVER", step=-1 if step is None else int(step),
+                      restored_live=summary.restored_live,
+                      restored_swapped=summary.restored_swapped,
+                      requeued=summary.requeued,
+                      rounds_replayed=summary.rounds_replayed)
+        self.heartbeat.beat()
+        return summary
 
     def pending(self) -> int:
         n = sum(len(q) for q in self.queues.values())
@@ -550,6 +822,10 @@ class MultiTenantScheduler:
         if shed:
             st["shed"] += 1
             self.tel.count("sched.shed")
+        if self.journal is not None:
+            self.journal.append("REJECT", rid=self._rid(req),
+                                shed=bool(shed))
+        self._rids.pop(id(req), None)
         self._attempts.pop(id(req), None)
         self._backoff.pop(id(req), None)
         self._terminal.append(Response(
@@ -563,6 +839,10 @@ class MultiTenantScheduler:
         self.failed.append(req)
         self.stats[req.tenant]["failed"] += 1
         self.tel.count("sched.failed")
+        if self.journal is not None:
+            self.journal.append("FAIL", rid=self._rid(req),
+                                preemptions=int(preemptions))
+        self._rids.pop(id(req), None)
         self._attempts.pop(id(req), None)
         self._backoff.pop(id(req), None)
         self._terminal.append(Response(
@@ -675,6 +955,17 @@ class MultiTenantScheduler:
                 best = (key, c)
         return None if best is None else best[1]
 
+    def _preempt_slot(self, victim: int) -> int:
+        """Swap one victim row out to the host tier and queue its restore
+        ticket (journalled: the PREEMPT record names the ticket so the
+        checkpointed swap record can be matched back to its rid)."""
+        eng = self._ceng
+        req = eng._slots[victim].req
+        ticket = eng.preempt(victim)
+        self._journal("PREEMPT", rid=self._rid(req), ticket=int(ticket))
+        self._restore_q.append(ticket)
+        return ticket
+
     def _preempt_for(self, reqs: List[Request]
                      ) -> Tuple[int, List[Request]]:
         """Admit failed picks by swapping strictly-lower-priority victims
@@ -692,7 +983,7 @@ class MultiTenantScheduler:
                 # the victim's accumulated busy share must not leak onto
                 # whatever request next occupies this slot
                 self._row_busy.pop(victim, None)
-                self._restore_q.append(eng.preempt(victim))
+                self._preempt_slot(victim)
                 try:
                     ok = eng.try_admit_batch([req])[0]
                 except InjectedFault:
@@ -702,6 +993,7 @@ class MultiTenantScheduler:
                 admitted += 1
                 self._attempts.pop(id(req), None)
                 self._backoff.pop(id(req), None)
+                self._journal_admits([req])
             else:
                 remaining.append(req)
         return admitted, remaining
@@ -742,7 +1034,7 @@ class MultiTenantScheduler:
                         self.stats[eng._slots[victim].req.tenant][
                             "preempted"] += 1
                         self._row_busy.pop(victim, None)
-                        self._restore_q.append(eng.preempt(victim))
+                        self._preempt_slot(victim)
                         ok = eng.try_restore(ticket)
             except InjectedFault:
                 self.faults_survived += 1
@@ -762,6 +1054,8 @@ class MultiTenantScheduler:
                 done += 1
                 self._ticket_attempts.pop(ticket, None)
                 self._ticket_backoff.pop(ticket, None)
+                self._journal("RESTORE", rid=self._rid(rec.req),
+                              ticket=int(ticket))
             else:
                 if (eng.active_count() == 0
                         and self._cont_inflight is None):
@@ -770,6 +1064,11 @@ class MultiTenantScheduler:
                     self._ticket_attempts[ticket] = n
                     if n > self.admission_retry_limit:
                         rec = eng.drop_swapped(ticket)
+                        # drop BOTH ticket maps with the record: leaving
+                        # them keyed on a dead ticket leaked bookkeeping
+                        # (and pages stayed attributed at the drain audit)
+                        self._ticket_attempts.pop(ticket, None)
+                        self._ticket_backoff.pop(ticket, None)
                         self._fail(rec.req, preemptions=rec.preemptions)
                         continue
                 self._restore_q.append(ticket)
@@ -815,6 +1114,7 @@ class MultiTenantScheduler:
                 self.faults_survived += 1
                 flags = [False] * len(picked)
             t1 = time.perf_counter() - self._t0
+            self._journal_admits([r for r, ok in zip(picked, flags) if ok])
             for req, ok in zip(picked, flags):
                 if ok:
                     admitted += 1
@@ -941,6 +1241,11 @@ class MultiTenantScheduler:
                 self.tel.gauge("heartbeat.suspects",
                                self.heartbeat_suspects)
         if self._cont_inflight is None:
+            # engine quiesced (no round in flight): the only sound window
+            # for an engine checkpoint — snapshot_live() must not race a
+            # decode round's donated state
+            if self._checkpoint_due():
+                self.save_checkpoint()
             asm0 = time.perf_counter() - self._t0
             admitted = self._admit_continuous(
                 allow_preempt=self.preemption)
@@ -979,11 +1284,16 @@ class MultiTenantScheduler:
         # flight and live_after(inner_steps) is "survives round k") — else
         # the drain would end on a dispatched-but-never-collected all-masked
         # round, wasting a device round and skewing the occupancy counters
+        # a due checkpoint suppresses the pipelined dispatch: the next step
+        # then starts with a quiesced engine and snapshots before round
+        # k+1 — one pipeline bubble per checkpoint interval
         live = eng.live_after(0 if res is not None else eng.inner_steps)
         self._cont_inflight = (self._try_dispatch_round(asm0)
-                               if admitted or live else None)
+                               if (admitted or live)
+                               and not self._checkpoint_due() else None)
         if res is None:
             res = eng.collect(cur.handle)
+        self._journal_round(res)
         self.heartbeat.beat()                    # round k landed
         self.tel.count("heartbeat.beats")
         cur.stamped.wait()
@@ -1018,6 +1328,10 @@ class MultiTenantScheduler:
             self.detector.update({self._slot_of[req.tenant]: row_busy})
             ttft = (None if srec.t_first is None
                     else srec.t_first - req.arrival_s)
+            if self.journal is not None:
+                self.journal.append("RETIRE", rid=self._rid(req),
+                                    tokens=[int(t) for t in tokens])
+            self._rids.pop(id(req), None)
             responses.append(Response(
                 req.tenant, tokens, done_abs - req.arrival_s, 1,
                 ttft_s=ttft, priority=self._prio(req),
@@ -1092,6 +1406,18 @@ class MultiTenantScheduler:
             r = self.step()
             if r:
                 out.extend(r)
+        # two-tier audit: every request is terminal, so the host swap tier
+        # must be empty, its ledgers must agree with the pool's, and no
+        # ticket bookkeeping may survive its record (the REJECTED/FAILED-
+        # after-swap-out leak class)
+        if self._ceng is not None and self._ceng.swap_store is not None:
+            eng = self._ceng
+            eng.kv.assert_conserved(
+                host_pages=eng.swap_store.pages_by_kind())
+            leaked = (set(self._ticket_attempts)
+                      | set(self._ticket_backoff))
+            assert not leaked, \
+                f"drain: ticket bookkeeping leaked for {sorted(leaked)}"
         # reap the now-idle completion-waiter thread so schedulers that end
         # with drain() (the common shape) don't each park a daemon thread
         # rooting the scheduler; it is recreated lazily on the next launch

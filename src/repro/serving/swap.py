@@ -161,6 +161,14 @@ class HostSwapStore:
 
     # ------------------------------------------------------------------
     def put(self, rec: SwapRecord) -> int:
+        # crash-at-swap injection (SIGKILL, no return): exercises the
+        # mid-preemption crash window — the victim is host-gathered but no
+        # PREEMPT journal record exists yet, so recovery must fall back to
+        # the last checkpoint's view of the slot
+        if self.fault_plane is not None:
+            crash = getattr(self.fault_plane, "swap_put_crash", None)
+            if crash is not None:
+                crash()
         ticket = self._next_ticket
         self._next_ticket += 1
         self._records[ticket] = rec
@@ -241,3 +249,107 @@ class HostSwapStore:
         rec = self._records.pop(ticket)
         self.tel.gauge("swap.host_pages", self.pages())
         return rec
+
+    def restore_records(self, records: Dict[int, SwapRecord]) -> None:
+        """Re-park checkpointed records under their *original* tickets
+        (crash recovery: the scheduler's restore queue names tickets, so
+        ticket numbers must survive the process boundary).  The store must
+        be empty — recovery rebuilds from scratch, never merges."""
+        assert not self._records, "restore_records on a non-empty store"
+        self._records = dict(records)
+        self._next_ticket = max(self._records, default=-1) + 1
+        self.tel.gauge("swap.host_pages", self.pages())
+
+
+# ----------------------------------------------------------------------
+# Checkpoint serialization (crash-safe serving)
+# ----------------------------------------------------------------------
+def _flatten_state(tree: Any, prefix: str, out: Dict[str, np.ndarray]):
+    """Flatten a nested dict-of-arrays (SSM checkpoint records) into
+    '/'-joined names; inverse is :func:`_unflatten_state`."""
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten_state(tree[k], f"{prefix}/{k}", out)
+    else:
+        out[prefix] = np.asarray(tree)
+
+
+def _unflatten_state(arrays: Dict[str, np.ndarray], prefix: str) -> Any:
+    sub: Dict[str, Any] = {}
+    for name, arr in arrays.items():
+        if not name.startswith(prefix + "/"):
+            continue
+        parts = name[len(prefix) + 1:].split("/")
+        node = sub
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return sub
+
+
+def swap_record_to_payload(rec: SwapRecord, req_record: Any
+                           ) -> "tuple[Dict[str, Any], Dict[str, np.ndarray]]":
+    """Serialize a record for an engine checkpoint: a json-able meta dict
+    plus named numpy arrays (the format ``distributed/checkpoint.py``
+    persists).  ``req_record`` is the caller-serialized request (the
+    journal's SUBMIT payload — the store does not know about rids)."""
+    meta = {
+        "req": req_record,
+        "priority": int(rec.priority), "target": int(rec.target),
+        "temp": float(rec.temp), "top_k": int(rec.top_k),
+        "bucket": int(rec.bucket), "ring": int(rec.ring),
+        "tokens": [int(t) for t in rec.tokens],
+        "chain_keys": [k.hex() for k in rec.chain_keys],
+        "written": sorted(int(b) for b in rec.written),
+        "pos": int(rec.pos), "remaining": int(rec.remaining),
+        "lstep": int(rec.lstep), "n_private": int(rec.n_private),
+        "preemptions": int(rec.preemptions),
+        "t_first": None if rec.t_first is None else float(rec.t_first),
+        "n_cross": int(rec.n_cross), "n_state": int(rec.n_state),
+        "kv_subs": sorted(rec.host_kv),
+        "has_cross": rec.host_cross is not None,
+        "state_subs": (sorted(rec.host_state)
+                       if rec.host_state is not None else None),
+    }
+    arrays: Dict[str, np.ndarray] = {
+        "key": np.asarray(rec.key), "logits": np.asarray(rec.logits),
+        "host_pos": np.asarray(rec.host_pos)}
+    for sub, kv in rec.host_kv.items():
+        arrays[f"kv/{sub}/k"] = np.asarray(kv["k"])
+        arrays[f"kv/{sub}/v"] = np.asarray(kv["v"])
+    if rec.host_cross is not None:
+        arrays["cross/k"] = np.asarray(rec.host_cross["k"])
+        arrays["cross/v"] = np.asarray(rec.host_cross["v"])
+    if rec.host_state is not None:
+        for sub, state in rec.host_state.items():
+            _flatten_state(state, f"state/{sub}", arrays)
+    return meta, arrays
+
+
+def swap_record_from_payload(meta: Dict[str, Any],
+                             arrays: Dict[str, np.ndarray],
+                             req: Any) -> SwapRecord:
+    """Inverse of :func:`swap_record_to_payload`.  ``req`` is the rebuilt
+    request object (the caller owns request deserialization)."""
+    host_kv = {sub: {"k": arrays[f"kv/{sub}/k"], "v": arrays[f"kv/{sub}/v"]}
+               for sub in meta["kv_subs"]}
+    host_cross = ({"k": arrays["cross/k"], "v": arrays["cross/v"]}
+                  if meta["has_cross"] else None)
+    host_state = None
+    if meta["state_subs"] is not None:
+        host_state = {sub: _unflatten_state(arrays, f"state/{sub}")
+                      for sub in meta["state_subs"]}
+    return SwapRecord(
+        req=req, priority=meta["priority"], target=meta["target"],
+        temp=meta["temp"], top_k=meta["top_k"], bucket=meta["bucket"],
+        ring=meta["ring"], tokens=list(meta["tokens"]),
+        chain_keys=[bytes.fromhex(k) for k in meta["chain_keys"]],
+        written=set(meta["written"]), pos=meta["pos"],
+        remaining=meta["remaining"], lstep=meta["lstep"],
+        key=np.asarray(arrays["key"], np.uint32),
+        logits=np.asarray(arrays["logits"], np.float32),
+        host_kv=host_kv, host_pos=np.asarray(arrays["host_pos"], np.int32),
+        n_private=meta["n_private"], preemptions=meta["preemptions"],
+        t_first=meta["t_first"], host_cross=host_cross,
+        n_cross=meta["n_cross"], host_state=host_state,
+        n_state=meta["n_state"])

@@ -10,8 +10,11 @@ the copy-on-write reserve, so its invariants are checked exhaustively here:
   ``free_pages() + sum(owned) == num_pages - RESERVED``;
 * a Hypothesis property suite over random interleavings of shared/unshared
   admission, decode writes (CoW forks / pristine preserves / in-place),
-  retirement and preemption swap cycles (swap-out to the host tier,
-  restore, terminal drop): pages are never leaked or double-freed, every
+  retirement, preemption swap cycles (swap-out to the host tier,
+  restore, terminal drop) and crash/recovery boundaries (every live slot
+  snapshotted to the host tier, the pool rebuilt from scratch and its
+  two-tier ledger re-seeded via ``adopt_swapped`` — the engine-checkpoint
+  restore montage): pages are never leaked or double-freed, every
   page's refcount equals the number of page-table references to it, the
   trie stays consistent, the fork reserve never exceeds the available pool
   (so a mandatory copy-on-write fork can never fail), and the two-tier
@@ -213,6 +216,25 @@ class _Model:
         if self.host:
             self.kv.swap_in(self.host.pop(), restored=restored)
 
+    def crash_restore(self):
+        """Crash into a *fresh* pool (the recovery path's allocator
+        montage): every live slot snapshots to the host tier exactly as
+        an engine checkpoint does (the per-slot swap record — private
+        suffix to the host ledger, shared/pristine pages through the
+        ordinary refcount paths), then the pool is rebuilt from scratch
+        with the same geometry and the carried host records re-seed its
+        two-tier ledger via ``adopt_swapped`` — so conservation holds
+        across the snapshot boundary from the first post-recovery op."""
+        for slot in sorted(self.live):
+            n = len(self.kv.private_blocks(slot))
+            self.kv.swap_out(slot, n)
+            self.host.append(n)
+        self.live.clear()
+        self.kv = make_kv(num_pages=self.kv.num_pages,
+                          capacity=self.capacity)
+        for n in self.host:
+            self.kv.adopt_swapped(n)
+
 
 def _walk(m: _Model, ops) -> None:
     """Drive a model through (op, slot, *params) tuples, auditing the
@@ -229,6 +251,8 @@ def _walk(m: _Model, ops) -> None:
             m.swap_out(slot)
         elif op == "swapback":
             m.swap_back(restored=params[0])
+        elif op == "crash":
+            m.crash_restore()
         else:
             m.retire(slot)
         m.kv.assert_conserved(host_pages=m.host_pages())
@@ -253,7 +277,7 @@ def test_sharing_allocator_fuzz():
     matching the refined criterion (the _Model re-derives it
     independently) and the two-tier ledger balanced after every op."""
     rng = np.random.default_rng(7)
-    ops_menu = ("admit", "write", "retire", "swap", "swapback")
+    ops_menu = ("admit", "write", "retire", "swap", "swapback", "crash")
     for _ in range(150):
         m = _Model(PagedKVCache.RESERVED + int(rng.integers(6, 21)),
                    capacity=int(rng.integers(2, 7)))
@@ -287,7 +311,8 @@ def test_sharing_allocator_property():
         ops = []
         for _ in range(data.draw(st.integers(5, 40))):
             op = data.draw(st.sampled_from(
-                ("admit", "write", "retire", "swap", "swapback")))
+                ("admit", "write", "retire", "swap", "swapback",
+                 "crash")))
             slot = data.draw(st.integers(0, m.capacity - 1))
             if op == "admit":
                 ops.append((op, slot,

@@ -1,0 +1,427 @@
+"""Crash-safe serving: journal WAL contracts + kill-and-restart recovery.
+
+The tentpole recovery contract (``serving/journal.py`` +
+``MultiTenantScheduler.save_checkpoint/recover``):
+
+* **WAL discipline** — every record fsync'd before the mutation it
+  describes; a torn *final* line is dropped silently (the mutation never
+  happened), mid-file corruption raises; the record schema is pinned by
+  ``tests/golden/journal_schema.json`` (regenerate with
+  REPRO_REGEN_GOLDEN=1 after an intentional change).
+* **token-exact recovery** — a journalled run SIGKILLed mid-round (or
+  mid-preemption, inside the host swap ``put``) restarts in a fresh
+  process, rebuilds live/swapped slots from the latest engine checkpoint,
+  re-queues journaled-never-recovered rids, and deterministically replays
+  rounds past the checkpoint: every recovered request finishes with
+  tokens bitwise identical to an uninterrupted run (greedy AND seeded
+  temperature sampling), on a meshless engine and across a 1×8 sharded
+  pool.  Retires that landed after the checkpoint are cross-checked
+  against their journal RETIRE records (the replay oracle).
+* **terminal-swap hygiene** — a swapped request that fails terminally
+  (restore retry budget against an idle engine) drops its host record
+  AND its ticket bookkeeping; ``drain()`` audits two-tier conservation
+  plus empty ticket maps, so a leak fails loudly.
+
+SIGKILL mid-JAX needs process isolation, and the mesh variant needs 8
+host devices before jax initialisation — so the kill-and-restart harness
+runs in subprocesses, like tests/test_mesh_serving.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import params as pp
+from repro.models.model import build_model
+from repro.serving import journal as jm
+from repro.serving.continuous import ContinuousBatchingEngine
+from repro.serving.engine import ServingEngine
+from repro.serving.multitenant import MultiTenantScheduler, Request
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "journal_schema.json")
+
+
+# ---------------------------------------------------------------------------
+# journal unit contracts (no engine)
+# ---------------------------------------------------------------------------
+def _writer(tmp_path):
+    return jm.JournalWriter(str(tmp_path / "j.jsonl"))
+
+
+def test_journal_append_enforces_schema(tmp_path):
+    w = _writer(tmp_path)
+    with pytest.raises(ValueError, match="unknown journal record kind"):
+        w.append("NOPE", rid=0)
+    with pytest.raises(ValueError, match="!= schema"):
+        w.append("ADMIT", rid=0)                       # missing fields
+    with pytest.raises(ValueError, match="!= schema"):
+        w.append("RETIRE", rid=0, tokens=[1], extra=2)  # widened
+    w.append("ADMIT", rid=0, slot=1, bucket=16, ring=16)
+    w.close()
+    assert len(jm.read_journal(w.path)) == 1
+
+
+def test_journal_torn_tail_dropped_midfile_raises(tmp_path):
+    w = _writer(tmp_path)
+    w.append("ADMIT", rid=0, slot=0, bucket=16, ring=16)
+    w.append("RETIRE", rid=0, tokens=[1, 2, 3])
+    w.close()
+    with open(w.path, "ab") as f:                 # crash mid-append: no \n
+        f.write(b'{"v": 1, "seq": 2, "kind": "RET')
+    recs = jm.read_journal(w.path)
+    assert [r["kind"] for r in recs] == ["ADMIT", "RETIRE"]
+    # the same damage anywhere BEFORE the tail is corruption, not a crash
+    with open(w.path, "rb") as f:
+        lines = f.read().splitlines()
+    with open(w.path, "wb") as f:
+        f.write(b"\n".join([lines[0][:10], lines[1]]) + b"\n")
+    with pytest.raises(ValueError, match="corrupt record"):
+        jm.read_journal(w.path)
+
+
+def test_journal_replay_folds_checkpoint_window(tmp_path):
+    w = _writer(tmp_path)
+    for rid in range(3):
+        w.append("SUBMIT", **jm.request_to_record(
+            rid, Request(f"t{rid}", np.asarray([1, 2, 3], np.int32), 8)))
+    w.append("ADMIT", rid=0, slot=0, bucket=16, ring=16)
+    w.append("ADMIT", rid=1, slot=1, bucket=16, ring=16)
+    w.append("ROUND_COMMIT", rnd=1, emitted={"0": 4, "1": 4})
+    w.append("CHECKPOINT", step=0, rnd=1)
+    w.append("ROUND_COMMIT", rnd=2, emitted={"0": 8, "1": 8})
+    w.append("RETIRE", rid=0, tokens=list(range(8)))
+    w.append("ROUND_COMMIT", rnd=3, emitted={"1": 10})
+    w.close()
+    st = jm.replay(jm.read_journal(w.path))
+    assert st.pending() == [1, 2]
+    assert st.terminal == {0: "RETIRE"}
+    assert st.retired_tokens[0] == list(range(8))
+    assert st.admitted == {0, 1}
+    assert st.last_checkpoint["step"] == 0
+    assert st.rounds_after_checkpoint == 2
+    # emitted deltas past the checkpoint: (8-4) + (10-4)
+    assert st.tokens_after_checkpoint == 10
+    assert st.next_rid == 3
+    assert st.last_round == 3
+
+
+def test_request_record_roundtrip_lossless():
+    req = Request("acme", np.asarray([5, 7, 11], np.int32), 6,
+                  temperature=0.9, top_k=12, seed=42, priority=0,
+                  deadline_s=3.5,
+                  extra_inputs={"mel": np.arange(6, dtype=np.float32)})
+    rec = jm.request_to_record(9, req)
+    assert rec["rid"] == 9 and rec["extras_hash"] != ""
+    json.dumps(rec)                               # journal-able as-is
+    back = jm.request_from_record(rec)
+    np.testing.assert_array_equal(back.prompt, req.prompt)
+    np.testing.assert_array_equal(back.extra_inputs["mel"],
+                                  req.extra_inputs["mel"])
+    assert (back.tenant, back.max_new_tokens, back.temperature, back.top_k,
+            back.seed, back.priority, back.deadline_s) == \
+        ("acme", 6, 0.9, 12, 42, 0, 3.5)
+    assert jm.extras_hash(back.extra_inputs) == rec["extras_hash"]
+    assert jm.extras_hash(None) == ""
+
+
+def test_golden_journal_schema():
+    """The on-disk record schema is a cross-process-generation contract:
+    widening/renaming a field must be an explicit golden update, never
+    silent drift.  Regenerate with REPRO_REGEN_GOLDEN=1."""
+    got = {"version": jm.JOURNAL_VERSION,
+           "records": {k: list(v)
+                       for k, v in sorted(jm.RECORD_FIELDS.items())}}
+    if os.environ.get("REPRO_REGEN_GOLDEN"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(got, f, indent=2, sort_keys=True)
+    with open(GOLDEN) as f:
+        want = json.load(f)
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# in-process: checkpoint/recover cycle + terminal-swap hygiene
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("internlm2-1.8b").reduced()
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    return ServingEngine(cfg, params)
+
+
+def _ceng(engine, **kw):
+    kw = dict(dict(capacity=2, page_size=8, num_pages=24, inner_steps=4,
+                   max_prompt_len=16), **kw)
+    return ContinuousBatchingEngine(engine, **kw)
+
+
+def test_checkpoint_recover_token_exact_in_process(engine, tmp_path):
+    """Abandon a journalled+checkpointed scheduler mid-flight (the
+    in-process stand-in for a crash: the on-disk pair is all recovery may
+    read), recover into a fresh engine/scheduler, and require every
+    request — greedy and seeded-sampling — to finish bitwise identical to
+    an uninterrupted run.  Pre-crash retires surface from the journal via
+    ``already_complete`` without re-decoding."""
+    rng = np.random.default_rng(0)
+    cfg = engine.cfg
+    prompts = [rng.integers(1, cfg.vocab_size, 8 + i).astype(np.int32)
+               for i in range(4)]
+
+    def mkreqs():
+        return [Request(f"r{i}", prompts[i].copy(), max_new_tokens=10 + 2 * i,
+                        seed=7 + i, temperature=0.8 if i % 2 else None)
+                for i in range(4)]
+
+    sa = MultiTenantScheduler(engine, mode="continuous",
+                              continuous_engine=_ceng(engine))
+    for r in mkreqs():
+        sa.submit(r)
+    base = {r.tenant: np.asarray(r.tokens) for r in sa.drain()
+            if r.outcome == "completed"}
+    assert len(base) == 4
+
+    jpath = str(tmp_path / "journal.jsonl")
+    cdir = str(tmp_path / "ckpt")
+    sb = MultiTenantScheduler(engine, mode="continuous",
+                              continuous_engine=_ceng(engine),
+                              journal=jpath, checkpoint_dir=cdir,
+                              checkpoint_every=2)
+    for r in mkreqs():
+        sb.submit(r)
+    for _ in range(6):                      # abandon mid-flight
+        if sb.pending():
+            sb.step()
+    assert sb.checkpoints_taken >= 1
+
+    cc = _ceng(engine)
+    sc = MultiTenantScheduler(engine, mode="continuous",
+                              continuous_engine=cc, journal=jpath,
+                              checkpoint_dir=cdir, checkpoint_every=2)
+    summary = sc.recover()
+    assert summary.checkpoint_step is not None
+    assert summary.restored_live + summary.restored_swapped \
+        + summary.requeued + len(summary.already_complete) >= 4
+    got = {r.tenant: np.asarray(r.tokens) for r in sc.drain()
+           if r.outcome == "completed"}
+    js = jm.replay(jm.read_journal(jpath))
+    for rid, toks in summary.already_complete.items():
+        got[js.submitted[rid]["tenant"]] = np.asarray(toks, np.int32)
+    assert set(got) == set(base)
+    for t in base:
+        np.testing.assert_array_equal(base[t], got[t])
+    # recovered pool passes the two-tier audit; RECOVER was journaled so a
+    # second crash during replay recovers too
+    cc.kv.assert_conserved(host_pages=cc.swap_store.pages_by_kind())
+    assert [r["kind"] for r in jm.read_journal(jpath)].count("RECOVER") == 1
+
+
+def test_failed_swapped_request_drops_store_and_tickets(engine, tmp_path):
+    """Regression (terminal-swap leak): a swapped-out request whose
+    restore exhausts the retry budget against an idle engine must fail
+    terminally, dropping its HostSwapStore record AND both ticket
+    bookkeeping maps — ``drain()`` now audits exactly that, so the leak
+    would hang the audit assert rather than silently skew accounting."""
+    rng = np.random.default_rng(1)
+    cfg = engine.cfg
+    ceng = _ceng(engine)
+    sched = MultiTenantScheduler(engine, mode="continuous",
+                                 continuous_engine=ceng, preemption=True,
+                                 admission_retry_limit=1)
+    for i in range(2):
+        sched.submit(Request(f"lo{i}", rng.integers(
+            1, cfg.vocab_size, 12).astype(np.int32),
+            max_new_tokens=40, priority=1))
+    sched.step()
+    sched.submit(Request("hi", rng.integers(1, cfg.vocab_size,
+                                            8).astype(np.int32),
+                         max_new_tokens=6, priority=0))
+    while ceng.preemptions == 0 and sched.pending():
+        sched.step()
+    assert len(ceng.swap_store) == 1
+    # from here the victim is unrestorable: every re-admission attempt
+    # fails, so the idle-engine retry budget is the only way out
+    ceng.try_restore = lambda ticket: False
+    out = sched.drain()
+    outcomes = sorted(r.outcome for r in out)
+    assert outcomes == ["completed", "completed", "failed"]
+    failed, = [r for r in out if r.outcome == "failed"]
+    assert failed.preemptions >= 1
+    assert len(ceng.swap_store) == 0              # host record dropped
+    assert sched._ticket_attempts == {} and sched._ticket_backoff == {}
+    ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages_by_kind())
+
+
+# ---------------------------------------------------------------------------
+# subprocess kill-and-restart harness (SIGKILL mid-round / mid-preemption)
+# ---------------------------------------------------------------------------
+def _run_child(script: str, *argv: str) -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["PYTHONPATH"] = (os.path.join(os.path.dirname(__file__), "..", "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    return subprocess.run([sys.executable, "-c", script, *argv],
+                          capture_output=True, text=True, env=env,
+                          timeout=600)
+
+
+CRASH_RECOVER_SCRIPT = textwrap.dedent("""
+    import dataclasses, json, os, sys
+    import numpy as np
+    import jax
+
+    phase, mode, root = sys.argv[1], sys.argv[2], sys.argv[3]
+
+    from repro.configs import get_config
+    from repro.distributed.fault import FaultPlane
+    from repro.models import params as pp
+    from repro.models.model import build_model
+    from repro.serving import journal as jm
+    from repro.serving.continuous import ContinuousBatchingEngine
+    from repro.serving.engine import ServingEngine
+    from repro.serving.multitenant import MultiTenantScheduler, Request
+
+    cfg = get_config("internlm2-1.8b").reduced()
+    sh = None
+    if mode == "mesh":
+        from repro.distributed.sharding import parse_mesh, serving_sharder
+        assert len(jax.devices()) == 8, jax.devices()
+        # reduced() clamps to 2 KV heads; re-widen so 8 ways divide
+        cfg = dataclasses.replace(cfg, num_heads=16, num_kv_heads=8)
+        sh = serving_sharder(parse_mesh("1x8"))
+    params, _ = pp.split(build_model(cfg).init(jax.random.PRNGKey(0)))
+    engine = ServingEngine(cfg, params, sh=sh)
+    # crash injection: mid-round (exact dispatched round) or mid-swap
+    # (inside HostSwapStore.put, the mid-preemption window)
+    fp = None
+    if phase == "crash":
+        fp = (FaultPlane(crash_at_swap=1) if mode == "swap"
+              else FaultPlane(crash_at_round=9))
+    ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
+                                    num_pages=24, inner_steps=4,
+                                    max_prompt_len=16, fault_plane=fp)
+    sched = MultiTenantScheduler(
+        engine, mode="continuous", continuous_engine=ceng, preemption=True,
+        journal=os.path.join(root, "journal.jsonl"),
+        checkpoint_dir=os.path.join(root, "ckpt"), checkpoint_every=2)
+
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(1, cfg.vocab_size, 8 + 2 * i).astype(np.int32)
+               for i in range(4)]
+
+    def mkreq(i, prio=1, steps=None):
+        return Request("t%d" % i, prompts[i].copy(),
+                       max_new_tokens=24 + 2 * i if steps is None else steps,
+                       seed=11 + i, priority=prio,
+                       temperature=0.7 if i % 2 else None)
+
+    # swap mode: two long rows fill the slot table, a tier-0 arrival
+    # forces a preemption whose swap-out put() is the crash site.  round
+    # modes: rows 0/1 decode through the SIGKILL at dispatched round 9
+    # (checkpointed mid-flight), row 2 waits in the checkpointed queue,
+    # and row 3 is submitted only after the second checkpoint (the
+    # crash lands before a third) — its
+    # SUBMIT is on disk but in no snapshot, so recovery must re-queue it
+    # from the journal alone (the "never lost" half of the WAL contract)
+    reqs = ([mkreq(0), mkreq(1), mkreq(2, prio=0, steps=8)]
+            if mode == "swap" else [mkreq(i) for i in range(4)])
+
+    if phase == "crash":
+        if mode == "swap":
+            sched.submit(reqs[0]); sched.submit(reqs[1])
+            sched.step()
+            sched.submit(reqs[2])
+            sched.drain()
+        else:
+            for r in reqs[:3]:
+                sched.submit(r)
+            late = False
+            while sched.pending() or not late:
+                if not late and sched.checkpoints_taken >= 2:
+                    sched.submit(reqs[3])
+                    late = True
+                sched.step()
+        sys.exit(3)          # sentinel: the injected crash never fired
+
+    summary = sched.recover()
+    out = sched.drain()
+    js = jm.replay(jm.read_journal(os.path.join(root, "journal.jsonl")))
+    got = {r.tenant: np.asarray(r.tokens) for r in out
+           if r.outcome == "completed"}
+    for rid, toks in summary.already_complete.items():
+        got[js.submitted[rid]["tenant"]] = np.asarray(toks, np.int32)
+    assert set(got) == {r.tenant for r in reqs}, sorted(got)
+
+    # bitwise vs an uninterrupted run of each request alone on the same
+    # engine (same jit caches, no contention -> no preemption)
+    for r in reqs:
+        clone = Request(r.tenant, r.prompt.copy(), r.max_new_tokens,
+                        temperature=r.temperature, seed=r.seed)
+        (_, want), = ceng.run_all([clone])
+        np.testing.assert_array_equal(np.asarray(want), got[r.tenant])
+
+    # post-checkpoint retires were re-decoded: their journal RETIRE
+    # records are the replay oracle
+    for rid, toks in summary.replay_check.items():
+        np.testing.assert_array_equal(
+            np.asarray(toks, np.int32), got[js.submitted[rid]["tenant"]])
+
+    ceng.kv.assert_conserved(host_pages=ceng.swap_store.pages_by_kind())
+    assert sched._ticket_attempts == {} and sched._ticket_backoff == {}
+    print("RECOVERY_EXACT_OK " + json.dumps(dict(
+        step=summary.checkpoint_step, live=summary.restored_live,
+        swapped=summary.restored_swapped, requeued=summary.requeued,
+        rounds=summary.rounds_replayed,
+        preserved=summary.tokens_preserved)))
+""")
+
+
+def _crash_then_recover(mode: str) -> dict:
+    root = tempfile.mkdtemp(prefix=f"recovery_{mode}_")
+    crash = _run_child(CRASH_RECOVER_SCRIPT, "crash", mode, root)
+    assert crash.returncode == -9, (
+        f"expected SIGKILL, got rc={crash.returncode}\n"
+        + crash.stderr[-3000:])
+    assert os.path.exists(os.path.join(root, "journal.jsonl"))
+    rec = _run_child(CRASH_RECOVER_SCRIPT, "recover", mode, root)
+    assert rec.returncode == 0, rec.stderr[-3000:]
+    line, = [ln for ln in rec.stdout.splitlines()
+             if ln.startswith("RECOVERY_EXACT_OK")]
+    return json.loads(line.split(" ", 1)[1])
+
+
+def test_sigkill_mid_round_recovery_subprocess():
+    """SIGKILL at an exact dispatched round; restart recovers every
+    request token-exactly: checkpointed rows replay deterministically
+    past the snapshot, never-admitted rids are re-queued (not lost)."""
+    s = _crash_then_recover("round")
+    assert s["step"] is not None
+    assert s["live"] + s["swapped"] >= 1
+    assert s["requeued"] >= 1                 # rows 2/3 never held a slot
+
+
+def test_sigkill_mid_preemption_recovery_subprocess():
+    """SIGKILL *inside* the host swap-out put() — the widest WAL window
+    (preemption mutation in flight, PREEMPT record not yet durable).  The
+    journal + last checkpoint still reconstruct a consistent state and
+    every request finishes bitwise-identical."""
+    s = _crash_then_recover("swap")
+    assert s["requeued"] + s["live"] + s["swapped"] >= 1
+
+
+def test_sigkill_recovery_mesh_1x8_subprocess():
+    """The same mid-round kill-and-restart on a 1×8 mesh-sharded pool:
+    checkpoint payloads round-trip through host numpy and restore through
+    the per-slice staging lanes, token-exact."""
+    s = _crash_then_recover("mesh")
+    assert s["step"] is not None
+    assert s["requeued"] >= 1
