@@ -317,7 +317,7 @@ if phase == "crash":
             "r%d" % i, rng.integers(1, cfg.vocab_size, 8 + i).astype(np.int32),
             max_new_tokens=24 + 2 * i, seed=7 + i,
             temperature=0.8 if i % 2 else None))
-    sched.drain()                      # SIGKILLed at round 5
+    sched.drain()                      # SIGKILLed at dispatched round 12
     sys.exit(3)                        # must never get here
 import time
 t0 = time.perf_counter()

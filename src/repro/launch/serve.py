@@ -41,9 +41,11 @@ block identity, and a block is shareable only when the *whole* prompt
 content feeding its window is identical.
 
 
-Crash safety: ``--journal-dir DIR`` arms the durable write-ahead request
-journal (``DIR/journal.jsonl``, fsync'd per record — every submission is
-on disk *before* it is queued) and engine checkpoints
+Crash safety (``--mode continuous`` only — the other schedules do not
+journal round commits or retirements, so pairing them with
+``--journal-dir`` is rejected): ``--journal-dir DIR`` arms the durable
+write-ahead request journal (``DIR/journal.jsonl``, fsync'd per record —
+every submission is on disk *before* it is queued) and engine checkpoints
 (``DIR/checkpoints/engine_<N>/``); ``--checkpoint-every K`` snapshots the
 whole serving state — every live slot's per-kind host record, the host
 swap tier, queue/priority state and the prefix-trie keys — every K
@@ -266,6 +268,11 @@ def main(argv=None) -> int:
                 "always": "always"}[args.preserve_pristine]
     crash_kw = {}
     if args.journal_dir:
+        if mode != "continuous":
+            # only the continuous collect loop journals ROUND_COMMIT/
+            # RETIRE; a journal written under another mode would replay
+            # every completed request as pending
+            ap.error("--journal-dir requires --mode continuous")
         import os
         crash_kw = dict(
             journal=os.path.join(args.journal_dir, "journal.jsonl"),

@@ -48,7 +48,11 @@ contract, ``tests/golden/journal_schema.json`` the pin):
 Torn tails: a crash can truncate the final record mid-line.  The reader
 drops an unparseable *last* line silently (the WAL discipline means the
 corresponding mutation never happened) but raises on corruption anywhere
-else — silent mid-file damage is not a state we recover through.
+else — silent mid-file damage is not a state we recover through.  The
+writer enforces the same invariant on reopen: :class:`JournalWriter`
+truncates a torn tail before its first append (so the next generation's
+records never concatenate onto a partial line) and seeds its sequence
+counter past the surviving records.
 """
 from __future__ import annotations
 
@@ -185,11 +189,38 @@ class JournalWriter:
         self.fsync = fsync
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
+        self._seq = self._repair_and_seed(path)
         self._f = open(path, "ab")
-        self._seq = 0
         self.appends = 0
         self.bytes_written = 0
         self.tel = get_telemetry(telemetry)
+
+    @staticmethod
+    def _repair_and_seed(path: str) -> int:
+        """Reopen discipline. A prior generation SIGKILLed mid-append
+        leaves a torn final line (no trailing newline); truncate it away
+        *before* this generation appends, or its first record would be
+        concatenated onto the partial one — turning a recoverable torn
+        tail into the mid-file corruption :func:`read_journal` refuses.
+        Dropping the partial record is safe by the WAL ordering: its
+        mutation never happened.  Returns the next sequence number,
+        seeded past the surviving tail so seqs stay monotone across
+        process generations instead of restarting at 0."""
+        if not os.path.exists(path) or os.path.getsize(path) == 0:
+            return 0
+        with open(path, "rb") as f:
+            raw = f.read()
+        if not raw.endswith(b"\n"):
+            keep = raw.rfind(b"\n") + 1        # 0 when no newline at all
+            os.truncate(path, keep)
+            raw = raw[:keep]
+        lines = raw.split(b"\n")[:-1]
+        if not lines:
+            return 0
+        try:
+            return int(json.loads(lines[-1])["seq"]) + 1
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            return len(lines)   # mid-file damage: read_journal will raise
 
     def append(self, kind: str, **fields: Any) -> int:
         """Durably append one record; returns its sequence number."""
@@ -278,7 +309,10 @@ def replay(records: List[Dict[str, Any]]) -> JournalState:
     """Fold the journal into a :class:`JournalState`.  Records from
     *before* the latest RECOVER marker are still folded — rids are stable
     across process generations — but checkpoint bookkeeping restarts at
-    each CHECKPOINT record."""
+    each CHECKPOINT *and* each RECOVER record: a recovery re-commits the
+    replayed rounds under fresh rnd numbers, so counting generation N's
+    post-checkpoint rounds alongside generation N+1's re-commits would
+    double-count the same logical rounds after a second crash."""
     st = JournalState(submitted={}, terminal={}, retired_tokens={},
                       emitted={}, admitted=set(), preemptions={},
                       last_checkpoint=None, rounds_after_checkpoint=0,
@@ -308,6 +342,13 @@ def replay(records: List[Dict[str, Any]]) -> JournalState:
             st.last_checkpoint = rec
             st.rounds_after_checkpoint = 0
             emitted_at_ckpt = dict(st.emitted)
+        elif kind == "RECOVER":
+            # the new generation replays from the checkpoint and
+            # re-commits those rounds; only its own commits count as
+            # replay work from here on (the emitted-token baseline stays
+            # at the checkpoint — counts are cumulative, so the re-
+            # committed rounds overwrite rather than add)
+            st.rounds_after_checkpoint = 0
     st.tokens_after_checkpoint = sum(
         n - emitted_at_ckpt.get(rid, 0) for rid, n in st.emitted.items()
         if n > emitted_at_ckpt.get(rid, 0))

@@ -227,6 +227,15 @@ class MultiTenantScheduler:
         self.mode = mode or ("overlapped" if overlapped else "blocking")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}")
+        if self.mode != "continuous" and (journal is not None
+                                          or checkpoint_dir is not None):
+            # only the continuous collect loop emits ROUND_COMMIT/RETIRE,
+            # so a journal written under another mode would have SUBMITs
+            # with no terminal records — recover() would then re-decode
+            # every already-completed request as pending
+            raise ValueError(
+                "journal/checkpoint_dir require mode='continuous' "
+                f"(got mode={self.mode!r})")
         self.overlapped = self.mode == "overlapped"
         self.stage_depth = max(int(stage_depth), 1)
         self.queues: Dict[str, Deque[Request]] = collections.defaultdict(
@@ -303,7 +312,8 @@ class MultiTenantScheduler:
         # write-ahead journal (path or JournalWriter) + periodic engine
         # checkpoints every `checkpoint_every` committed rounds; recover()
         # rebuilds a fresh scheduler/engine pair from the (journal,
-        # latest-checkpoint) pair after a crash
+        # latest-checkpoint) pair after a crash (mode='continuous' only —
+        # validated up top, before any state is built)
         self.journal: Optional[JournalWriter] = None
         if journal is not None:
             self.journal = (journal if isinstance(journal, JournalWriter)
@@ -382,10 +392,15 @@ class MultiTenantScheduler:
     # ------------------------------------------------------------------
     # crash-safety: engine checkpoint + recovery (continuous mode)
     # ------------------------------------------------------------------
-    def _checkpoint_due(self) -> bool:
+    def _checkpoint_due(self, pending: int = 0) -> bool:
+        """`pending` counts rounds that are collected-but-not-yet-
+        journalled at the call site (the dispatch-suppression check runs
+        before the current round's ROUND_COMMIT lands) — without it the
+        quiesce bubble, and hence the checkpoint, would trigger one round
+        late: every K+1 committed rounds instead of every K."""
         return (self.checkpoint_dir is not None
                 and self.checkpoint_every > 0
-                and self._committed_rounds - self._last_ckpt_round
+                and self._committed_rounds + pending - self._last_ckpt_round
                 >= self.checkpoint_every)
 
     def save_checkpoint(self) -> int:
@@ -1286,11 +1301,14 @@ class MultiTenantScheduler:
         # round, wasting a device round and skewing the occupancy counters
         # a due checkpoint suppresses the pipelined dispatch: the next step
         # then starts with a quiesced engine and snapshots before round
-        # k+1 — one pipeline bubble per checkpoint interval
+        # k+1 — one pipeline bubble per checkpoint interval.  pending=1
+        # counts round k, whose ROUND_COMMIT lands below at
+        # _journal_round(res) — this step always commits it
         live = eng.live_after(0 if res is not None else eng.inner_steps)
         self._cont_inflight = (self._try_dispatch_round(asm0)
                                if (admitted or live)
-                               and not self._checkpoint_due() else None)
+                               and not self._checkpoint_due(pending=1)
+                               else None)
         if res is None:
             res = eng.collect(cur.handle)
         self._journal_round(res)

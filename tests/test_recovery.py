@@ -87,6 +87,53 @@ def test_journal_torn_tail_dropped_midfile_raises(tmp_path):
         jm.read_journal(w.path)
 
 
+def test_journal_reopen_repairs_torn_tail_and_continues_seq(tmp_path):
+    """Regression (crash mid-append, then reopen): generation 2 must
+    truncate generation 1's torn tail before its first append, or the new
+    record concatenates onto the partial line and every future
+    read_journal raises mid-file corruption — breaking the 'a second
+    crash during replay recovers too' contract.  The reopened writer also
+    seeds its seq past the surviving records instead of restarting at 0."""
+    w = _writer(tmp_path)
+    w.append("ADMIT", rid=0, slot=0, bucket=16, ring=16)
+    w.append("RETIRE", rid=0, tokens=[1, 2, 3])
+    w.close()
+    with open(w.path, "ab") as f:                 # crash mid-append: no \n
+        f.write(b'{"v": 1, "seq": 2, "kind": "RET')
+    w2 = jm.JournalWriter(w.path)                 # generation 2 reopens
+    w2.append("RECOVER", step=-1, restored_live=0, restored_swapped=0,
+              requeued=1, rounds_replayed=0)
+    w2.append("ROUND_COMMIT", rnd=1, emitted={"1": 2})
+    w2.close()
+    recs = jm.read_journal(w.path)                # parseable end to end
+    assert [r["kind"] for r in recs] == \
+        ["ADMIT", "RETIRE", "RECOVER", "ROUND_COMMIT"]
+    assert [r["seq"] for r in recs] == [0, 1, 2, 3]   # monotone across gens
+    # a second reopen of the now-clean file continues the seq again
+    w3 = jm.JournalWriter(w.path)
+    w3.append("CHECKPOINT", step=0, rnd=1)
+    w3.close()
+    assert jm.read_journal(w.path)[-1]["seq"] == 4
+    # reopening an empty path stays a no-op create
+    w4 = jm.JournalWriter(str(tmp_path / "fresh.jsonl"))
+    assert w4._seq == 0
+    w4.close()
+
+
+def test_journal_rejected_outside_continuous_mode(tmp_path):
+    """Only the continuous collect loop emits ROUND_COMMIT/RETIRE; a
+    journal armed under the slot-based schedules would replay every
+    completed request as pending, so the constructor refuses it."""
+    for mode in ("overlapped", "blocking"):
+        with pytest.raises(ValueError, match="continuous"):
+            MultiTenantScheduler(None, mode=mode,
+                                 journal=str(tmp_path / "j.jsonl"))
+        with pytest.raises(ValueError, match="continuous"):
+            MultiTenantScheduler(None, mode=mode,
+                                 checkpoint_dir=str(tmp_path / "ckpt"))
+    assert not os.path.exists(tmp_path / "j.jsonl")   # rejected pre-create
+
+
 def test_journal_replay_folds_checkpoint_window(tmp_path):
     w = _writer(tmp_path)
     for rid in range(3):
@@ -111,6 +158,32 @@ def test_journal_replay_folds_checkpoint_window(tmp_path):
     assert st.tokens_after_checkpoint == 10
     assert st.next_rid == 3
     assert st.last_round == 3
+
+
+def test_journal_replay_resets_round_bookkeeping_at_recover(tmp_path):
+    """Regression (double-counted replay): a recovery re-commits the
+    rounds past the checkpoint under fresh rnd numbers, so after a
+    *second* crash the rounds-after-checkpoint count must restart at the
+    RECOVER marker — otherwise generation 1's rounds and generation 2's
+    re-commits of the same logical rounds are both counted."""
+    w = _writer(tmp_path)
+    w.append("SUBMIT", **jm.request_to_record(
+        0, Request("t0", np.asarray([1, 2, 3], np.int32), 16)))
+    w.append("CHECKPOINT", step=0, rnd=1)
+    w.append("ROUND_COMMIT", rnd=2, emitted={"0": 4})    # gen 1, then crash
+    w.append("ROUND_COMMIT", rnd=3, emitted={"0": 8})
+    w.append("RECOVER", step=0, restored_live=1, restored_swapped=0,
+             requeued=0, rounds_replayed=2)
+    w.append("ROUND_COMMIT", rnd=2, emitted={"0": 4})    # gen 2 re-commits
+    w.append("ROUND_COMMIT", rnd=3, emitted={"0": 8})
+    w.append("ROUND_COMMIT", rnd=4, emitted={"0": 12})   # ...and goes on
+    w.close()
+    st = jm.replay(jm.read_journal(w.path))
+    assert st.rounds_after_checkpoint == 3               # not 5
+    # token deltas stay cumulative-vs-checkpoint: last write wins, the
+    # re-committed counts overwrite rather than add
+    assert st.tokens_after_checkpoint == 12
+    assert st.last_round == 4
 
 
 def test_request_record_roundtrip_lossless():
@@ -201,6 +274,13 @@ def test_checkpoint_recover_token_exact_in_process(engine, tmp_path):
         if sb.pending():
             sb.step()
     assert sb.checkpoints_taken >= 1
+    # checkpoint cadence: every K=2 committed rounds exactly, not K+1
+    # (the dispatch-suppression test counts the round it is about to
+    # commit, so the quiesce bubble lands on time)
+    cks = [r["rnd"] for r in jm.read_journal(jpath)
+           if r["kind"] == "CHECKPOINT"]
+    assert cks[0] == 2
+    assert all(b - a == 2 for a, b in zip(cks, cks[1:]))
 
     cc = _ceng(engine)
     sc = MultiTenantScheduler(engine, mode="continuous",
@@ -305,14 +385,14 @@ CRASH_RECOVER_SCRIPT = textwrap.dedent("""
     fp = None
     if phase == "crash":
         fp = (FaultPlane(crash_at_swap=1) if mode == "swap"
-              else FaultPlane(crash_at_round=9))
+              else FaultPlane(crash_at_round=6))
     ceng = ContinuousBatchingEngine(engine, capacity=2, page_size=8,
                                     num_pages=24, inner_steps=4,
                                     max_prompt_len=16, fault_plane=fp)
     sched = MultiTenantScheduler(
         engine, mode="continuous", continuous_engine=ceng, preemption=True,
         journal=os.path.join(root, "journal.jsonl"),
-        checkpoint_dir=os.path.join(root, "ckpt"), checkpoint_every=2)
+        checkpoint_dir=os.path.join(root, "ckpt"), checkpoint_every=3)
 
     rng = np.random.default_rng(3)
     prompts = [rng.integers(1, cfg.vocab_size, 8 + 2 * i).astype(np.int32)
@@ -326,12 +406,12 @@ CRASH_RECOVER_SCRIPT = textwrap.dedent("""
 
     # swap mode: two long rows fill the slot table, a tier-0 arrival
     # forces a preemption whose swap-out put() is the crash site.  round
-    # modes: rows 0/1 decode through the SIGKILL at dispatched round 9
-    # (checkpointed mid-flight), row 2 waits in the checkpointed queue,
-    # and row 3 is submitted only after the second checkpoint (the
-    # crash lands before a third) — its
-    # SUBMIT is on disk but in no snapshot, so recovery must re-queue it
-    # from the journal alone (the "never lost" half of the WAL contract)
+    # modes: rows 0/1 decode through the SIGKILL at dispatched round 6
+    # (checkpointed mid-flight at round 3, the next checkpoint due at 6
+    # never lands), row 2 waits in the checkpointed queue, and row 3 is
+    # submitted only after the first checkpoint — its SUBMIT is on disk
+    # but in no snapshot, so recovery must re-queue it from the journal
+    # alone (the "never lost" half of the WAL contract)
     reqs = ([mkreq(0), mkreq(1), mkreq(2, prio=0, steps=8)]
             if mode == "swap" else [mkreq(i) for i in range(4)])
 
@@ -346,7 +426,7 @@ CRASH_RECOVER_SCRIPT = textwrap.dedent("""
                 sched.submit(r)
             late = False
             while sched.pending() or not late:
-                if not late and sched.checkpoints_taken >= 2:
+                if not late and sched.checkpoints_taken >= 1:
                     sched.submit(reqs[3])
                     late = True
                 sched.step()
